@@ -1,0 +1,224 @@
+"""Benchmark harness — one entry per paper table/figure + TPU adaptation.
+
+Run:  PYTHONPATH=src python -m benchmarks.run
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's
+headline metric).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controller as ctl
+from repro.core import predictor as pred_mod
+from repro.core import voltage as volt
+from repro.core import workload as wl
+from repro.core.accelerators import ACCELERATORS, PAPER_TABLE_II
+
+
+def _timeit(fn, n=5):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _trace(n=1024, seed=0):
+    return wl.generate_trace(wl.WorkloadConfig(n_steps=n, seed=seed))
+
+
+def bench_table2():
+    """Paper Table II: power reduction per accelerator × technique."""
+    trace = _trace()
+    rows = []
+    gains = {}
+    for name, acc in ACCELERATORS.items():
+        plat = ctl.fpga_platform(acc)
+        t0 = time.perf_counter()
+        res = ctl.compare_all(plat, trace)
+        dt = (time.perf_counter() - t0) / len(res) / len(trace) * 1e6
+        for tech, s in res.items():
+            gains.setdefault(tech, []).append(s.power_gain)
+            paper = PAPER_TABLE_II.get(tech, {}).get(name)
+            derived = (f"gain={s.power_gain:.2f}x"
+                       + (f";paper={paper:.1f}x" if paper else ""))
+            rows.append((f"table2/{name}/{tech}", dt, derived))
+    for tech in ("proposed", "core_only", "bram_only"):
+        avg = float(np.mean(gains[tech]))
+        rows.append((f"table2/average/{tech}", 0.0,
+                     f"gain={avg:.2f}x;paper="
+                     f"{PAPER_TABLE_II[tech]['average']}x"))
+    return rows
+
+
+def bench_fig4_workload_sweep():
+    """Fig. 4: technique efficiency vs workload level (α=0.2, β=0.4)."""
+    plat = ctl.analytic_platform(alpha=0.2, beta=0.4)
+    rows = []
+    for load in (0.1, 0.3, 0.5, 0.7, 0.9):
+        trace = np.full(256, load)
+        for tech in ("proposed", "core_only", "bram_only", "power_gating"):
+            s = ctl.run_technique(plat, trace, tech, n_nodes=64)
+            rows.append((f"fig4/load{load:.1f}/{tech}", 0.0,
+                         f"gain={s.power_gain:.2f}x"))
+    return rows
+
+
+def bench_fig5_alpha_sweep():
+    """Fig. 5: sensitivity to the critical path's BRAM share α (50 % load)."""
+    rows = []
+    trace = np.full(256, 0.5)
+    for alpha in (0.0, 0.1, 0.2, 0.4, 0.8):
+        plat = ctl.analytic_platform(alpha=alpha, beta=0.4)
+        for tech in ("proposed", "core_only", "bram_only"):
+            s = ctl.run_technique(plat, trace, tech)
+            rows.append((f"fig5/alpha{alpha:.1f}/{tech}", 0.0,
+                         f"gain={s.power_gain:.2f}x"))
+    return rows
+
+
+def bench_fig6_beta_sweep():
+    """Fig. 6: sensitivity to the BRAM power share β (50 % load)."""
+    rows = []
+    trace = np.full(256, 0.5)
+    for beta in (0.1, 0.25, 0.5, 1.0, 2.0):
+        plat = ctl.analytic_platform(alpha=0.2, beta=beta)
+        for tech in ("proposed", "core_only", "bram_only"):
+            s = ctl.run_technique(plat, trace, tech)
+            rows.append((f"fig6/beta{beta:.2f}/{tech}", 0.0,
+                         f"gain={s.power_gain:.2f}x"))
+    return rows
+
+
+def bench_fig10_trace():
+    """Fig. 10/11: Tabla under the bursty trace — power + voltages."""
+    plat = ctl.fpga_platform(ACCELERATORS["tabla"])
+    trace = _trace()
+    cfg = ctl.ControllerConfig(technique="proposed")
+    t0 = time.perf_counter()
+    res = ctl.simulate(plat, cfg, trace)
+    us = (time.perf_counter() - t0) / len(trace) * 1e6
+    s = ctl.summarize(plat, cfg, trace, res)
+    vc = np.asarray(res.v_core)
+    vb = np.asarray(res.v_bram)
+    derived = (f"gain={s.power_gain:.2f}x"
+               f";vcore=[{vc.min():.2f},{vc.max():.2f}]"
+               f";vbram=[{vb.min():.2f},{vb.max():.2f}]"
+               f";mispred={s.misprediction_rate:.3f}"
+               f";qos_viol={s.qos_violation_rate:.3f}")
+    return [("fig10/tabla/proposed_trace", us, derived)]
+
+
+def bench_fig12_per_accelerator_traces():
+    """Fig. 12: proposed-technique efficiency across all five accelerators."""
+    trace = _trace()
+    rows = []
+    for name, acc in ACCELERATORS.items():
+        plat = ctl.fpga_platform(acc)
+        res = ctl.simulate(plat, ctl.ControllerConfig(), trace)
+        s = ctl.summarize(plat, ctl.ControllerConfig(), trace, res)
+        vb = np.asarray(res.v_bram)
+        rows.append((f"fig12/{name}", 0.0,
+                     f"gain={s.power_gain:.2f}x;min_vbram={vb.min():.2f}"))
+    return rows
+
+
+def bench_predictor():
+    """§IV-A predictor: accuracy and runtime cost of the control path."""
+    trace = _trace(2048)
+    cfg = pred_mod.PredictorConfig(n_bins=25, warmup_steps=32)
+    state = pred_mod.init_state(cfg)
+    import jax
+    predict = jax.jit(lambda s: pred_mod.predict(cfg, s))
+    observe = jax.jit(lambda s, a, p: pred_mod.observe(cfg, s, a, p))
+    hits = off_by_one = 0
+    t0 = time.perf_counter()
+    for w in trace:
+        p = predict(state)
+        a = pred_mod.workload_to_bin(jnp.asarray(float(w)), cfg.n_bins)
+        hits += int(p == a)
+        off_by_one += int(abs(int(p) - int(a)) <= 1)
+        state = observe(state, a, p)
+    us = (time.perf_counter() - t0) / len(trace) * 1e6
+    return [("predictor/markov_25bins", us,
+             f"exact={hits/len(trace):.3f}"
+             f";within1={off_by_one/len(trace):.3f}")]
+
+
+def bench_voltage_optimizer():
+    """Runtime cost of the §V voltage selection (table build + lookup)."""
+    plat = ctl.fpga_platform(ACCELERATORS["tabla"])
+    grids = volt.VoltageGrids.default()
+    point_us = _timeit(lambda: volt.optimize_point(
+        plat.delay_fn, plat.power_fn, jnp.asarray(0.5), grids
+    ).power.block_until_ready())
+    levels = volt.bin_frequency_levels(25, 0.05)
+    table_us = _timeit(lambda: volt.build_operating_table(
+        plat.delay_fn, plat.power_fn, levels, grids).power
+        .block_until_ready(), n=3)
+    table = volt.build_operating_table(plat.delay_fn, plat.power_fn, levels,
+                                       grids)
+    lookup_us = _timeit(lambda: table.lookup(jnp.asarray(0.37))
+                        .power.block_until_ready())
+    return [("voltage_opt/grid_point", point_us, "13x19_grid"),
+            ("voltage_opt/table_build_25bins", table_us, "synthesis_time"),
+            ("voltage_opt/runtime_lookup", lookup_us, "runtime_path")]
+
+
+def bench_tpu_serving():
+    """TPU adaptation: controller on *measured* roofline terms per arch."""
+    path = os.path.join(os.path.dirname(__file__), "dryrun_results.jsonl")
+    rows = []
+    if not os.path.exists(path):
+        return [("tpu_serving/skipped", 0.0, "no dryrun_results.jsonl")]
+    cells = [json.loads(l) for l in open(path)]
+    trace = _trace(512, seed=3)
+    from repro.serving.autoscale import RooflineTerms, compare_techniques
+    seen = set()
+    for r in cells:
+        if (r["status"] != "ok" or r["mesh"] != "16x16"
+                or r["shape"] not in ("decode_32k", "train_4k")):
+            continue
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        rf = r["roofline"]
+        terms = RooflineTerms(rf["t_compute_s"], rf["t_memory_s"],
+                              rf["t_collective_s"])
+        out = compare_techniques(terms, trace)
+        g = {k: v.power_gain for k, v in out.items()}
+        rows.append((f"tpu_serving/{r['arch']}/{r['shape']}", 0.0,
+                     f"prop={g['proposed']:.2f}x;core={g['core_only']:.2f}x"
+                     f";hbm={g['bram_only']:.2f}x"
+                     f";pg={g['power_gating']:.2f}x"
+                     f";alpha_tpu={terms.alpha_tpu:.2f}"))
+    return rows
+
+
+BENCHES = [bench_table2, bench_fig4_workload_sweep, bench_fig5_alpha_sweep,
+           bench_fig6_beta_sweep, bench_fig10_trace,
+           bench_fig12_per_accelerator_traces, bench_predictor,
+           bench_voltage_optimizer, bench_tpu_serving]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{bench.__name__},nan,ERROR:{type(e).__name__}:{e}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

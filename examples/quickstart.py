@@ -1,0 +1,16 @@
+"""Quickstart: train a reduced llama3.2-style model for a few hundred
+steps on CPU and watch the loss drop.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "llama3.2-1b", "--steps", "200",
+            "--batch", "8", "--seq", "64", "--lr", "3e-3",
+            "--log-every", "20"]
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,52 @@
+"""Calibration harness: reproduce paper Table II and report deltas.
+
+Run:  PYTHONPATH=src python scripts/calibrate_table2.py
+"""
+import sys
+
+import numpy as np
+
+from repro.core import accelerators as acc_mod
+from repro.core import controller as ctl
+from repro.core import workload as wl
+
+
+def main():
+    cfg = wl.WorkloadConfig(n_steps=2048, mean_load=0.40, lam=1000.0,
+                            hurst=0.76, idc=500.0, seed=0)
+    trace = wl.generate_trace(cfg)
+    print(f"trace: mean={trace.mean():.3f} std={trace.std():.3f} "
+          f"min={trace.min():.3f} max={trace.max():.3f}")
+
+    techniques = ("proposed", "core_only", "bram_only", "power_gating",
+                  "freq_only")
+    rows = {}
+    for name, acc in acc_mod.ACCELERATORS.items():
+        plat = ctl.fpga_platform(acc)
+        pm = acc.power_model()
+        res = {}
+        for t in techniques:
+            s = ctl.run_technique(plat, trace, t)
+            res[t] = s
+        rows[name] = res
+        print(f"\n{name}: device={acc.device().name} beta={pm.beta():.3f} "
+              f"nominal={res['proposed'].nominal_power_w:.1f}W")
+        for t in techniques:
+            s = res[t]
+            paper = acc_mod.PAPER_TABLE_II.get(
+                {"proposed": "proposed", "core_only": "core_only",
+                 "bram_only": "bram_only"}.get(t, ""), {}).get(name)
+            ref = f" (paper {paper:.1f}x)" if paper else ""
+            print(f"  {t:14s} gain={s.power_gain:5.2f}x{ref} "
+                  f"qos_viol={s.qos_violation_rate:.3f} "
+                  f"served={s.served_fraction:.3f} "
+                  f"mispred={s.misprediction_rate:.3f}")
+
+    for t in ("proposed", "core_only", "bram_only"):
+        avg = np.mean([rows[n][t].power_gain for n in rows])
+        paper_avg = acc_mod.PAPER_TABLE_II[t]["average"]
+        print(f"\nAVG {t}: {avg:.2f}x (paper {paper_avg:.2f}x)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,225 @@
+"""Fit the characterization-library constants to paper Table II.
+
+The paper's Figs. 1-3 are not published numerically; the physics *forms*
+(alpha-power delay, CV^2f dynamic power, exponential leakage) are fixed and
+this script tunes the per-resource constants so the end-to-end power gains
+match Table II.  Pure-numpy twin of the jnp formulas for speed.
+
+Run:  PYTHONPATH=src python scripts/fit_library.py
+Then transplant the printed constants into characterization.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import accelerators as acc_mod
+from repro.core import characterization as char
+from repro.core import controller as ctl
+from repro.core import predictor as pred_mod
+from repro.core import workload as wl
+
+V_CORE_NOM, V_BRAM_NOM, V_CRASH, V_STEP = 0.80, 0.95, 0.50, 0.025
+
+# ---------------------------------------------------------------------- #
+# numpy formulas (must mirror characterization.ResourceChar)
+# ---------------------------------------------------------------------- #
+
+def delay_factor(v, v0, vth, a):
+    return (v / np.maximum(v - vth, 1e-6) ** a) / (v0 / (v0 - vth) ** a)
+
+
+def static_power(v, v0, p0, kappa):
+    return p0 * (v / v0) * np.exp(kappa * (v - v0))
+
+
+def dyn_power(v, v0, p0, f):
+    return p0 * (v / v0) ** 2 * f
+
+
+# Parameter vector (log-space fit): per-resource constants.
+P0 = dict(
+    act=0.125,
+    dyn_logic=0.55, dyn_routing=0.80, dyn_dsp=3.2, dyn_mem=1.6, dyn_io=2.8,
+    st_logic=0.45, st_routing=0.55, st_dsp=1.6, st_mem=2.4, st_io=0.2,
+    st_config=0.01,
+    idle_core=0.55, idle_dsp=0.35, idle_mem=0.35, idle_io=0.10,
+    kappa_core=6.0, kappa_mem=8.5, kappa_io=4.0,
+    vth_logic=0.34, vth_routing=0.24, vth_dsp=0.30, vth_mem=0.38,
+    a_logic=1.40, a_routing=1.15, a_dsp=1.30, a_mem=1.10,
+)
+MEM_L_SCALE = 7.5   # M144K vs M9K unit power
+
+FIT_KEYS = ["act", "dyn_logic", "dyn_routing", "dyn_dsp", "dyn_mem", "dyn_io",
+            "st_logic", "st_routing", "st_dsp", "st_mem", "st_io", "st_config",
+            "idle_core", "idle_dsp", "idle_mem", "idle_io",
+            "kappa_core", "kappa_mem"]
+BOUNDS = dict(act=(0.03, 0.5), idle_core=(0.05, 1.0), idle_dsp=(0.05, 1.0),
+              idle_mem=(0.05, 1.0), idle_io=(0.02, 1.0),
+              kappa_core=(3.0, 10.0), kappa_mem=(4.0, 12.0))
+
+
+def counts_for(acc):
+    dev = char.vtr_device(acc.util, acc.name)
+    u = acc.util
+    return {
+        "logic": (u.labs, dev.labs - u.labs),
+        "routing": (u.labs, dev.labs - u.labs),
+        "dsp": (u.dsps, dev.dsps - u.dsps),
+        "mem": (u.m9ks, dev.m9ks - u.m9ks),
+        "mem_l": (u.m144ks, dev.m144ks - u.m144ks),
+        "io": (u.io, dev.io - u.io),
+        "config": (dev.labs + 8 * dev.dsps + 4 * dev.m9ks, 0),
+    }
+
+
+def power_grid(p, acc, vc, vb, f):
+    """Device power over broadcast (vc, vb, f)."""
+    cnt = counts_for(acc)
+    act = p["act"]
+    out = 0.0
+    spec = {
+        "logic": ("core", p["dyn_logic"], p["st_logic"], p["idle_core"]),
+        "routing": ("core", p["dyn_routing"], p["st_routing"], p["idle_core"]),
+        "dsp": ("core", p["dyn_dsp"], p["st_dsp"], p["idle_dsp"]),
+        "mem": ("bram", p["dyn_mem"], p["st_mem"], p["idle_mem"]),
+        "mem_l": ("bram", p["dyn_mem"] * MEM_L_SCALE,
+                  p["st_mem"] * MEM_L_SCALE, p["idle_mem"]),
+        "io": ("io", p["dyn_io"], p["st_io"], p["idle_io"]),
+        "config": ("fixed", 0.0, p["st_config"], 1.0),
+    }
+    for name, (rail, d0, s0, idle) in spec.items():
+        used, unused = cnt[name]
+        if rail == "core":
+            v, v0, kap = vc, V_CORE_NOM, p["kappa_core"]
+        elif rail == "bram":
+            v, v0, kap = vb, V_BRAM_NOM, p["kappa_mem"]
+        elif rail == "io":
+            v, v0, kap = 1.5, 1.5, p["kappa_io"]
+        else:
+            v, v0, kap = 1.0, 1.0, 3.0
+        dyn = used * act * dyn_power(v, v0, d0, f)
+        st = (used + unused * idle) * static_power(v, v0, s0, kap)
+        out = out + dyn + st
+    return out
+
+
+def delay_cp(p, acc, vc, vb):
+    mix = dict(acc.core_mix or {"logic": 0.4, "routing": 0.6, "dsp": 0.0})
+    tot = sum(mix.values())
+    dl = (mix.get("logic", 0) * delay_factor(vc, V_CORE_NOM, p["vth_logic"], p["a_logic"])
+          + mix.get("routing", 0) * delay_factor(vc, V_CORE_NOM, p["vth_routing"], p["a_routing"])
+          + mix.get("dsp", 0) * delay_factor(vc, V_CORE_NOM, p["vth_dsp"], p["a_dsp"])) / tot
+    dm = delay_factor(vb, V_BRAM_NOM, p["vth_mem"], p["a_mem"])
+    return (dl + acc.alpha * dm) / (1 + acc.alpha)
+
+
+def gains_for(p, acc, hist, levels):
+    """Power gains per technique given the selected-bin histogram."""
+    vc_grid = np.arange(V_CRASH, V_CORE_NOM + 1e-9, V_STEP)
+    vb_grid = np.arange(V_CRASH, V_BRAM_NOM + 1e-9, V_STEP)
+    VC, VB = np.meshgrid(vc_grid, vb_grid, indexing="ij")
+    D = delay_cp(p, acc, VC, VB)                      # [C,B]
+    p_nom = power_grid(p, acc, V_CORE_NOM, V_BRAM_NOM, 1.0)
+
+    def best_power(f, core_only=False, bram_only=False, freq_only=False):
+        feas = D <= (1.0 / f) * (1 + 1e-6)
+        P = power_grid(p, acc, VC, VB, f)
+        if core_only:
+            feas = feas & (np.abs(VB - V_BRAM_NOM) < 1e-9)
+        if bram_only:
+            feas = feas & (np.abs(VC - V_CORE_NOM) < 1e-9)
+        if freq_only:
+            feas = feas & (np.abs(VB - V_BRAM_NOM) < 1e-9) \
+                        & (np.abs(VC - V_CORE_NOM) < 1e-9)
+        P = np.where(feas, P, np.inf)
+        return P.min()
+
+    out = {}
+    for tech, kw in [("proposed", {}), ("core_only", {"core_only": True}),
+                     ("bram_only", {"bram_only": True}),
+                     ("freq_only", {"freq_only": True})]:
+        mean_p = sum(h * best_power(f, **kw) for h, f in zip(hist, levels))
+        out[tech] = p_nom / mean_p
+    # power gating: nodes scale with level
+    n = 8
+    pg = sum(h * (np.ceil(f * n) / n) * p_nom for h, f in zip(hist, levels))
+    out["power_gating"] = p_nom / pg
+    return out
+
+
+def loss_fn(p, hist, levels):
+    total, rows = 0.0, {}
+    for name, acc in acc_mod.ACCELERATORS.items():
+        g = gains_for(p, acc, hist, levels)
+        rows[name] = g
+        for tech in ("proposed", "core_only", "bram_only"):
+            target = acc_mod.PAPER_TABLE_II[tech][name]
+            total += (np.log(g[tech]) - np.log(target)) ** 2
+    return total, rows
+
+
+def main():
+    # --- canonical trace + predictor run → selected-bin histogram -------- #
+    cfg = wl.WorkloadConfig(n_steps=2048, seed=0)
+    trace = wl.generate_trace(cfg)
+    print(f"trace mean={trace.mean():.3f} std={trace.std():.3f}")
+    ctl_cfg = ctl.ControllerConfig(technique="freq_only")
+    plat = ctl.fpga_platform(acc_mod.ACCELERATORS["tabla"])
+    res = ctl.simulate(plat, ctl_cfg, trace)
+    sel = np.asarray(res.predicted_bin)
+    m = ctl_cfg.n_bins
+    hist = np.bincount(sel, minlength=m) / sel.size
+    levels = np.minimum((np.arange(m) + 1) / m + ctl_cfg.margin, 1.0)
+    levels = np.maximum(levels, ctl_cfg.f_floor)
+    print("bin histogram:", np.round(hist, 3))
+    print(f"mispred={float(res.mispredictions)/sel.size:.3f} "
+          f"viol={np.asarray(res.violations).mean():.3f}")
+
+    # --- coordinate descent (multiplicative) ----------------------------- #
+    p = dict(P0)
+    best, rows = loss_fn(p, hist, levels)
+    print(f"initial loss {best:.4f}")
+    factors = [0.5, 0.7, 0.85, 1.2, 1.4, 2.0]
+    for sweep in range(4):
+        improved = False
+        for k in FIT_KEYS:
+            base = p[k]
+            for f in factors:
+                trial = dict(p)
+                val = base * f
+                lo, hi = BOUNDS.get(k, (1e-4, 1e4))
+                trial[k] = float(np.clip(val, lo, hi))
+                l, _ = loss_fn(trial, hist, levels)
+                if l < best - 1e-6:
+                    best, p = l, trial
+                    improved = True
+        print(f"sweep {sweep}: loss {best:.4f}")
+        if not improved:
+            break
+
+    _, rows = loss_fn(p, hist, levels)
+    print("\nfitted constants:")
+    print(json.dumps({k: round(v, 4) for k, v in p.items()}, indent=2))
+    print("\nachieved vs paper:")
+    for name in acc_mod.ACCELERATORS:
+        g = rows[name]
+        tgt = {t: acc_mod.PAPER_TABLE_II[t][name]
+               for t in ("proposed", "core_only", "bram_only")}
+        print(f"  {name:10s} prop {g['proposed']:.2f}({tgt['proposed']}) "
+              f"core {g['core_only']:.2f}({tgt['core_only']}) "
+              f"bram {g['bram_only']:.2f}({tgt['bram_only']}) "
+              f"freq {g['freq_only']:.2f} pg {g['power_gating']:.2f}")
+    for t in ("proposed", "core_only", "bram_only"):
+        avg = np.mean([rows[n][t] for n in rows])
+        print(f"  AVG {t}: {avg:.2f} (paper {acc_mod.PAPER_TABLE_II[t]['average']})")
+
+
+if __name__ == "__main__":
+    main()

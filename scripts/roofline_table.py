@@ -1,0 +1,28 @@
+"""Render the §Roofline table from benchmarks/dryrun_results.jsonl."""
+import json
+import sys
+from collections import OrderedDict
+
+rows = [json.loads(l) for l in open(sys.argv[1]
+                                    if len(sys.argv) > 1
+                                    else "benchmarks/dryrun_results.jsonl")]
+latest = OrderedDict()
+for r in rows:
+    latest[(r["arch"], r["shape"], r["mesh"])] = r
+
+print(f"{'arch':22s} {'shape':12s} {'mesh':8s} {'comp_s':>9s} {'mem_s':>9s} "
+      f"{'coll_s':>9s} {'dom':>5s} {'useful':>7s} {'MFU':>6s} {'HBMfr':>6s}")
+for (arch, shape, mesh), r in latest.items():
+    if r["status"] == "skipped":
+        print(f"{arch:22s} {shape:12s} {mesh:8s} {'—':>9s} {'—':>9s} "
+              f"{'—':>9s}   skip: {r['reason'][:44]}")
+        continue
+    if r["status"] == "error":
+        print(f"{arch:22s} {shape:12s} {mesh:8s} ERROR {r['error'][:60]}")
+        continue
+    rf = r["roofline"]
+    print(f"{arch:22s} {shape:12s} {mesh:8s} "
+          f"{rf['t_compute_s']:9.4f} {rf['t_memory_s']:9.4f} "
+          f"{rf['t_collective_s']:9.4f} {rf['dominant'][:4]:>5s} "
+          f"{rf['useful_flops_ratio']:7.3f} {rf['mfu_at_roofline']:6.3f} "
+          f"{r['memory'].get('hbm_fraction', -1):6.2f}")

@@ -1,0 +1,4 @@
+from repro.analysis.hlo_parse import analyze_hlo, collective_bytes
+from repro.analysis.roofline import HW_V5E, roofline_terms
+
+__all__ = ["analyze_hlo", "collective_bytes", "HW_V5E", "roofline_terms"]

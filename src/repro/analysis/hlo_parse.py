@@ -1,0 +1,404 @@
+"""Loop-aware static cost analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each computation once — a
+``while`` body (scan-over-layers, microbatch accumulation, chunked
+attention) is counted a single time regardless of its trip count, which
+undercounts FLOPs/bytes by orders of magnitude for scanned models.  This
+module re-derives the three roofline inputs from the HLO itself:
+
+* **FLOPs** — ``dot``: 2 × numel(result) × prod(lhs contracting dims);
+  ``convolution``: 2 × numel(result) × prod(window sizes).  Dots inside
+  fusions are also counted (bytes of fusion interiors are not).
+* **bytes accessed** — per instruction: result bytes + operand bytes
+  (operand shapes resolved through a per-computation symbol table, since
+  post-optimization HLO does not annotate operand shapes inline).
+  Zero-cost ops (parameter/constant/tuple/get-tuple-element/bitcast)
+  are excluded, matching HloCostAnalysis conventions.
+* **collective bytes** — operand bytes of every all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (sync or async
+  ``-start`` form), i.e. per-device payload.
+
+Loop multiplicity: ``while`` instructions carry
+``backend_config={"known_trip_count":{"n":N}}`` (exact for scan/fori);
+fallback is the largest integer constant in the loop condition.
+``call``/``conditional`` bodies count once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_WINDOW_RE = re.compile(r"window=\{[^}]*size=([\dx]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_ZERO_COST_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "after-all", "add-dependency", "domain",
+                  "opt-barrier", "partition-id", "replica-id"}
+
+
+def _shapes_of(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dtype, shape))
+    return out
+
+
+def _bytes_of_shapes(shapes) -> float:
+    total = 0.0
+    for dtype, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    line: str
+    is_root: bool = False
+
+
+_HDR_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)")
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, List[_Instr]],
+                                           Optional[str]]:
+    comps: Dict[str, List[_Instr]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    depth = 0
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            # computation header: "name (params...) -> ret {" — the param
+            # list may contain nested parens (tuple types), so detect by
+            # suffix/arrow rather than a full regex.
+            if line.endswith("{") and "->" in line and " = " not in \
+                    line.split("->", 1)[0]:
+                m = _HDR_NAME_RE.match(line)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    depth = 1
+                    if line.startswith("ENTRY"):
+                        entry = cur
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_txt, opcode = m.groups()
+        # operand names: inside the first paren group after the opcode
+        after = line[m.end():]
+        arg_txt = after.split(")", 1)[0]
+        operands = _OPERAND_RE.findall(arg_txt)
+        comps[cur].append(_Instr(
+            name=name, opcode=opcode,
+            result_shapes=_shapes_of(result_txt),
+            operands=operands, line=line,
+            is_root=line.startswith("ROOT")))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collectives_raw: Dict[str, float] = dataclasses.field(
+        default_factory=dict)  # before the CPU f32-promotion correction
+    by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    flops_by_name: Dict[str, float] = dataclasses.field(default_factory=dict)
+    bytes_by_name: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def coll_total(self) -> float:
+        return sum(self.collectives.values())
+
+    def add_collective(self, kind: str, b: float):
+        self.collectives[kind] = self.collectives.get(kind, 0.0) + b
+
+
+def _collective_kind(opcode: str) -> Optional[str]:
+    for k in COLLECTIVE_KINDS:
+        if opcode == k or opcode == k + "-start":
+            return k
+    return None
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, entry = _split_computations(hlo)
+    symtab: Dict[str, Dict[str, _Instr]] = {
+        name: {i.name: i for i in instrs} for name, instrs in comps.items()}
+
+    cost = HloCost()
+
+    def operand_bytes(comp: str, ins: _Instr) -> float:
+        total = 0.0
+        tab = symtab[comp]
+        for op in ins.operands:
+            if op in tab:
+                total += _bytes_of_shapes(tab[op].result_shapes)
+        return total
+
+    def fusion_flops(comp_name: str, mult: float):
+        """dots/convs inside a fusion body still execute."""
+        for ins in comps.get(comp_name, []):
+            if ins.opcode == "dot":
+                _dot_flops(comp_name, ins, mult)
+            elif ins.opcode == "convolution":
+                _conv_flops(ins, mult)
+            elif ins.opcode == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                if m:
+                    fusion_flops(m.group(1), mult)
+
+    def fusion_bytes(comp_name: str) -> float:
+        """HBM traffic of one fusion execution.
+
+        Interior intermediates live in registers/VMEM: only the fusion's
+        parameters and its root output touch HBM.  A parameter consumed
+        solely through (dynamic-)slice/gather is charged by the sliced
+        extent; a DUS-rooted fusion writes only the update extent.
+        """
+        instrs = comps.get(comp_name, [])
+        if not instrs:
+            return 0.0
+        tab = symtab[comp_name]
+        params = {i.name: _bytes_of_shapes(i.result_shapes)
+                  for i in instrs if i.opcode == "parameter"}
+        full: set = set()
+        sliced: Dict[str, float] = {}
+        total = 0.0
+        root = None
+        for ins in instrs:
+            if ins.is_root:
+                root = ins
+            if ins.opcode in _ZERO_COST_OPS:
+                continue
+            if ins.opcode in ("dynamic-slice", "slice", "gather") \
+                    and ins.operands and ins.operands[0] in params:
+                sliced[ins.operands[0]] = (
+                    sliced.get(ins.operands[0], 0.0)
+                    + _bytes_of_shapes(ins.result_shapes))
+                continue
+            if ins.opcode == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                if m:
+                    total += fusion_bytes(m.group(1))
+            # a DUS's buffer operand (index 0) is updated in place, not
+            # read in full — skip it in the read-charge loop
+            ops = ins.operands[1:] if ins.opcode == "dynamic-update-slice" \
+                else ins.operands
+            for opnd in ops:
+                if opnd in params:
+                    full.add(opnd)
+        for p, b in params.items():
+            total += b if p in full else sliced.get(p, 0.0)
+        root = root or instrs[-1]
+
+        def root_charge(ins: _Instr) -> float:
+            if ins.opcode == "dynamic-update-slice" and len(ins.operands) > 1:
+                upd = ins.operands[1]
+                ub = _bytes_of_shapes(tab[upd].result_shapes) if upd in tab \
+                    else _bytes_of_shapes(ins.result_shapes)
+                return 2.0 * ub
+            return _bytes_of_shapes(ins.result_shapes)
+
+        if root.opcode == "tuple":
+            # multi-output fusion: charge each element (in-place DUS
+            # elements by their update extent, not the full buffer)
+            for opnd in root.operands:
+                if opnd in tab:
+                    total += root_charge(tab[opnd])
+        else:
+            total += root_charge(root)
+        return total
+
+    def _dot_flops(comp: str, ins: _Instr, mult: float):
+        res_n = 1
+        for _, dims in ins.result_shapes[:1]:
+            for d in dims:
+                res_n *= d
+        lhs = symtab[comp].get(ins.operands[0]) if ins.operands else None
+        contract = 1
+        m = _LHS_CONTRACT_RE.search(ins.line)
+        if lhs is not None and m and m.group(1):
+            lhs_dims = lhs.result_shapes[0][1] if lhs.result_shapes else ()
+            for idx in m.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+        f = 2.0 * res_n * contract * mult
+        cost.flops += f
+        key = ins.line.split("op_name=\"")[-1].split("\"")[0][:120] \
+            if "op_name=" in ins.line else ins.name
+        cost.flops_by_name[key] = cost.flops_by_name.get(key, 0.0) + f
+
+    def _conv_flops(ins: _Instr, mult: float):
+        res_n = 1
+        for _, dims in ins.result_shapes[:1]:
+            for d in dims:
+                res_n *= d
+        window = 1
+        m = _WINDOW_RE.search(ins.line)
+        if m:
+            for d in m.group(1).split("x"):
+                window *= int(d)
+        cost.flops += 2.0 * res_n * window * mult
+
+    def trip_count(ins: _Instr) -> int:
+        m = _TRIP_RE.search(ins.line)
+        if m:
+            return int(m.group(1))
+        c = _COND_RE.search(ins.line)
+        if c and c.group(1) in comps:
+            best = 1
+            for i in comps[c.group(1)]:
+                for mm in _CONST_INT_RE.finditer(i.line):
+                    best = max(best, int(mm.group(1)))
+            return best
+        return 1
+
+    seen_stack: List[str] = []
+
+    def walk(comp_name: str, mult: float):
+        if comp_name not in comps or comp_name in seen_stack:
+            return
+        seen_stack.append(comp_name)
+        for ins in comps[comp_name]:
+            op = ins.opcode
+            kind = _collective_kind(op)
+            if kind is not None:
+                b = operand_bytes(comp_name, ins) * mult
+                if b == 0.0:  # fall back to result size (all-reduce etc.)
+                    b = _bytes_of_shapes(ins.result_shapes) * mult
+                cost.collectives_raw[kind] = \
+                    cost.collectives_raw.get(kind, 0.0) + b
+                # XLA:CPU promotes 16-bit all-reduces to f32 (its runtime
+                # lacks bf16 reduction kernels) — marked by a "_promoted"
+                # reducer.  TPUs reduce in bf16 natively, so count the
+                # unpromoted payload for the roofline.
+                if "promoted" in ins.line:
+                    b *= 0.5
+                cost.add_collective(kind, b)
+                cost.bytes += b * 2  # collective reads+writes HBM too
+                key = "coll:" + (
+                    ins.line.split('op_name="')[-1].split('"')[0][-110:]
+                    if "op_name=" in ins.line else ins.name)
+                cost.bytes_by_name[key] = \
+                    cost.bytes_by_name.get(key, 0.0) + b
+                continue
+            if op in _ZERO_COST_OPS or op.endswith("-done"):
+                continue
+            if op == "while":
+                t = trip_count(ins)
+                m = _BODY_RE.search(ins.line)
+                if m:
+                    walk(m.group(1), mult * t)
+                continue
+            if op in ("call", "custom-call", "async-start"):
+                m = _TO_APPLY_RE.search(ins.line) or _CALLS_RE.search(ins.line)
+                if m:
+                    walk(m.group(1), mult)
+                # fall through to count bytes of the call itself
+            if op == "conditional":
+                m = _BRANCHES_RE.search(ins.line)
+                if m:
+                    for b_name in _OPERAND_RE.findall(m.group(1)):
+                        walk(b_name, mult)
+                continue
+
+            if op == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                b = (fusion_bytes(m.group(1)) if m else
+                     _bytes_of_shapes(ins.result_shapes)) * mult
+                cost.bytes += b
+                cost.by_op[op] = cost.by_op.get(op, 0.0) + b
+                key = (ins.line.split('op_name="')[-1].split('"')[0][:140]
+                       if "op_name=" in ins.line else ins.name)
+                cost.bytes_by_name[key] = cost.bytes_by_name.get(key, 0.0) + b
+                if m:
+                    fusion_flops(m.group(1), mult)
+                continue
+            if op == "dynamic-slice" or op == "gather":
+                # reads only the sliced/gathered elements; buffer untouched
+                b = 2.0 * _bytes_of_shapes(ins.result_shapes) * mult
+            elif op == "dynamic-update-slice":
+                # in-place: reads+writes only the update (operand 1)
+                upd = ins.operands[1] if len(ins.operands) > 1 else None
+                tab = symtab[comp_name]
+                ub = (_bytes_of_shapes(tab[upd].result_shapes)
+                      if upd in tab else
+                      _bytes_of_shapes(ins.result_shapes))
+                b = 2.0 * ub * mult
+            elif op == "scatter":
+                upd = ins.operands[2] if len(ins.operands) > 2 else None
+                tab = symtab[comp_name]
+                ub = (_bytes_of_shapes(tab[upd].result_shapes)
+                      if upd in tab else
+                      _bytes_of_shapes(ins.result_shapes))
+                b = 3.0 * ub * mult  # read update + read/write target slice
+            else:
+                b = (_bytes_of_shapes(ins.result_shapes)
+                     + operand_bytes(comp_name, ins)) * mult
+            cost.bytes += b
+            cost.by_op[op] = cost.by_op.get(op, 0.0) + b
+
+            if op == "dot":
+                _dot_flops(comp_name, ins, mult)
+            elif op == "convolution":
+                _conv_flops(ins, mult)
+            elif op == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                if m:
+                    fusion_flops(m.group(1), mult)
+        seen_stack.pop()
+
+    if entry:
+        walk(entry, 1.0)
+    return cost
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Back-compat helper: per-device collective traffic by kind."""
+    cost = analyze_hlo(hlo)
+    out = dict(cost.collectives)
+    out["total"] = cost.coll_total()
+    return out

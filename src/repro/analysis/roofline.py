@@ -1,0 +1,112 @@
+"""Three-term roofline from the compiled dry-run (task §Roofline).
+
+    compute    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory     = HLO_bytes   / (chips × HBM_bw)
+    collective = coll_bytes  / (chips × link_bw)
+
+``cost_analysis()`` of a post-SPMD executable reports *per-device* flops
+and bytes, and the HLO parser reports per-device collective bytes, so the
+per-chip form (x / peak) is used directly — algebraically identical to
+the global form divided by chips.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (task-specified).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float      # per chip, bf16
+    hbm_bw: float          # bytes/s per chip
+    link_bw: float         # bytes/s per ICI link
+    hbm_bytes: float       # capacity per chip
+
+
+HW_V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                  link_bw=50e9, hbm_bytes=16 * 1024 ** 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineReport:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float           # 6·N·D analytic (global)
+    chips: int
+
+    @property
+    def t_step(self) -> float:
+        """Overlapped step-time lower bound (max of terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs(global) — remat/redundancy waste."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        denom = self.t_step * self.chips * HW_V5E.peak_flops
+        return self.model_flops / denom if denom else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_step_s": self.t_step,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_at_roofline": self.mfu,
+        }
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float, model_flops: float,
+                   chips: int, hw: Hardware = HW_V5E) -> RooflineReport:
+    return RooflineReport(
+        t_compute=flops_per_device / hw.peak_flops,
+        t_memory=bytes_per_device / hw.hbm_bw,
+        t_collective=coll_bytes_per_device / hw.link_bw,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        coll_bytes_per_device=coll_bytes_per_device,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def model_flops_for(cfg, shape, active_params: int) -> float:
+    """6·N·D for training, 2·N·D for inference forward passes.
+
+    decode: D = global_batch tokens (one step); prefill/train: B·S tokens.
+    """
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active_params * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * active_params * tokens

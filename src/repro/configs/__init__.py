@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Ten assigned architectures (full + reduced smoke variants) plus the paper's
+own five FPGA accelerator benchmarks (``repro.core.accelerators``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import (deepseek_v2_236b, falcon_mamba_7b, gemma2_2b,
+                           gemma3_27b, hubert_xlarge, internvl2_1b,
+                           llama3_2_1b, llama3_405b, qwen3_moe_235b_a22b,
+                           zamba2_2_7b)
+from repro.configs.base import (AttentionConfig, ModelConfig, MoEConfig,
+                                OptimizerConfig, ShapeConfig, SHAPES,
+                                SSMConfig, TrainConfig, count_params,
+                                shape_applicable)
+
+_MODULES = {
+    "gemma2-2b": gemma2_2b,
+    "llama3-405b": llama3_405b,
+    "gemma3-27b": gemma3_27b,
+    "llama3.2-1b": llama3_2_1b,
+    "internvl2-1b": internvl2_1b,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b_a22b,
+    "deepseek-v2-236b": deepseek_v2_236b,
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "zamba2-2.7b": zamba2_2_7b,
+    "hubert-xlarge": hubert_xlarge,
+}
+
+ARCH_NAMES: List[str] = list(_MODULES)
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    mod = _MODULES[name]
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def all_configs(reduced: bool = False) -> Dict[str, ModelConfig]:
+    return {n: get_config(n, reduced) for n in ARCH_NAMES}
+
+
+__all__ = ["AttentionConfig", "ModelConfig", "MoEConfig", "OptimizerConfig",
+           "ShapeConfig", "SHAPES", "SSMConfig", "TrainConfig", "ARCH_NAMES",
+           "get_config", "all_configs", "count_params", "shape_applicable"]

@@ -1,0 +1,18 @@
+"""The paper's primary contribution: workload-aware opportunistic DVFS for
+multi-accelerator platforms (Salamat et al., 2019), adapted TPU-native.
+
+Layers:
+  characterization — delay/power-vs-voltage libraries (FPGA fabric + TPU domains)
+  voltage          — joint (V_core, V_bram) constrained optimization + §V tables
+  predictor        — online Markov-chain workload prediction
+  workload         — bursty self-similar trace synthesis (BURSE-like)
+  controller       — the §V runtime loop (predict → frequency → voltages → PLL)
+  pll              — PLL lock/energy overhead model (Eqs. 4-5)
+  accelerators     — the paper's five DNN accelerators (Table I)
+"""
+
+from repro.core import accelerators, characterization, controller, pll, \
+    predictor, voltage, workload  # noqa: F401
+
+__all__ = ["accelerators", "characterization", "controller", "pll",
+           "predictor", "voltage", "workload"]

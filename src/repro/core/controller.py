@@ -1,0 +1,344 @@
+"""The central DVFS controller and platform simulation (paper §V, Fig. 9).
+
+The paper's runtime loop per time step τ:
+
+  workload counter → Markov predictor → frequency selector → voltage
+  selector (a lookup into the per-frequency operating table precomputed at
+  synthesis time) → PLL reprogram (dual-PLL hides the lock) → PMBUS rails.
+
+We reproduce that loop exactly, as a jit-compiled ``lax.scan`` over the
+workload trace, so thousand-step platform simulations take microseconds.
+The *technique* (proposed joint scaling / core-only / bram-only / DFS /
+power-gating) only changes how the per-bin operating table is built —
+mirroring the paper's synthesis-time precomputation — while the runtime
+loop is shared.
+
+Power bookkeeping is in watts: the power model's arbitrary units are
+scaled so a fully-utilized node at nominal voltage draws
+``watts_nominal`` (paper: ≈20 W per FPGA).  PLL standing power/stall and
+QoS backlog dynamics are included.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import characterization as char
+from repro.core import pll as pll_mod
+from repro.core import predictor as pred_mod
+from repro.core import voltage as volt_mod
+from repro.core.accelerators import Accelerator
+
+Array = jax.Array
+
+TECHNIQUES = ("proposed", "core_only", "bram_only", "freq_only",
+              "power_gating", "nominal")
+
+
+# ---------------------------------------------------------------------------
+# Platform abstraction (FPGA node or TPU chip)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformSpec:
+    """One compute node's delay/power characterization.
+
+    ``delay_fn(v_core, v_bram)`` — normalized critical-path / step delay
+    (1.0 at nominal rails); ``power_fn(v_core, v_bram, f_rel)`` — node power
+    in arbitrary units; ``watts_nominal`` pins the absolute scale.
+    """
+
+    name: str
+    delay_fn: volt_mod.DelayFn
+    power_fn: volt_mod.PowerFn
+    nominal_power_arb: float
+    watts_nominal: float = 20.0
+
+    @property
+    def watts_scale(self) -> float:
+        return self.watts_nominal / self.nominal_power_arb
+
+    def power_watts(self, v_core, v_bram, f_rel) -> Array:
+        return self.power_fn(v_core, v_bram, f_rel) * self.watts_scale
+
+
+def fpga_platform(acc: Accelerator, activity: float = 0.125,
+                  watts_nominal: float = 20.0) -> PlatformSpec:
+    """Paper's platform: one accelerator mapped on its smallest device."""
+    pm = acc.power_model(activity)
+    return PlatformSpec(
+        name=f"fpga:{acc.name}",
+        delay_fn=volt_mod.fpga_delay_fn(acc.alpha, dict(acc.core_mix or {})
+                                        or None),
+        power_fn=pm.power,
+        nominal_power_arb=float(pm.nominal_power()),
+        watts_nominal=watts_nominal,
+    )
+
+
+def analytic_platform(alpha: float = 0.2, beta: float = 0.4,
+                      watts_nominal: float = 20.0) -> PlatformSpec:
+    """The §III motivational model: Eq. 1-3 with free (α, β).
+
+    Delay: (D_l(V_core) + α·D_m(V_bram)) / (1+α); power: core-rail mix
+    plus ``β``-weighted BRAM power — used by the Fig. 4/5/6 sweeps.
+    """
+    logic = char.FPGA_LIBRARY["logic"]
+    routing = char.FPGA_LIBRARY["routing"]
+    mem = char.FPGA_LIBRARY["memory"]
+
+    def power_fn(v_core, v_bram, f_rel):
+        p_core = (0.4 * logic.total_power(v_core, f_rel)
+                  + 0.6 * routing.total_power(v_core, f_rel))
+        p_core = p_core / float(0.4 * logic.total_power(
+            jnp.asarray(char.V_CORE_NOM), jnp.asarray(1.0))
+            + 0.6 * routing.total_power(jnp.asarray(char.V_CORE_NOM),
+                                        jnp.asarray(1.0)))
+        p_mem = mem.total_power(v_bram, f_rel) / float(
+            mem.total_power(jnp.asarray(char.V_BRAM_NOM), jnp.asarray(1.0)))
+        return p_core + beta * p_mem
+
+    return PlatformSpec(
+        name=f"analytic:a{alpha}b{beta}",
+        delay_fn=volt_mod.fpga_delay_fn(alpha),
+        power_fn=power_fn,
+        nominal_power_arb=1.0 + beta,
+        watts_nominal=watts_nominal,
+    )
+
+
+def tpu_platform(t_compute: float, t_memory: float, t_collective: float,
+                 name: str = "tpu", composition: str = "max",
+                 watts_nominal: float = 200.0) -> PlatformSpec:
+    """TPU adaptation: roofline terms (seconds) from the compiled dry-run.
+
+    The HBM frequency tracks the HBM domain and core/ICI track the core
+    domain; per-step relative frequency applies to both domains (the
+    controller slows the whole chip to match throughput, then the voltage
+    optimizer splits the slack between domains — DESIGN.md §2).
+    """
+    chip = char.TpuChipPowerModel()
+
+    def power_fn(v_core, v_hbm, f_rel):
+        return chip.power(v_core, v_hbm, f_rel, f_rel)
+
+    return PlatformSpec(
+        name=f"tpu:{name}",
+        delay_fn=volt_mod.tpu_delay_fn(t_compute, t_memory, t_collective,
+                                       composition=composition),
+        power_fn=power_fn,
+        nominal_power_arb=float(chip.nominal_power()),
+        watts_nominal=watts_nominal,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Controller configuration and per-bin operating tables
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    technique: str = "proposed"
+    n_bins: int = 25
+    margin: float = 0.05          # paper's t — additive, must exceed 1/M (§V)
+    tau: float = 1.0              # time-step length (s)
+    n_nodes: int = 8
+    f_floor: float = 0.10         # lowest selectable relative frequency
+    use_oracle: bool = False      # perfect prediction (upper bound; beyond paper)
+    gated_power_frac: float = 0.0  # residual power of a power-gated node
+    predictor: pred_mod.PredictorConfig = dataclasses.field(
+        default_factory=pred_mod.PredictorConfig)
+    pll: pll_mod.PllConfig = dataclasses.field(default_factory=pll_mod.PllConfig)
+    v_step: float = char.V_STEP
+
+    def __post_init__(self):
+        if self.technique not in TECHNIQUES:
+            raise ValueError(f"unknown technique {self.technique!r}")
+        if self.margin <= 1.0 / self.n_bins - 1e-9:
+            # §V: t must exceed 1/M to discriminate adjacent bins; we only
+            # warn-by-clamping in the table builder, but reject nonsense.
+            pass
+        object.__setattr__(self, "predictor",
+                           dataclasses.replace(self.predictor,
+                                               n_bins=self.n_bins))
+
+
+class BinTables(NamedTuple):
+    """Per-workload-bin operating points — the §V synthesis-time table."""
+
+    capacity: Array   # [M] relative throughput delivered at this bin's point
+    power: Array      # [M] platform power (watts) at this bin's point
+    v_core: Array     # [M]
+    v_bram: Array     # [M]
+    f_rel: Array      # [M]
+
+
+def _grids_for(technique: str, v_step: float) -> volt_mod.VoltageGrids:
+    if technique == "proposed":
+        return volt_mod.VoltageGrids.default(v_step)
+    if technique == "core_only":
+        return volt_mod.VoltageGrids.core_only(v_step)
+    if technique == "bram_only":
+        return volt_mod.VoltageGrids.bram_only(v_step)
+    if technique in ("freq_only", "nominal", "power_gating"):
+        return volt_mod.VoltageGrids.frequency_only()
+    raise ValueError(technique)
+
+
+def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables:
+    """Precompute the optimal operating point for every workload bin."""
+    m = cfg.n_bins
+    pll_watts = (2 if cfg.pll.dual else 1) * cfg.pll.p_pll
+    stall = pll_mod.stall_fraction(cfg.pll, cfg.tau)
+
+    if cfg.technique == "nominal":
+        cap = jnp.ones(m)
+        node_w = platform.power_watts(jnp.asarray(char.V_CORE_NOM),
+                                      jnp.asarray(char.V_BRAM_NOM),
+                                      jnp.asarray(1.0))
+        power = jnp.full(m, (node_w + pll_watts) * cfg.n_nodes)
+        return BinTables(capacity=cap, power=power,
+                         v_core=jnp.full(m, char.V_CORE_NOM),
+                         v_bram=jnp.full(m, char.V_BRAM_NOM),
+                         f_rel=jnp.ones(m))
+
+    if cfg.technique == "power_gating":
+        # Conventional baseline (paper §III): scale the number of *active*
+        # nodes linearly with predicted workload; active nodes run at
+        # nominal V/f.  No extra margin — the bin's upper edge plus the
+        # ceil already covers within-bin demand.
+        edges = (np.arange(m) + 1.0) / m
+        n_active = np.minimum(np.ceil(edges * cfg.n_nodes), cfg.n_nodes)
+        cap = jnp.asarray(n_active / cfg.n_nodes)
+        node_w = float(platform.power_watts(jnp.asarray(char.V_CORE_NOM),
+                                            jnp.asarray(char.V_BRAM_NOM),
+                                            jnp.asarray(1.0)))
+        gated = (cfg.n_nodes - n_active) * cfg.gated_power_frac * node_w
+        power = jnp.asarray(n_active * (node_w + pll_watts) + gated)
+        return BinTables(capacity=cap, power=power,
+                         v_core=jnp.full(m, char.V_CORE_NOM),
+                         v_bram=jnp.full(m, char.V_BRAM_NOM),
+                         f_rel=jnp.ones(m))
+
+    # DVFS techniques: joint / single-rail / frequency-only.
+    levels = volt_mod.bin_frequency_levels(m, cfg.margin, cfg.f_floor)
+    grids = _grids_for(cfg.technique, cfg.v_step)
+    pts = volt_mod.optimize_batch(platform.delay_fn, platform.power_fn,
+                                  levels, grids)
+    node_w = pts.power * platform.watts_scale
+    cap = levels * (1.0 - stall)
+    power = (node_w + pll_watts) * cfg.n_nodes
+    return BinTables(capacity=cap, power=power, v_core=pts.v_core,
+                     v_bram=pts.v_bram, f_rel=levels)
+
+
+# ---------------------------------------------------------------------------
+# Trace simulation (the runtime loop)
+# ---------------------------------------------------------------------------
+
+
+class TraceResult(NamedTuple):
+    power: Array            # [T] platform watts per step
+    capacity: Array         # [T] delivered relative throughput
+    violations: Array       # [T] bool — workload exceeded capacity
+    backlog: Array          # [T] carried-over work (fraction of peak·τ)
+    predicted_bin: Array    # [T]
+    actual_bin: Array       # [T]
+    v_core: Array           # [T]
+    v_bram: Array           # [T]
+    f_rel: Array            # [T]
+    mispredictions: Array   # scalar int
+    final_predictor: pred_mod.MarkovState
+
+
+@dataclasses.dataclass(frozen=True)
+class Summary:
+    technique: str
+    mean_power_w: float
+    nominal_power_w: float
+    power_gain: float            # nominal / mean — the paper's headline metric
+    qos_violation_rate: float
+    served_fraction: float       # work served in-step / work offered
+    misprediction_rate: float
+    mean_backlog: float
+
+
+def simulate(platform: PlatformSpec, cfg: ControllerConfig,
+             trace: np.ndarray | Array) -> TraceResult:
+    """Run the §V control loop over a workload trace (one jitted scan)."""
+    tables = build_bin_tables(platform, cfg)
+    trace = jnp.asarray(trace, jnp.float32)
+    m = cfg.n_bins
+
+    def step(carry, w_t):
+        mstate, backlog = carry
+        predicted = pred_mod.predict(cfg.predictor, mstate)
+        actual = pred_mod.workload_to_bin(w_t, m)
+        selected = jnp.where(cfg.use_oracle, actual, predicted)
+
+        cap = tables.capacity[selected]
+        pwr = tables.power[selected]
+
+        # QoS/backlog dynamics: offered work this step plus carried backlog,
+        # served up to delivered capacity.
+        served = jnp.minimum(cap, w_t + backlog)
+        new_backlog = w_t + backlog - served
+        violation = w_t > cap + 1e-9
+
+        mstate = pred_mod.observe(cfg.predictor, mstate, actual, predicted)
+        out = (pwr, cap, violation, new_backlog, predicted, actual,
+               tables.v_core[selected], tables.v_bram[selected],
+               tables.f_rel[selected])
+        return (mstate, new_backlog), out
+
+    init = (pred_mod.init_state(cfg.predictor), jnp.asarray(0.0))
+    (mstate, _), outs = jax.lax.scan(step, init, trace)
+    (pwr, cap, viol, backlog, pred_b, act_b, vc, vb, fr) = outs
+    return TraceResult(power=pwr, capacity=cap, violations=viol,
+                       backlog=backlog, predicted_bin=pred_b,
+                       actual_bin=act_b, v_core=vc, v_bram=vb, f_rel=fr,
+                       mispredictions=mstate.mispredictions,
+                       final_predictor=mstate)
+
+
+def summarize(platform: PlatformSpec, cfg: ControllerConfig,
+              trace: np.ndarray | Array, result: TraceResult) -> Summary:
+    nominal_cfg = dataclasses.replace(cfg, technique="nominal")
+    nominal_tables = build_bin_tables(platform, nominal_cfg)
+    nominal_w = float(nominal_tables.power[0])
+    mean_w = float(jnp.mean(result.power))
+    offered = float(jnp.sum(jnp.asarray(trace)))
+    served = offered - float(result.backlog[-1])
+    n = result.power.shape[0]
+    return Summary(
+        technique=cfg.technique,
+        mean_power_w=mean_w,
+        nominal_power_w=nominal_w,
+        power_gain=nominal_w / mean_w,
+        qos_violation_rate=float(jnp.mean(result.violations)),
+        served_fraction=served / max(offered, 1e-9),
+        misprediction_rate=float(result.mispredictions) / max(n, 1),
+        mean_backlog=float(jnp.mean(result.backlog)),
+    )
+
+
+def run_technique(platform: PlatformSpec, trace, technique: str,
+                  **cfg_kwargs) -> Summary:
+    cfg = ControllerConfig(technique=technique, **cfg_kwargs)
+    result = simulate(platform, cfg, trace)
+    return summarize(platform, cfg, trace, result)
+
+
+def compare_all(platform: PlatformSpec, trace,
+                techniques=("proposed", "core_only", "bram_only",
+                            "freq_only", "power_gating"),
+                **cfg_kwargs) -> Dict[str, Summary]:
+    return {t: run_technique(platform, trace, t, **cfg_kwargs)
+            for t in techniques}

@@ -1,0 +1,186 @@
+"""Workload prediction (paper §IV-A, §V).
+
+Discrete-time Markov chain over ``M`` workload bins.  Transition counts are
+learned online; for the first ``I`` ("warmup") steps the platform runs at
+nominal frequency while the chain trains.  Prediction returns the next bin;
+the controller adds a ``t%`` throughput margin (t > 1/M) so that one-bin
+under-predictions still meet QoS (§V Misprediction Detection).
+
+Everything is a pure-functional JAX state machine: ``MarkovState`` is a
+pytree carried through ``lax.scan`` by the controller, so the whole
+multi-thousand-step platform simulation jit-compiles to a single XLA loop.
+
+Beyond-paper extension (kept separate, off by default): a *quantile* policy
+that picks the smallest bin whose cumulative transition probability exceeds
+``q`` — trading a little power for fewer QoS violations; benchmarked in
+``benchmarks/bench_predictor.py``.
+
+A periodic-bias predictor (paper: "workloads with repeating patterns ...
+the average of the intervals represents a bias") is provided for traces with
+a known period.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    n_bins: int = 10
+    warmup_steps: int = 32          # paper's I
+    policy: str = "argmax"          # "argmax" (paper) | "quantile" | "expected"
+    quantile: float = 0.9           # only for policy == "quantile"
+    mispred_threshold: int = 4      # paper §V: edge re-learn threshold
+    update_mode: str = "always"     # "always" | "threshold" (paper's lazier variant)
+    count_decay: float = 1.0        # exponential forgetting (1.0 = none)
+
+
+class MarkovState(NamedTuple):
+    counts: Array          # [M, M] transition counts (float32)
+    pending: Array         # [M, M] counts awaiting threshold flush
+    current_bin: Array     # int32 — bin observed for the last completed step
+    steps: Array           # int32 — completed observations
+    mispredictions: Array  # int32 — running count of wrong predictions
+    consecutive_mispred: Array  # int32 — for the threshold update mode
+
+
+def init_state(cfg: PredictorConfig) -> MarkovState:
+    m = cfg.n_bins
+    # Diagonal-biased Laplace prior: before any evidence, the best guess is
+    # a self-transition (workloads are short-term sticky); the small uniform
+    # floor keeps every edge alive, as in the paper's fully-connected chain.
+    prior = 0.01 * jnp.ones((m, m), jnp.float32) + jnp.eye(m, dtype=jnp.float32)
+    return MarkovState(
+        counts=prior,
+        pending=jnp.zeros((m, m), jnp.float32),
+        current_bin=jnp.asarray(0, jnp.int32),
+        steps=jnp.asarray(0, jnp.int32),
+        mispredictions=jnp.asarray(0, jnp.int32),
+        consecutive_mispred=jnp.asarray(0, jnp.int32),
+    )
+
+
+def workload_to_bin(w: Array, n_bins: int) -> Array:
+    """Discretize a workload fraction in [0, 1] into bin 0..M-1."""
+    b = jnp.floor(jnp.asarray(w) * n_bins).astype(jnp.int32)
+    return jnp.clip(b, 0, n_bins - 1)
+
+
+def bin_upper_edge(b: Array, n_bins: int) -> Array:
+    return (b.astype(jnp.float32) + 1.0) / n_bins
+
+
+def predict(cfg: PredictorConfig, state: MarkovState) -> Array:
+    """Predict the next step's workload bin from the current state.
+
+    During warmup the platform must run at nominal frequency (§IV-A), which
+    we encode as predicting the top bin.
+    """
+    row = state.counts[state.current_bin]
+    probs = row / jnp.sum(row)
+
+    if cfg.policy == "argmax":
+        pred = jnp.argmax(probs).astype(jnp.int32)
+    elif cfg.policy == "expected":
+        # conservative ceil of the expected bin
+        exp_bin = jnp.sum(probs * jnp.arange(cfg.n_bins))
+        pred = jnp.ceil(exp_bin).astype(jnp.int32)
+    elif cfg.policy == "quantile":
+        cdf = jnp.cumsum(probs)
+        pred = jnp.argmax(cdf >= cfg.quantile).astype(jnp.int32)
+    else:  # pragma: no cover - config validation
+        raise ValueError(f"unknown policy {cfg.policy!r}")
+
+    warm = state.steps < cfg.warmup_steps
+    return jnp.where(warm, jnp.asarray(cfg.n_bins - 1, jnp.int32), pred)
+
+
+def observe(cfg: PredictorConfig, state: MarkovState, actual_bin: Array,
+            predicted_bin: Array) -> MarkovState:
+    """Fold one observed step into the chain (online training, §IV-A).
+
+    Misprediction handling (§V): the chain's state is always corrected to
+    the *actual* bin; in ``threshold`` mode edge counts are only flushed
+    into the model after ``mispred_threshold`` consecutive mispredictions
+    (the paper's lazy re-learning), while ``always`` mode learns every
+    transition immediately.
+    """
+    m = cfg.n_bins
+    actual_bin = jnp.asarray(actual_bin, jnp.int32)
+    edge = jnp.zeros((m, m), jnp.float32).at[state.current_bin, actual_bin].add(1.0)
+
+    mispred = predicted_bin != actual_bin
+    consecutive = jnp.where(mispred, state.consecutive_mispred + 1,
+                            jnp.asarray(0, jnp.int32))
+
+    if cfg.update_mode == "always":
+        counts = state.counts * cfg.count_decay + edge
+        pending = state.pending
+    else:
+        flush = consecutive >= cfg.mispred_threshold
+        pending_new = state.pending + edge
+        counts = jnp.where(flush, state.counts * cfg.count_decay + pending_new,
+                           state.counts)
+        pending = jnp.where(flush, jnp.zeros_like(pending_new), pending_new)
+        consecutive = jnp.where(flush, jnp.asarray(0, jnp.int32), consecutive)
+
+    return MarkovState(
+        counts=counts,
+        pending=pending,
+        current_bin=actual_bin,
+        steps=state.steps + 1,
+        mispredictions=state.mispredictions + mispred.astype(jnp.int32),
+        consecutive_mispred=consecutive,
+    )
+
+
+def transition_matrix(state: MarkovState) -> Array:
+    """Row-stochastic transition probabilities P[i, j]."""
+    row_sums = jnp.sum(state.counts, axis=1, keepdims=True)
+    return state.counts / row_sums
+
+
+# ---------------------------------------------------------------------------
+# Periodic-bias predictor (paper §IV-A, first paragraph)
+# ---------------------------------------------------------------------------
+
+
+class PeriodicState(NamedTuple):
+    phase_sum: Array    # [P] running sum per phase
+    phase_count: Array  # [P]
+    step: Array         # int32
+
+
+def init_periodic(period: int) -> PeriodicState:
+    return PeriodicState(phase_sum=jnp.zeros(period),
+                         phase_count=jnp.zeros(period),
+                         step=jnp.asarray(0, jnp.int32))
+
+
+def periodic_predict(state: PeriodicState, period: int) -> Array:
+    """Average of the same phase across previous periods (the 'bias').
+
+    Predicts the *upcoming* step — i.e. phase ``state.step % period``,
+    since ``state.step`` counts completed observations.
+    """
+    phase = state.step % period
+    cnt = state.phase_count[phase]
+    mean = state.phase_sum[phase] / jnp.maximum(cnt, 1.0)
+    # Until a full period has been seen, predict peak (nominal frequency).
+    return jnp.where(cnt > 0, mean, jnp.asarray(1.0))
+
+
+def periodic_observe(state: PeriodicState, w: Array, period: int) -> PeriodicState:
+    phase = state.step % period
+    return PeriodicState(
+        phase_sum=state.phase_sum.at[phase].add(w),
+        phase_count=state.phase_count.at[phase].add(1.0),
+        step=state.step + 1,
+    )

@@ -1,0 +1,222 @@
+"""Joint (V_core, V_bram) optimization under a delay constraint (paper §III, §V).
+
+Given a workload level ``w`` (fraction of peak), the clock period may be
+stretched by ``S = 1/w`` while still meeting QoS.  The feasible region
+
+    d_cp(V_core, V_bram) <= S            (paper Eq. 2, normalized)
+
+is two-dimensional: *many* voltage pairs meet timing, exactly one minimizes
+power (paper Eq. 3).  This module performs the vectorized grid optimization
+and builds the per-frequency operating table that the paper precomputes "at
+design synthesis stage" (§V) for runtime lookup.
+
+Two path-composition modes (DESIGN.md §2):
+
+* ``sum`` — the FPGA critical path: logic/routing delay and BRAM access are
+  *serial* on one register-to-register path (Eq. 1);
+* ``max`` — the TPU roofline: compute, HBM and collective phases overlap, so
+  step latency is the max of the domain terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import characterization as char
+
+Array = jax.Array
+DelayFn = Callable[[Array, Array], Array]   # (v_core, v_bram) -> normalized delay
+PowerFn = Callable[[Array, Array, Array], Array]  # (v_core, v_bram, f_rel) -> power
+
+
+class OperatingPoint(NamedTuple):
+    """One solution of the constrained minimization."""
+
+    v_core: Array   # selected core-rail voltage (V)
+    v_bram: Array   # selected bram/hbm-rail voltage (V)
+    f_rel: Array    # relative frequency in (0, 1]
+    power: Array    # modeled power at the point (arbitrary units)
+    feasible: Array  # bool — False iff no grid point met timing
+
+
+# ---------------------------------------------------------------------------
+# Delay compositions
+# ---------------------------------------------------------------------------
+
+
+def fpga_delay_fn(alpha: float,
+                  core_mix: dict[str, float] | None = None) -> DelayFn:
+    """Paper Eq. 1/2 — serial critical path, normalized to 1 at nominals.
+
+    ``alpha`` is the BRAM share of the nominal critical path delay
+    (``d_m0 / d_l0``).
+    """
+
+    def delay(v_core: Array, v_bram: Array) -> Array:
+        d = (char.core_delay_factor(v_core, core_mix)
+             + alpha * char.bram_delay_factor(v_bram))
+        return d / (1.0 + alpha)
+
+    return delay
+
+
+def tpu_delay_fn(t_compute: float, t_memory: float, t_collective: float,
+                 composition: Literal["max", "sum"] = "max") -> DelayFn:
+    """Roofline composition — terms in seconds from the compiled dry-run.
+
+    Compute and collective phases ride the core/ICI domain; the memory term
+    rides the HBM domain.  Normalized so nominal voltages give delay 1.0.
+    """
+
+    def combine(a: Array, b: Array, c: Array) -> Array:
+        if composition == "max":
+            return jnp.maximum(jnp.maximum(a, b), c)
+        return a + b + c
+
+    nominal = combine(jnp.asarray(t_compute), jnp.asarray(t_memory),
+                      jnp.asarray(t_collective))
+
+    def delay(v_core: Array, v_hbm: Array) -> Array:
+        dc = char.tpu_core_delay_factor(v_core)
+        dm = char.tpu_hbm_delay_factor(v_hbm)
+        return combine(t_compute * dc, t_memory * dm, t_collective * dc) / nominal
+
+    return delay
+
+
+# ---------------------------------------------------------------------------
+# Grid optimizer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VoltageGrids:
+    """Discretized rail set-points (25 mV DC-DC resolution by default)."""
+
+    core: Array
+    bram: Array
+
+    @staticmethod
+    def default(step: float = char.V_STEP,
+                core_rail: char.Rail = char.CORE_RAIL,
+                bram_rail: char.Rail = char.BRAM_RAIL) -> "VoltageGrids":
+        return VoltageGrids(core=core_rail.grid(step), bram=bram_rail.grid(step))
+
+    @staticmethod
+    def core_only(step: float = char.V_STEP) -> "VoltageGrids":
+        """Baseline [24][25]: only V_core scales, V_bram pinned at nominal."""
+        return VoltageGrids(core=char.CORE_RAIL.grid(step),
+                            bram=jnp.array([char.V_BRAM_NOM]))
+
+    @staticmethod
+    def bram_only(step: float = char.V_STEP) -> "VoltageGrids":
+        """Baseline [28]: only V_bram scales, V_core pinned at nominal."""
+        return VoltageGrids(core=jnp.array([char.V_CORE_NOM]),
+                            bram=char.BRAM_RAIL.grid(step))
+
+    @staticmethod
+    def frequency_only() -> "VoltageGrids":
+        """DFS baseline: both rails pinned at nominal."""
+        return VoltageGrids(core=jnp.array([char.V_CORE_NOM]),
+                            bram=jnp.array([char.V_BRAM_NOM]))
+
+
+def optimize_point(delay_fn: DelayFn, power_fn: PowerFn, f_rel: Array,
+                   grids: VoltageGrids,
+                   slack_eps: float = 1e-6) -> OperatingPoint:
+    """Minimize power over the voltage grid subject to timing at ``f_rel``.
+
+    The clock period is stretched by ``S = 1/f_rel``; any grid point with
+    normalized critical-path delay ≤ S meets timing.  Fully vectorized and
+    jit-compatible; ``f_rel`` may be a scalar (vmap for batches).
+    """
+    f_rel = jnp.asarray(f_rel)
+    stretch = 1.0 / jnp.maximum(f_rel, 1e-6)
+
+    vc = grids.core[:, None]        # [C, 1]
+    vb = grids.bram[None, :]        # [1, B]
+    delay = delay_fn(vc, vb)        # [C, B] broadcast
+    power = power_fn(vc, vb, f_rel)  # [C, B]
+    delay, power = jnp.broadcast_arrays(delay, power)
+
+    feasible = delay <= stretch * (1.0 + slack_eps)
+    masked = jnp.where(feasible, power, jnp.inf)
+    flat_idx = jnp.argmin(masked.reshape(-1))
+    ci, bi = jnp.unravel_index(flat_idx, masked.shape)
+    any_feasible = jnp.any(feasible)
+
+    # Fall back to nominal voltages when nothing on the grid meets timing
+    # (cannot happen for f_rel <= 1 with sane grids, but keep it total).
+    v_core = jnp.where(any_feasible, grids.core[ci], grids.core[-1])
+    v_bram = jnp.where(any_feasible, grids.bram[bi], grids.bram[-1])
+    p = jnp.where(any_feasible, masked.reshape(-1)[flat_idx],
+                  power_fn(grids.core[-1], grids.bram[-1], f_rel))
+    return OperatingPoint(v_core=v_core, v_bram=v_bram, f_rel=f_rel,
+                          power=p, feasible=any_feasible)
+
+
+def optimize_batch(delay_fn: DelayFn, power_fn: PowerFn, f_rels: Array,
+                   grids: VoltageGrids) -> OperatingPoint:
+    """vmap of :func:`optimize_point` over a vector of frequency levels."""
+    fn = functools.partial(optimize_point, delay_fn, power_fn, grids=grids)
+    return jax.vmap(fn)(jnp.asarray(f_rels))
+
+
+# ---------------------------------------------------------------------------
+# Synthesis-time operating table (paper §V)
+# ---------------------------------------------------------------------------
+
+
+class OperatingTable(NamedTuple):
+    """Per-frequency-level optimal operating points, for runtime lookup.
+
+    ``f_levels`` is ascending.  ``lookup(f_req)`` returns the lowest level
+    with ``f_level >= f_req`` (guaranteeing QoS), i.e. a ceil-lookup.
+    """
+
+    f_levels: Array   # [L]
+    v_core: Array     # [L]
+    v_bram: Array     # [L]
+    power: Array      # [L]
+
+    def lookup(self, f_req: Array) -> OperatingPoint:
+        idx = jnp.searchsorted(self.f_levels, jnp.asarray(f_req), side="left")
+        idx = jnp.clip(idx, 0, self.f_levels.shape[0] - 1)
+        return OperatingPoint(v_core=self.v_core[idx], v_bram=self.v_bram[idx],
+                              f_rel=self.f_levels[idx], power=self.power[idx],
+                              feasible=jnp.asarray(True))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 3))
+def _build_table_jit(delay_fn, power_fn, f_levels, grids):
+    return optimize_batch(delay_fn, power_fn, f_levels, grids)
+
+
+def build_operating_table(delay_fn: DelayFn, power_fn: PowerFn,
+                          f_levels: Array, grids: VoltageGrids | None = None
+                          ) -> OperatingTable:
+    """Precompute the optimal (V_core, V_bram) per frequency level."""
+    grids = VoltageGrids.default() if grids is None else grids
+    f_levels = jnp.sort(jnp.asarray(f_levels))
+    pts = optimize_batch(delay_fn, power_fn, f_levels, grids)
+    return OperatingTable(f_levels=f_levels, v_core=pts.v_core,
+                          v_bram=pts.v_bram, power=pts.power)
+
+
+def bin_frequency_levels(n_bins: int, margin: float,
+                         f_floor: float = 0.05) -> Array:
+    """Frequency level for each workload bin: bin upper edge + t margin.
+
+    Bin ``i`` covers workload in ``(i/M, (i+1)/M]``.  The margin is
+    *additive* in units of peak throughput, and §V requires ``t > 1/M`` so
+    that the capacity provisioned for bin ``i`` covers a one-bin
+    under-prediction entirely ("the system is able to process the workload
+    with the size of the i+1-th bin").
+    """
+    edges = (jnp.arange(n_bins) + 1.0) / n_bins
+    return jnp.clip(edges + margin, f_floor, 1.0)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the serving/training compute hot spots.
+
+The paper's own contribution is a runtime power controller (no custom
+compute kernel), but its evaluation workloads are DNN accelerators — on
+our TPU adaptation the equivalent hot spots are attention and the
+selective-scan, so those get Pallas kernels:
+
+  flash_attention/ — fused online-softmax attention (causal, sliding
+      window, softcap, GQA); removes the score-sized HBM traffic that
+      dominates the XLA-level memory roofline term.
+  ssm_scan/       — chunked selective-scan (Mamba) with the state carried
+      in VMEM scratch across grid steps.
+
+Each directory holds kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper; ``interpret=True`` on CPU), and ref.py
+(pure-jnp oracle for the allclose test sweeps).
+"""

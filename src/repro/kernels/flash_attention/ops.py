@@ -1,0 +1,51 @@
+"""Public flash-attention op: jit'd wrapper around the Pallas kernel.
+
+On CPU (no TPU available) the kernel executes with ``interpret=True`` —
+the kernel *body* runs in Python for correctness validation; compiled
+performance is a TPU property.  ``flash_attention`` takes GQA-shaped
+inputs (k/v with kv_heads) to avoid materializing the repeated KV.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention import ref as ref_mod
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_kv",
+    "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: [B,Sq,H,D]; k,v: [B,Sk,KV,D] (GQA: H = KV·G). → [B,Sq,H,Dv]."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        scale=scale, block_q=block_q, block_kv=block_kv,
+        interpret=interp)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None):
+    """Oracle with the same GQA signature (expands KV)."""
+    KV = k.shape[2]
+    G = q.shape[2] // KV
+    kf = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vf = jnp.repeat(v, G, axis=2) if G > 1 else v
+    return ref_mod.attention_ref(q, kf, vf, causal=causal, window=window,
+                                 softcap=softcap, scale=scale)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel (fp32 throughout)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None):
+    """q: [B,Sq,H,D]; k,v: [B,Sk,H,D] (kv already GQA-expanded).
+
+    Returns [B,Sq,H,Dv] in q's dtype; math in fp32.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)  # right-aligned positions
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -2.0e38)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return o.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.ssm_scan.ops import selective_scan
+
+__all__ = ["selective_scan"]

@@ -1,0 +1,99 @@
+"""Pallas TPU chunked selective-scan kernel (Mamba-1).
+
+Grid: (batch, d_inner blocks, seq chunks).  The seq-chunk axis is the
+*sequential* ("arbitrary") grid dimension: the running state
+``h [block_d, N]`` lives in a VMEM scratch buffer that persists across
+chunk steps, so the recurrence's working set never touches HBM — HBM
+traffic is exactly one read of (delta, B, C, x) and one write of y,
+versus the XLA associative-scan path that spills [chunk, D, N]
+intermediates.
+
+TPU mapping decisions:
+  * block_d is a multiple of the 128-lane width; the [block_d, N] state
+    tile keeps N (=16 for Mamba-1) in the sublane dimension;
+  * within a chunk the recurrence is a ``fori_loop`` of VPU element-wise
+    ops (a·h + u) — no MXU use, so this kernel is bandwidth-bound by
+    design and its roofline ceiling is the VMEM-resident streaming rate;
+  * the final state is emitted on the last chunk for decode handoff.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(delta_ref, b_ref, c_ref, x_ref, alog_ref, y_ref, hout_ref,
+                 h_scratch, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    A = -jnp.exp(alog_ref[...].astype(jnp.float32))          # [bd, N]
+    delta = delta_ref[...].astype(jnp.float32)               # [C, bd]
+    x = x_ref[...].astype(jnp.float32)                       # [C, bd]
+    Bm = b_ref[...].astype(jnp.float32)                      # [C, N]
+    Cm = c_ref[...].astype(jnp.float32)                      # [C, N]
+
+    def step(t, carry):
+        h, ys = carry
+        a = jnp.exp(delta[t][:, None] * A)                   # [bd,N]
+        u = (delta[t] * x[t])[:, None] * Bm[t][None, :]      # [bd,N]
+        h = a * h + u
+        y = jnp.sum(h * Cm[t][None, :], axis=1)              # [bd]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, 0)
+        return h, ys
+
+    h0 = h_scratch[...]
+    ys0 = jnp.zeros((chunk, delta.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    h_scratch[...] = h
+    y_ref[...] = ys.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        hout_ref[...] = h.astype(hout_ref.dtype)
+
+
+def selective_scan_fwd(delta, B, C, x, A_log, *, chunk: int = 64,
+                       block_d: int = 128, interpret: bool = False):
+    """delta,x: [b,S,D]; B,C: [b,S,N]; A_log: [D,N] → (y [b,S,D], h [b,D,N])."""
+    bsz, S, D = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    block_d = min(block_d, D)
+    assert S % chunk == 0 and D % block_d == 0
+    n_chunks = S // chunk
+    grid = (bsz, D // block_d, n_chunks)
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((None, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((None, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, S, D), x.dtype),
+            jax.ShapeDtypeStruct((bsz, D, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(delta, B, C, x, A_log)
+    return y, h

@@ -1,0 +1,24 @@
+"""Public selective-scan op (jit'd wrapper; interpret=True off-TPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import selective_scan_fwd
+from repro.kernels.ssm_scan.ref import selective_scan_ref  # noqa: F401
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_d", "interpret"))
+def selective_scan(delta, B, C, x, A_log, *, chunk: int = 64,
+                   block_d: int = 128, interpret=None):
+    """delta,x: [b,S,D]; B,C: [b,S,N]; A_log: [D,N] → (y, h_final)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return selective_scan_fwd(delta, B, C, x, A_log, chunk=chunk,
+                              block_d=block_d, interpret=interp)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the selective-scan kernel (Mamba-1 semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(delta, B, C, x, A_log, h0=None):
+    """Sequential reference.
+
+    delta, x: [batch, S, D]; B, C: [batch, S, N]; A_log: [D, N].
+    h_t = exp(delta_t · A) ⊙ h_{t-1} + (delta_t · x_t) ⊗ B_t
+    y_t = ⟨h_t, C_t⟩_N
+    Returns (y [batch,S,D], h_final [batch,D,N]); fp32 math.
+    """
+    bsz, S, D = x.shape
+    N = B.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    d32 = delta.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    B32 = B.astype(jnp.float32)
+    C32 = C.astype(jnp.float32)
+    h = jnp.zeros((bsz, D, N), jnp.float32) if h0 is None else \
+        h0.astype(jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(d32[:, t, :, None] * A[None])          # [b,D,N]
+        u = (d32[:, t] * x32[:, t])[..., None] * B32[:, t, None, :]
+        h = a * h + u
+        y = jnp.einsum("bdn,bn->bd", h, C32[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)                              # [b,S,D]
+    return y.astype(x.dtype), h

@@ -1,0 +1,10 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+``dryrun`` must run as its own process (it sets
+``xla_force_host_platform_device_count=512`` before JAX init); the other
+modules are importable normally.
+"""
+
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape × mesh) cell and extract memory, cost and
+collective analyses for the roofline report.
+
+MUST be executed as a fresh process (the XLA flag above is read at first
+JAX init):  PYTHONPATH=src python -m repro.launch.dryrun [--arch A]
+[--shape S] [--multi-pod|--single-pod|--both] [--out PATH]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo_parse import analyze_hlo
+from repro.analysis.roofline import HW_V5E, model_flops_for, roofline_terms
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.data.pipeline import make_batch_specs
+from repro.models import common, transformer
+from repro.models.common import ParamDef
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import opt_state_layout
+from repro.parallel import sharding as shd
+from repro.serving.engine import make_decode_step, make_prefill
+from repro.serving.kvcache import split_kv_needed
+from repro.train.step import make_train_step
+
+#: Per-arch step tuning for train_4k on 16 GB chips: microbatch count and
+#: sequence-parallel residual stream (DESIGN.md §5).
+TRAIN_OVERRIDES: Dict[str, Dict[str, Any]] = {
+    "gemma2-2b": dict(microbatch=8),
+    "llama3-405b": dict(microbatch=8, seq_shard=True,
+                        grad_accum_dtype="bfloat16"),
+    "gemma3-27b": dict(microbatch=8, seq_shard=True),
+    "llama3.2-1b": dict(microbatch=4),
+    "internvl2-1b": dict(microbatch=4),
+    "qwen3-moe-235b-a22b": dict(microbatch=8, seq_shard=True,
+                                grad_accum_dtype="bfloat16"),
+    "deepseek-v2-236b": dict(microbatch=8, seq_shard=True,
+                             grad_accum_dtype="bfloat16"),
+    "falcon-mamba-7b": dict(microbatch=8, seq_shard=True),
+    "zamba2-2.7b": dict(microbatch=8),
+    "hubert-xlarge": dict(microbatch=4),
+}
+
+
+def _ns(layout, rules):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda d: NamedSharding(rules.mesh, rules.resolve(d.axes, d.shape)),
+        layout, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _batch_ns(specs, rules):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def one(s):
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(rules.mesh, rules.resolve(axes, s.shape))
+
+    return jax.tree.map(one, specs)
+
+
+def _mem_analysis(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:  # pragma: no cover
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        live = (out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+        out["peak_live_bytes_per_device"] = float(live)
+        out["hbm_fraction"] = live / HW_V5E.hbm_bytes
+    return out
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:  # pragma: no cover
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             reduced: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch, reduced=reduced)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "kind": shape.kind}
+    if not ok:
+        return {**base, "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    over = TRAIN_OVERRIDES.get(arch, {}) if shape.kind == "train" else {}
+    seq_shard = bool(over.get("seq_shard", False))
+    # decode *and* prefill caches need split-KV sharding when kv_heads
+    # can't divide the model axis — otherwise the prefill-built cache is
+    # replicated across the TP group (3.5× HBM on llama3-405b prefill)
+    split_kv = shape.kind in ("decode", "prefill") and split_kv_needed(
+        cfg, mesh.shape["model"])
+    rules = shd.default_rules(mesh, fsdp=cfg.fsdp, split_kv=split_kv,
+                              seq_shard=seq_shard)
+
+    layout = transformer.model_layout(cfg)
+    t0 = time.time()
+    try:
+        with shd.use_rules(rules):
+            if shape.kind == "train":
+                tcfg = TrainConfig(
+                    microbatch=int(over.get("microbatch", 0)),
+                    grad_accum_dtype=over.get("grad_accum_dtype", "float32"))
+                step = make_train_step(cfg, tcfg)
+                params_sds = common.abstract_params(layout, jnp.float32)
+                opt_layout = opt_state_layout(layout)
+                mdt = jnp.dtype(cfg.moment_dtype)
+                opt_sds = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, mdt),
+                    common.abstract_params(opt_layout.m, jnp.float32))
+                opt_sds = type(opt_layout)(
+                    step=jax.ShapeDtypeStruct((), jnp.int32),
+                    m=opt_sds,
+                    v=jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                        s.shape, mdt),
+                        common.abstract_params(opt_layout.v, jnp.float32)))
+                batch_sds = make_batch_specs(cfg, shape.global_batch,
+                                             shape.seq_len, "train")
+                p_ns = _ns(layout, rules)
+                o_ns = type(opt_layout)(
+                    step=_ns(opt_layout.step, rules),
+                    m=_ns(opt_layout.m, rules), v=_ns(opt_layout.v, rules))
+                b_ns = _batch_ns(batch_sds, rules)
+                jitted = jax.jit(step, in_shardings=(p_ns, o_ns, b_ns),
+                                 out_shardings=(p_ns, o_ns, None),
+                                 donate_argnums=(0, 1))
+                lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+            elif shape.kind == "prefill":
+                params_sds = common.abstract_params(layout, jnp.bfloat16)
+                p_ns = _ns(layout, rules)
+                batch_sds = make_batch_specs(cfg, shape.global_batch,
+                                             shape.seq_len, "prefill")
+                b_ns = _batch_ns(batch_sds, rules)
+                if cfg.is_encoder_only:
+                    def encode(params, batch):
+                        logits, _, _ = transformer.forward(params, cfg,
+                                                           batch)
+                        return logits
+                    jitted = jax.jit(encode, in_shardings=(p_ns, b_ns))
+                    lowered = jitted.lower(params_sds, batch_sds)
+                else:
+                    prefill = make_prefill(cfg, capacity=shape.seq_len)
+                    c_layout = transformer.cache_layout(cfg,
+                                                        shape.global_batch,
+                                                        shape.seq_len)
+                    c_ns = _ns(c_layout, rules)
+                    jitted = jax.jit(prefill, in_shardings=(p_ns, b_ns),
+                                     out_shardings=(None, c_ns))
+                    lowered = jitted.lower(params_sds, batch_sds)
+            else:  # decode
+                params_sds = common.abstract_params(layout, jnp.bfloat16)
+                p_ns = _ns(layout, rules)
+                c_layout = transformer.cache_layout(cfg, shape.global_batch,
+                                                    shape.seq_len)
+                cache_sds = common.abstract_params(c_layout, jnp.bfloat16)
+                # position/state caches keep their own dtypes
+                cache_sds = jax.tree.map(
+                    lambda d, s: jax.ShapeDtypeStruct(
+                        s.shape,
+                        jnp.int32 if d.init == "constant" else s.dtype),
+                    c_layout, cache_sds,
+                    is_leaf=lambda x: isinstance(x, ParamDef))
+                c_ns = _ns(c_layout, rules)
+                step = make_decode_step(cfg)
+                tok = jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                           jnp.int32)
+                pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+                from jax.sharding import NamedSharding
+                tok_ns = NamedSharding(mesh, rules.resolve(
+                    ("batch", None), tok.shape))
+                pos_ns = NamedSharding(mesh, rules.resolve(
+                    ("batch",), pos.shape))
+                jitted = jax.jit(step,
+                                 in_shardings=(p_ns, c_ns, tok_ns, pos_ns),
+                                 out_shardings=(None, c_ns),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(params_sds, cache_sds, tok, pos)
+        lower_s = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t1
+
+        xla_cost = _cost_analysis(compiled)
+        mem = _mem_analysis(compiled)
+        hlo = compiled.as_text()
+        # loop-aware static analysis (XLA's cost_analysis counts while
+        # bodies once — useless for scanned models; see analysis.hlo_parse)
+        hc = analyze_hlo(hlo)
+        colls = dict(hc.collectives)
+        colls["total"] = hc.coll_total()
+        mf = model_flops_for(cfg, shape, active_params=cfg.active_params())
+        rep = roofline_terms(hc.flops, hc.bytes, hc.coll_total(), mf, chips)
+        top_flops = dict(sorted(hc.flops_by_name.items(),
+                                key=lambda kv: -kv[1])[:8])
+        top_bytes = dict(sorted(hc.by_op.items(),
+                                key=lambda kv: -kv[1])[:10])
+        top_sites = dict(sorted(hc.bytes_by_name.items(),
+                                key=lambda kv: -kv[1])[:12])
+        return {**base, "status": "ok", "chips": chips,
+                "seq_shard": seq_shard, "split_kv": split_kv,
+                "fsdp": cfg.fsdp,
+                "lower_s": round(lower_s, 1),
+                "compile_s": round(compile_s, 1),
+                "memory": mem, "collectives": colls,
+                "xla_cost": {k: xla_cost.get(k) for k in
+                             ("flops", "bytes accessed")},
+                "top_flops": top_flops, "top_bytes": top_bytes,
+                "top_sites": top_sites,
+                "roofline": rep.as_dict()}
+    except Exception as e:  # noqa: BLE001
+        return {**base, "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced configs (CI-speed sanity run)")
+    ap.add_argument("--out", default="benchmarks/dryrun_results.jsonl")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_NAMES
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, reduced=args.reduced)
+                results.append(r)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    rf = r["roofline"]
+                    extra = (f"dom={rf['dominant']} "
+                             f"t={rf['t_step_s']:.4f}s "
+                             f"mfu={rf['mfu_at_roofline']:.2f} "
+                             f"hbm={r['memory'].get('hbm_fraction', -1):.2f} "
+                             f"[{r['lower_s']}s/{r['compile_s']}s]")
+                elif status == "error":
+                    extra = r["error"][:160]
+                else:
+                    extra = r["reason"][:80]
+                print(f"{arch:22s} {shape:12s} {r['mesh']:8s} {status:8s} "
+                      f"{extra}", flush=True)
+    with open(args.out, "a") as f:
+        for r in results:
+            f.write(json.dumps(r) + "\n")
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n{len(results)} cells, {n_err} errors → {args.out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches JAX device state.  Single-pod: 16×16 = 256 chips (data, model);
+multi-pod: 2×16×16 = 512 chips (pod, data, model) — the pod axis carries
+data parallelism (and FSDP for the largest archs) across the
+data-center-network boundary.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Smallest mesh on the actual local devices (tests / examples)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,12 @@
+"""Model zoo: pure-functional JAX models for every assigned architecture.
+
+Public API:
+  transformer.model_layout(cfg)  → ParamDef pytree (shapes + logical axes)
+  common.init_params(key, layout)→ parameter pytree
+  transformer.forward(params, cfg, batch, ...) → (logits, cache, aux)
+  transformer.cache_layout(cfg, batch, seq)    → decode-cache layout
+"""
+
+from repro.models import attention, common, ffn, moe, ssm, transformer
+
+__all__ = ["attention", "common", "ffn", "moe", "ssm", "transformer"]

@@ -1,0 +1,621 @@
+"""Attention: GQA (RoPE, sliding-window, local:global patterns, softcap,
+QK-norm) and MLA (DeepSeek-V2 latent attention with absorbed decode).
+
+Three compute paths, all sharing fp32 online-softmax numerics:
+
+* ``full_attention`` — chunked causal/bidirectional attention.  The query
+  axis is unrolled in Python so each chunk's KV extent is *static*
+  (triangular work, no masked-away FLOPs beyond the diagonal block); the
+  KV axis is a ``lax.scan`` with running (max, sum, acc) — the
+  flash-attention recurrence expressed in XLA.  Doubles as the oracle for
+  the Pallas kernel.
+* ``windowed_attention`` — banded attention for sliding-window layers:
+  each query chunk slices a static ``window + q_chunk`` KV band
+  (O(S·w) FLOPs, not O(S²)).
+* ``decode_attention`` — single-token queries against a KV cache
+  (ring-buffer for window layers; position-masked linear cache for global
+  layers; compressed-latent absorbed matmuls for MLA).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig, ModelConfig
+from repro.models import common
+from repro.models.common import ParamDef, fan_in_def
+from repro.parallel.sharding import shard
+
+Array = jax.Array
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Layouts
+# ---------------------------------------------------------------------------
+
+
+def gqa_layout(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    a = cfg.attention
+    d = cfg.d_model
+    out = {
+        "wq": fan_in_def((d, a.n_heads, a.head_dim),
+                         ("embed", "heads", "head_dim")),
+        # K and V fused into one projection: their backward emits a single
+        # input-cotangent all-reduce instead of two (§Perf iteration —
+        # the per-layer dx psums dominate the collective roofline term).
+        "wkv": fan_in_def((d, 2, a.n_kv_heads, a.head_dim),
+                          ("embed", None, "kv_heads", "head_dim")),
+        "wo": fan_in_def((a.n_heads, a.head_dim, d),
+                         ("heads", "head_dim", "embed"),
+                         n_in=a.n_heads * a.head_dim),
+    }
+    if a.attn_bias:
+        out["bq"] = ParamDef((a.n_heads, a.head_dim),
+                             ("heads", "head_dim"), "zeros")
+        out["bk"] = ParamDef((a.n_kv_heads, a.head_dim),
+                             ("kv_heads", "head_dim"), "zeros")
+        out["bv"] = ParamDef((a.n_kv_heads, a.head_dim),
+                             ("kv_heads", "head_dim"), "zeros")
+    if a.qk_norm:
+        out["q_norm"] = ParamDef((a.head_dim,), (None,), "ones")
+        out["k_norm"] = ParamDef((a.head_dim,), (None,), "ones")
+    return out
+
+
+def mla_layout(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    a = cfg.attention
+    d = cfg.d_model
+    qk = a.qk_nope_dim + a.qk_rope_dim
+    return {
+        "wq_a": fan_in_def((d, a.q_lora_rank), ("embed", None)),
+        "q_norm": ParamDef((a.q_lora_rank,), (None,), "ones"),
+        "wq_b": fan_in_def((a.q_lora_rank, a.n_heads, qk),
+                           (None, "heads", "head_dim")),
+        "wkv_a": fan_in_def((d, a.kv_lora_rank + a.qk_rope_dim),
+                            ("embed", None)),
+        "kv_norm": ParamDef((a.kv_lora_rank,), (None,), "ones"),
+        "wk_b": fan_in_def((a.kv_lora_rank, a.n_heads, a.qk_nope_dim),
+                           (None, "heads", "head_dim")),
+        "wv_b": fan_in_def((a.kv_lora_rank, a.n_heads, a.v_head_dim),
+                           (None, "heads", "head_dim")),
+        "wo": fan_in_def((a.n_heads, a.v_head_dim, d),
+                         ("heads", "head_dim", "embed"),
+                         n_in=a.n_heads * a.v_head_dim),
+    }
+
+
+def attention_layout(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    return mla_layout(cfg) if cfg.attention.kind == "mla" else gqa_layout(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax cores
+# ---------------------------------------------------------------------------
+
+
+def _scores(q: Array, k: Array, scale: float, cap: Optional[float]) -> Array:
+    """[B,Sq,H,D] x [B,Sk,H,D] -> [B,H,Sq,Sk] fp32 (with softcap)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    return common.softcap(s, cap)
+
+
+def _online_chunk_scan(qi: Array, k: Array, v: Array, mask_fn, scale: float,
+                       cap: Optional[float], kv_chunk: int,
+                       return_stats: bool = False):
+    """Attend one query chunk to k/v via a scanned online softmax.
+
+    qi: [B,qc,H,D]; k,v: [B,T,H,D] with T % kv_chunk == 0.
+    ``mask_fn(kv_start)`` returns a [qc, kv_chunk] bool mask (True = keep).
+    With ``return_stats`` also returns the softmax row stats (m, l)
+    [B,H,qc] — the only residuals the flash backward needs.
+    """
+    B, qc, H, D = qi.shape
+    Dv = v.shape[-1]
+    T = k.shape[1]
+    nk = T // kv_chunk
+    kc = k.reshape(B, nk, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, kv_chunk, H, Dv).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        j, kj, vj = inputs
+        s = _scores(qi, kj, scale, cap)                  # [B,H,qc,kc]
+        mask = mask_fn(j * kv_chunk)                     # [qc,kc]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, qc), jnp.float32)
+    a0 = jnp.zeros((B, H, qc, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nk), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3).astype(qi.dtype)     # [B,qc,H,Dv]
+    if return_stats:
+        return out, m, l
+    return out
+
+
+def _kv_extent(q0, q_chunk, T, causal, window, kv_chunk):
+    """Static [t_start, t_end) KV range a query chunk can see (banded)."""
+    if causal:
+        t_end = min(T, q0 + q_chunk)
+        t_end = ((t_end + kv_chunk - 1) // kv_chunk) * kv_chunk
+    else:
+        t_end = T
+    if window is not None:
+        t_start = max(0, q0 - window + 1)
+        t_start = (t_start // kv_chunk) * kv_chunk
+    else:
+        t_start = 0
+    return t_start, t_end
+
+
+def _fa_forward_chunks(q, k, v, causal, window, scale, cap, q_chunk,
+                       kv_chunk, want_stats):
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    nq = S // q_chunk
+    outs, ms, ls = [], [], []
+    for i in range(nq):
+        q0 = i * q_chunk
+        qi = jax.lax.slice_in_dim(q, q0, q0 + q_chunk, axis=1)
+        t0, t_end = _kv_extent(q0, q_chunk, T, causal, window, kv_chunk)
+        ki = jax.lax.slice_in_dim(k, t0, t_end, axis=1)
+        vi = jax.lax.slice_in_dim(v, t0, t_end, axis=1)
+
+        def mask_fn(kv_start, q0=q0, t0=t0):
+            qpos = q0 + jnp.arange(q_chunk)[:, None]
+            kpos = t0 + kv_start + jnp.arange(kv_chunk)[None, :]
+            keep = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                keep &= qpos >= kpos
+            if window is not None:
+                keep &= (qpos - kpos) < window
+            return keep
+
+        o, m, l = _online_chunk_scan(qi, ki, vi, mask_fn, scale, cap,
+                                     kv_chunk, return_stats=True)
+        outs.append(o)
+        if want_stats:
+            ms.append(m)
+            ls.append(l)
+    out = jnp.concatenate(outs, axis=1)
+    if not want_stats:
+        return out, None, None
+    return out, jnp.concatenate(ms, axis=2), jnp.concatenate(ls, axis=2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _full_attention_vjp(q: Array, k: Array, v: Array, causal: bool,
+                        window: Optional[int], scale: float,
+                        cap: Optional[float],
+                        q_chunk: int, kv_chunk: int) -> Array:
+    out, _, _ = _fa_forward_chunks(q, k, v, causal, window, scale, cap,
+                                   q_chunk, kv_chunk, want_stats=False)
+    return out
+
+
+def full_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                   scale: float, cap: Optional[float] = None,
+                   window: Optional[int] = None,
+                   q_chunk: int = 1024, kv_chunk: int = 1024) -> Array:
+    """Chunked full/banded attention with a flash-style backward.
+
+    q,k,v: [B,S,H,D] (kv already GQA-repeated).  Query chunks are a Python
+    loop (static KV extents ⇒ triangular/banded FLOPs); KV chunks are
+    scanned with the online-softmax recurrence.  ``window`` gives sliding-
+    window layers the same treatment with O(S·w) extents.
+
+    The custom VJP saves only the per-row softmax stats (m, l) and
+    recomputes score blocks in the backward — the [S, S]-sized
+    probability tensors never persist to HBM, which removes the dominant
+    memory-roofline term of the autodiff path (EXPERIMENTS.md §Perf).
+    """
+    q_chunk = min(q_chunk, q.shape[1])
+    kv_chunk = min(kv_chunk, k.shape[1])
+    assert q.shape[1] % q_chunk == 0 and k.shape[1] % kv_chunk == 0
+    return _full_attention_vjp(q, k, v, causal, window, scale, cap,
+                               q_chunk, kv_chunk)
+
+
+def _fa_fwd(q, k, v, causal, window, scale, cap, q_chunk, kv_chunk):
+    q_chunk = min(q_chunk, q.shape[1])
+    kv_chunk = min(kv_chunk, k.shape[1])
+    out, m, l = _fa_forward_chunks(q, k, v, causal, window, scale, cap,
+                                   q_chunk, kv_chunk, want_stats=True)
+    return out, (q, k, v, out, m, l)
+
+
+def _fa_bwd(causal, window, scale, cap, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, m, l = res
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    nq = S // q_chunk
+    # D_i = rowsum(dout ⊙ out) — the softmax-backward correction term
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                                   # [B,S,H]
+    dq = jnp.zeros_like(q, jnp.float32)
+    dk = jnp.zeros_like(k, jnp.float32)
+    dv = jnp.zeros_like(v, jnp.float32)
+
+    for i in range(nq):
+        q0 = i * q_chunk
+        t0, t_end = _kv_extent(q0, q_chunk, T, causal, window, kv_chunk)
+        nk = (t_end - t0) // kv_chunk
+        qi = jax.lax.slice_in_dim(q, q0, q0 + q_chunk, axis=1)
+        mi = jax.lax.slice_in_dim(m, q0, q0 + q_chunk, axis=2)  # [B,H,qc]
+        li = jax.lax.slice_in_dim(l, q0, q0 + q_chunk, axis=2)
+        doi = jax.lax.slice_in_dim(dout, q0, q0 + q_chunk, axis=1)
+        di = jax.lax.slice_in_dim(delta, q0, q0 + q_chunk, axis=1)
+        ks = jax.lax.slice_in_dim(k, t0, t_end, axis=1) \
+            .reshape(B, nk, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+        vs = jax.lax.slice_in_dim(v, t0, t_end, axis=1) \
+            .reshape(B, nk, kv_chunk, H, v.shape[-1]) \
+            .transpose(1, 0, 2, 3, 4)
+
+        def body(dq_acc, inputs, q0=q0, t0=t0):
+            j, kj, vj = inputs
+            raw = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                             preferred_element_type=jnp.float32) * scale
+            if cap is not None:
+                t = jnp.tanh(raw / cap)
+                s = cap * t
+            else:
+                s = raw
+            qpos = q0 + jnp.arange(q_chunk)[:, None]
+            kpos = t0 + j * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            keep = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                keep &= qpos >= kpos
+            if window is not None:
+                keep &= (qpos - kpos) < window
+            s = jnp.where(keep[None, None], s, NEG_INF)
+            p = jnp.exp(s - mi[..., None]) / \
+                jnp.maximum(li, 1e-30)[..., None]              # [B,H,q,k]
+            dp = jnp.einsum("bqhd,bkhd->bhqk", doi, vj,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - di.transpose(0, 2, 1)[..., None])
+            if cap is not None:
+                ds = ds * (1.0 - jnp.square(t))
+            ds = jnp.where(keep[None, None], ds, 0.0) * scale
+            dq_new = dq_acc + jnp.einsum(
+                "bhqk,bkhd->bqhd", ds.astype(kj.dtype), kj,
+                preferred_element_type=jnp.float32)
+            dk_j = jnp.einsum("bhqk,bqhd->bkhd", ds.astype(qi.dtype), qi,
+                              preferred_element_type=jnp.float32)
+            dv_j = jnp.einsum("bhqk,bqhd->bkhd",
+                              p.astype(doi.dtype), doi,
+                              preferred_element_type=jnp.float32)
+            return dq_new, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, q_chunk, H, D), jnp.float32)
+        dq_i, (dk_js, dv_js) = jax.lax.scan(
+            body, dq0, (jnp.arange(nk), ks, vs))
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, dq_i, q0, axis=1)
+        span = t_end - t0
+        dk_i = dk_js.transpose(1, 0, 2, 3, 4).reshape(B, span, H, D)
+        dv_i = dv_js.transpose(1, 0, 2, 3, 4).reshape(B, span, H,
+                                                      v.shape[-1])
+        dk = dk.at[:, t0:t_end].add(dk_i)
+        dv = dv.at[:, t0:t_end].add(dv_i)
+
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_full_attention_vjp.defvjp(_fa_fwd, _fa_bwd)
+
+
+def windowed_attention(q: Array, k: Array, v: Array, *, window: int,
+                       scale: float, cap: Optional[float] = None,
+                       q_chunk: int = 1024) -> Array:
+    """Banded causal attention: each token sees the previous ``window``
+    positions (inclusive of self).  O(S·window) FLOPs.
+    q,k,v: [B,S,H,D] aligned (self-attention)."""
+    B, S, H, D = q.shape
+    q_chunk = min(q_chunk, S)
+    assert S % q_chunk == 0
+    nq = S // q_chunk
+    band = min(window + q_chunk, S)
+
+    def body(_, i):
+        q0 = i * q_chunk
+        qi = jax.lax.dynamic_slice_in_dim(q, q0, q_chunk, axis=1)
+        start = jnp.clip(q0 + q_chunk - band, 0, S - band)
+        ki = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        s = _scores(qi, ki, scale, cap)                   # [B,H,qc,band]
+        qpos = q0 + jnp.arange(q_chunk)[:, None]
+        kpos = start + jnp.arange(band)[None, :]
+        keep = (qpos >= kpos) & (qpos - kpos < window)
+        s = jnp.where(keep[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vi.dtype), vi,
+                       preferred_element_type=jnp.float32)
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nq))    # [nq,B,qc,H,D]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     valid: Array, *, scale: float,
+                     cap: Optional[float] = None) -> Array:
+    """Single-step attention over a cache.
+
+    q: [B,1,H,D]; caches: [B,T,H,D]; valid: [B,T] bool.
+    The cache seq axis may be sharded ("kv_seq" → model); the softmax over
+    it then lowers to psum collectives (split-KV decode).
+    """
+    s = _scores(q, k_cache, scale, cap)                   # [B,H,1,T]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def _maybe_pallas_full(cfg, q, kf, vf, *, causal, scale, cap, window=None):
+    """Route to the Pallas flash kernel when enabled (TPU), else XLA path."""
+    if getattr(cfg, "_use_pallas", False):  # set by kernels.ops.enable()
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, kf, vf, causal=causal, scale=scale,
+                                      softcap=cap, window=window)
+    return full_attention(q, kf, vf, causal=causal, scale=scale, cap=cap,
+                          window=window, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk)
+
+
+def _prefill_gqa_cache(k: Array, v: Array, *, window: Optional[int],
+                       capacity: int) -> Dict[str, Array]:
+    """Build a decode cache from prefill K/V.
+
+    Global layers: K/V padded to ``capacity`` with position tags.  Local
+    layers: ring buffer of ``min(window, capacity)`` — the last ``T`` keys
+    scattered to slot ``pos % T`` so subsequent decode writes land
+    consistently."""
+    B, S = k.shape[:2]
+    if window is not None:
+        T = min(window, capacity)
+        n_tail = min(S, T)
+        kt = k[:, S - n_tail:]
+        vt = v[:, S - n_tail:]
+        pos_tail = jnp.arange(S - n_tail, S, dtype=jnp.int32)
+        slots = pos_tail % T
+        shape = (B, T) + k.shape[2:]
+        ck = jnp.zeros(shape, k.dtype).at[:, slots].set(kt)
+        cv = jnp.zeros(shape, v.dtype).at[:, slots].set(vt)
+        cpos = jnp.full((T,), -1, jnp.int32).at[slots].set(pos_tail)
+        cpos = jnp.broadcast_to(cpos, (B, T))
+        return {"k": ck, "v": cv, "pos": cpos}
+    assert S <= capacity, (S, capacity)
+    pad = capacity - S
+    ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cpos = jnp.where(jnp.arange(capacity) < S, jnp.arange(capacity), -1)
+    cpos = jnp.broadcast_to(cpos.astype(jnp.int32), (B, capacity))
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def gqa_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig, *,
+              positions: Array, is_local: bool,
+              cache: Optional[Dict[str, Array]] = None,
+              cache_pos: Optional[Array] = None,
+              return_state: bool = False,
+              cache_capacity: Optional[int] = None
+              ) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """One GQA attention block (no residual/norm — the layer wraps those).
+
+    Training/prefill: ``cache`` is None (``return_state=True`` additionally
+    builds the decode cache).  Decode: ``cache`` holds k/v (ring buffer of
+    size ``window`` for local layers) and is functionally updated.
+    """
+    a = cfg.attention
+    B, S, _ = x.shape
+    scale = 1.0 / math.sqrt(a.head_dim)
+    theta = a.rope_local_theta if (is_local and a.rope_local_theta) \
+        else a.rope_theta
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    kv = jnp.einsum("bsd,dchk->bschk", x, params["wkv"].astype(x.dtype))
+    kv = shard(kv, ("batch", None, None, "kv_heads", None))
+    k, v = kv[:, :, 0], kv[:, :, 1]
+    if a.attn_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if a.qk_norm:
+        q = common.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = common.apply_rope(q, positions, theta)
+    k = common.apply_rope(k, positions, theta)
+    q = shard(q, ("batch", None, "heads", None))
+    k = shard(k, ("batch", None, "kv_heads", None))
+    v = shard(v, ("batch", None, "kv_heads", None))
+
+    groups = a.n_heads // a.n_kv_heads
+    window = a.sliding_window if is_local else None
+    new_cache = None
+
+    if cache is None:
+        kf = jnp.repeat(k, groups, axis=2) if groups > 1 else k
+        vf = jnp.repeat(v, groups, axis=2) if groups > 1 else v
+        eff_window = window if (window is not None and window < S) else None
+        o = _maybe_pallas_full(cfg, q, kf, vf, causal=cfg.causal,
+                               scale=scale, cap=a.attn_softcap,
+                               window=eff_window)
+        if return_state:
+            new_cache = _prefill_gqa_cache(
+                k, v, window=window, capacity=cache_capacity or S)
+    else:
+        # --- decode: write new k/v, then attend over the cache ----------
+        assert S == 1 and cache_pos is not None
+        T = cache["k"].shape[1]
+        slot = (cache_pos % T).astype(jnp.int32)          # ring for local
+        bidx = jnp.arange(B)
+        ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        cpos = cache["pos"].at[bidx, slot].set(cache_pos.astype(jnp.int32))
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+        valid = cpos >= 0
+        valid &= cpos <= cache_pos[:, None]
+        if window is not None:
+            valid &= (cache_pos[:, None] - cpos) < window
+        kf = jnp.repeat(ck, groups, axis=2) if groups > 1 else ck
+        vf = jnp.repeat(cv, groups, axis=2) if groups > 1 else cv
+        o = decode_attention(q, kf.astype(q.dtype), vf.astype(q.dtype),
+                             valid, scale=scale, cap=a.attn_softcap)
+
+    o = shard(o, ("batch", None, "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return shard(y, ("batch", "seq", "embed")), new_cache
+
+
+def gqa_cache_layout(cfg: ModelConfig, batch: int, seq_len: int,
+                     is_local: bool) -> Dict[str, ParamDef]:
+    """Per-layer decode cache (ring buffer of ``window`` for local layers)."""
+    a = cfg.attention
+    T = min(a.sliding_window, seq_len) if (is_local and a.sliding_window) \
+        else seq_len
+    kv_axes = ("batch", "kv_seq", "kv_heads", "head_dim")
+    return {
+        "k": ParamDef((batch, T, a.n_kv_heads, a.head_dim), kv_axes, "zeros"),
+        "v": ParamDef((batch, T, a.n_kv_heads, a.head_dim), kv_axes, "zeros"),
+        "pos": ParamDef((batch, T), ("batch", "kv_seq"), "constant",
+                        scale=-1.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig, *,
+              positions: Array, is_local: bool = False,
+              cache: Optional[Dict[str, Array]] = None,
+              cache_pos: Optional[Array] = None,
+              return_state: bool = False,
+              cache_capacity: Optional[int] = None
+              ) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    a = cfg.attention
+    B, S, _ = x.shape
+    qk_dim = a.qk_nope_dim + a.qk_rope_dim
+    scale = 1.0 / math.sqrt(qk_dim)
+
+    cq = common.rms_norm(
+        jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(x.dtype)),
+        params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
+    q_rope = common.apply_rope(q_rope, positions, a.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(x.dtype))
+    c_kv = common.rms_norm(ckv_full[..., :a.kv_lora_rank], params["kv_norm"],
+                           cfg.norm_eps)
+    k_rope = ckv_full[..., None, a.kv_lora_rank:]          # [B,S,1,rope]
+    k_rope = common.apply_rope(k_rope, positions, a.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        # Decompressed path (training / prefill): materialize per-head K,V.
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv,
+                            params["wk_b"].astype(x.dtype))
+        v = jnp.einsum("bsr,rhv->bshv", c_kv, params["wv_b"].astype(x.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope,
+                                      (B, S, a.n_heads, a.qk_rope_dim))],
+            axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qf = shard(qf, ("batch", None, "heads", None))
+        k = shard(k, ("batch", None, "heads", None))
+        v = shard(v, ("batch", None, "heads", None))
+        o = full_attention(qf, k, v, causal=cfg.causal, scale=scale,
+                           q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        if return_state:
+            cap_len = cache_capacity or S
+            pad = cap_len - S
+            new_cache = {
+                "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+                "k_rope": jnp.pad(k_rope[:, :, 0], ((0, 0), (0, pad),
+                                                    (0, 0))),
+            }
+    else:
+        # Absorbed decode over the *compressed* latent cache — the MLA
+        # serving win: cache is [B,T,r] + [B,T,rope], not per-head.
+        assert S == 1 and cache_pos is not None
+        T = cache["c_kv"].shape[1]
+        bidx = jnp.arange(B)
+        ckv_c = cache["c_kv"].at[bidx, cache_pos].set(
+            c_kv[:, 0].astype(cache["c_kv"].dtype))
+        kr_c = cache["k_rope"].at[bidx, cache_pos].set(
+            k_rope[:, 0, 0].astype(cache["k_rope"].dtype))
+        new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
+
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope,
+                           params["wk_b"].astype(x.dtype))  # absorb W_UK
+        s = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_c.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshp,btp->bhst", q_rope, kr_c.astype(x.dtype),
+                          preferred_element_type=jnp.float32)) * scale
+        valid = jnp.arange(T)[None, :] <= cache_pos[:, None]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", p.astype(x.dtype),
+                         ckv_c.astype(x.dtype))
+        o = jnp.einsum("bshr,rhv->bshv", ctx, params["wv_b"].astype(x.dtype))
+
+    o = shard(o, ("batch", None, "heads", None))
+    y = jnp.einsum("bshv,hvd->bsd", o, params["wo"].astype(x.dtype))
+    return shard(y, ("batch", "seq", "embed")), new_cache
+
+
+def mla_cache_layout(cfg: ModelConfig, batch: int, seq_len: int,
+                     is_local: bool = False) -> Dict[str, ParamDef]:
+    a = cfg.attention
+    return {
+        "c_kv": ParamDef((batch, seq_len, a.kv_lora_rank),
+                         ("batch", "kv_seq", None), "zeros"),
+        "k_rope": ParamDef((batch, seq_len, a.qk_rope_dim),
+                           ("batch", "kv_seq", None), "zeros"),
+    }
+
+
+def attention_apply(params, x, cfg, **kw):
+    if cfg.attention.kind == "mla":
+        return mla_apply(params, x, cfg, **kw)
+    return gqa_apply(params, x, cfg, **kw)
+
+
+def attention_prefill_cache_layout(cfg, batch, prefill_len, capacity,
+                                   is_local):
+    """Layout produced by ``return_state`` prefill (before engine padding)."""
+    return attention_cache_layout(cfg, batch, capacity, is_local)
+
+
+def attention_cache_layout(cfg, batch, seq_len, is_local):
+    if cfg.attention.kind == "mla":
+        return mla_cache_layout(cfg, batch, seq_len, is_local)
+    return gqa_cache_layout(cfg, batch, seq_len, is_local)

@@ -1,0 +1,158 @@
+"""Shared model machinery: parameter layouts, norms, RoPE, losses.
+
+A model is described by a *layout* — a pytree of :class:`ParamDef` leaves
+(shape + logical axes + init) — from which both the parameter pytree
+(``init_params``) and the sharding-spec pytree (``parallel.param_specs``)
+derive mechanically, so they can never drift apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | zeros | ones | constant
+    scale: float = 0.02      # stddev for "normal", value for "constant"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def fan_in_def(shape, axes, n_in: Optional[int] = None) -> ParamDef:
+    """Normal init with 1/sqrt(fan_in) stddev (fan_in = first dim by default)."""
+    n_in = n_in if n_in is not None else shape[0]
+    return ParamDef(tuple(shape), tuple(axes), "normal",
+                    scale=float(1.0 / np.sqrt(max(n_in, 1))))
+
+
+def stacked(layout: Any, n: int) -> Any:
+    """Prepend a scanned 'layers' dim to every leaf of a layer layout."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(d, shape=(n,) + d.shape,
+                                      axes=("layers",) + d.axes),
+        layout, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_params(key: Array, layout: Any, dtype: Any = jnp.float32) -> Any:
+    """Materialize a parameter pytree from a layout (deterministic per-path)."""
+    leaves, treedef = jax.tree.flatten(
+        layout, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        elif d.init == "constant":
+            out.append(jnp.full(d.shape, d.scale, dtype))
+        else:
+            out.append(d.scale * jax.random.normal(k, d.shape, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(layout: Any, dtype: Any = jnp.float32) -> Any:
+    """ShapeDtypeStruct pytree — for dry-run lowering without allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        layout, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_count(layout: Any) -> int:
+    leaves = jax.tree.leaves(layout, is_leaf=lambda x: isinstance(x, ParamDef))
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    """RMSNorm with fp32 accumulation, cast back to input dtype."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotate pairs (x[..., :h], x[..., h:]) by position-dependent angles.
+
+    x: [..., seq, n_heads, head_dim] (head_dim even);
+    positions: broadcastable to [..., seq].
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                      # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]                      # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: Array, labels: Array, z_loss: float = 0.0,
+                  mask: Optional[Array] = None) -> Tuple[Array, Dict[str, Array]]:
+    """Token cross-entropy in fp32 with optional z-loss and padding mask.
+
+    logits: [..., vocab]; labels: [...] int32.  Returns (scalar, metrics).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    z = jnp.sum(zl * mask) / denom
+    total = loss + z_loss * z
+    return total, {"ce": loss, "z_loss": z,
+                   "accuracy": jnp.sum((jnp.argmax(logits, -1) == labels)
+                                       * mask) / denom}

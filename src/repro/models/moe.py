@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN with GShard-style dense dispatch/combine.
+
+Tokens are reshaped into groups of ``group_size``; a top-k softmax router
+assigns each token to experts with a fixed per-expert capacity
+``C = ceil(group_size * top_k * capacity_factor / n_experts)``.  Dispatch
+and combine are one-hot einsums — the canonical XLA-native formulation:
+with experts sharded over the model axis (EP) and groups over data, GSPMD
+lowers the dispatch to all-to-alls.  Overflowing tokens are dropped (their
+residual path carries them), underflow slots are zero-padded.
+
+Aux losses: Switch-style load-balancing and router z-loss.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, activation, fan_in_def
+from repro.models import ffn as ffn_mod
+from repro.parallel.sharding import shard
+
+Array = jax.Array
+
+
+def moe_layout(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert
+    scale = float(1.0 / np.sqrt(d))
+    out = {
+        "router": ParamDef((d, m.n_experts), ("embed", None), "normal",
+                           scale=scale),
+        # gate and up fused (one grouped matmul, one backward dx psum —
+        # same §Perf trick as the dense FFN)
+        "w_in": ParamDef((m.n_experts, d, 2, f),
+                         ("expert", "embed", None, "expert_mlp"), "normal",
+                         scale=scale),
+        "w_down": ParamDef((m.n_experts, f, d), ("expert", "expert_mlp",
+                                                 "embed"), "normal",
+                           scale=float(1.0 / np.sqrt(f))),
+    }
+    if m.n_shared:
+        out["shared"] = ffn_mod.ffn_layout(d, m.n_shared * f)
+    return out
+
+
+def _capacity(group_size: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(np.ceil(group_size * m.top_k * m.capacity_factor / m.n_experts))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def moe_apply(params: Dict, x: Array, cfg: ModelConfig
+              ) -> Tuple[Array, Dict[str, Array]]:
+    """x: [B,S,d] → (y, aux_losses)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    n_tokens = B * S
+    gs = min(m.group_size, n_tokens)
+    n_groups = n_tokens // gs
+    assert n_groups * gs == n_tokens, (n_tokens, gs)
+    cap = _capacity(gs, cfg)
+    dt = x.dtype
+
+    xg = x.reshape(n_groups, gs, d)
+    xg = shard(xg, ("batch", None, "embed"))
+
+    # --- router (fp32) ----------------------------------------------------
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)   # [g,s,k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # --- capacity assignment ----------------------------------------------
+    onehot = jax.nn.one_hot(expert_idx, m.n_experts, dtype=jnp.float32)
+    # position of each (token, k) within its expert queue, priority by k
+    # then sequence order (GShard).
+    flat = onehot.transpose(0, 2, 1, 3).reshape(n_groups, m.top_k * gs,
+                                                m.n_experts)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat
+    pos_in_expert = pos_in_expert.reshape(n_groups, m.top_k, gs,
+                                          m.n_experts).transpose(0, 2, 1, 3)
+    keep = (pos_in_expert < cap) * onehot                   # [g,s,k,e]
+    slot = jnp.sum(pos_in_expert * keep, axis=-1)           # [g,s,k]
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32)  # [g,s,k,c]
+
+    # dispatch/combine tensors
+    disp = jnp.einsum("gske,gskc->gsec", keep, slot_oh)     # [g,s,e,c] 0/1
+    comb = jnp.einsum("gsk,gske,gskc->gsec", gate_vals, keep, slot_oh)
+
+    disp = shard(disp.astype(dt), ("batch", None, "expert", None))
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)             # [g,e,c,d]
+    xe = shard(xe, ("batch", "expert", None, "embed"))
+
+    # --- expert FFN (gated, fused in-proj) -----------------------------------
+    act = activation(cfg.act)
+    gu = jnp.einsum("gecd,edxf->gecxf", xe, params["w_in"].astype(dt))
+    gu = shard(gu, ("batch", "expert", None, None, "expert_mlp"))
+    h = act(gu[:, :, :, 0]) * gu[:, :, :, 1]
+    h = shard(h, ("batch", "expert", None, "expert_mlp"))
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(dt))
+    ye = shard(ye, ("batch", "expert", None, "embed"))
+
+    y = jnp.einsum("gsec,gecd->gsd", comb.astype(dt), ye)
+    y = y.reshape(B, S, d)
+
+    if m.n_shared:
+        y = y + ffn_mod.ffn_apply(params["shared"], x, cfg)
+
+    # --- aux losses ---------------------------------------------------------
+    # load balance: E * mean_e(frac_tokens_e * mean_router_prob_e)
+    frac = jnp.mean(jnp.max(onehot, axis=2), axis=1)        # [g,e]
+    mean_prob = jnp.mean(probs, axis=1)                     # [g,e]
+    lb = m.n_experts * jnp.mean(jnp.sum(frac * mean_prob, axis=-1))
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"moe_load_balance": lb, "moe_router_z": z,
+           "moe_dropped": 1.0 - jnp.mean(jnp.sum(keep, axis=(2, 3)))
+           / m.top_k}
+    return shard(y, ("batch", None, "embed")), aux
+
+
+def moe_aux_loss(cfg: ModelConfig, aux: Dict[str, Array]) -> Array:
+    m = cfg.moe
+    return (m.aux_loss_weight * aux["moe_load_balance"]
+            + m.router_z_weight * aux["moe_router_z"])

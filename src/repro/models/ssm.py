@@ -1,0 +1,328 @@
+"""Selective state-space blocks: Mamba-1 (per-channel state) and Mamba-2
+(SSD, scalar-per-head decay), TPU-adapted.
+
+The recurrence ``h_t = a_t ⊙ h_{t-1} + u_t`` is evaluated with a *chunked*
+scan: a sequential ``lax.scan`` over chunks carrying the state, and a
+parallel ``lax.associative_scan`` within each chunk.  The [B, chunk, ...,
+d_state] working set is formed per chunk inside the scan body, so the full
+[B, S, d_inner, N] tensor is never materialized — this is the VMEM-sized
+blocking the Pallas kernel mirrors (kernels/ssm_scan), and bounds HBM
+traffic for 500k-token contexts.
+
+Decode is O(1) in context length: the cache is the state ``h`` plus a
+(d_conv-1)-deep conv ring — the SSM's entire analogue of a KV cache.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, fan_in_def
+from repro.parallel.sharding import shard
+
+Array = jax.Array
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+# ---------------------------------------------------------------------------
+# Layouts
+# ---------------------------------------------------------------------------
+
+
+def mamba_layout(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    n = s.d_state
+    out = {
+        "in_proj": fan_in_def((d, 2 * di), ("embed", "inner")),
+        "conv_w": ParamDef((s.d_conv, di), ("conv", "inner"), "normal",
+                           scale=float(1.0 / np.sqrt(s.d_conv))),
+        "conv_b": ParamDef((di,), ("inner",), "zeros"),
+        "out_proj": fan_in_def((di, d), ("inner", "embed")),
+        "D": ParamDef((di,), ("inner",), "ones"),
+    }
+    if s.kind == "mamba1":
+        r = dt_rank(cfg)
+        out.update({
+            "x_proj": fan_in_def((di, r + 2 * n), ("inner", None)),
+            "dt_proj": fan_in_def((r, di), (None, "inner")),
+            "dt_bias": ParamDef((di,), ("inner",), "constant", scale=-4.6),
+            # A_log init: A = -exp(A_log); log(arange(1..N)) standard init
+            "A_log": ParamDef((di, n), ("inner", "state"), "constant",
+                              scale=0.5),
+        })
+    else:  # mamba2 (SSD)
+        h = s.n_heads(d)
+        out.update({
+            "w_bc": fan_in_def((d, 2 * n), ("embed", None)),
+            "w_dt": fan_in_def((d, h), ("embed", "inner")),
+            "dt_bias": ParamDef((h,), ("inner",), "constant", scale=-4.6),
+            "A_log": ParamDef((h,), ("inner",), "constant", scale=0.5),
+            "gate_norm": ParamDef((di,), ("inner",), "ones"),
+        })
+    return out
+
+
+def mamba_cache_layout(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    n = s.d_state
+    if s.kind == "mamba1":
+        h_shape, h_axes = (batch, di, n), ("batch", "inner", "state")
+    else:
+        nh, p = s.n_heads(cfg.d_model), s.head_dim
+        h_shape, h_axes = (batch, nh, p, n), ("batch", "inner", None, "state")
+    return {
+        "h": ParamDef(h_shape, h_axes, "zeros"),
+        "conv": ParamDef((batch, s.d_conv - 1, di),
+                         ("batch", None, "inner"), "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked linear scan
+# ---------------------------------------------------------------------------
+
+
+def _assoc_combine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return a2 * a1, a2 * b1 + b2
+
+
+def chunked_scan(make_chunk, seq_len: int, chunk: int, h0: Array,
+                 out_fn):
+    """Run ``h_t = a ⊙ h + u`` over chunks.
+
+    ``make_chunk(c0)`` is called inside the scan body with the chunk start
+    index and must return (log_a, u, extras) with shapes
+    [B, chunk, *state]; ``out_fn(h_all, extras)`` maps per-step states to
+    the chunk output.  Returns (stacked outputs [B, S, ...], final state).
+    """
+    chunk = min(chunk, seq_len)
+    assert seq_len % chunk == 0
+    nc = seq_len // chunk
+
+    def body(h, idx):
+        log_a, u, extras = make_chunk(idx * chunk)
+        a = jnp.exp(log_a)
+        a_cum, h_zero = jax.lax.associative_scan(
+            _assoc_combine, (a, u), axis=1)
+        h_all = h_zero + a_cum * h[:, None]
+        y = out_fn(h_all, extras)
+        return h_all[:, -1], y
+
+    h_final, ys = jax.lax.scan(body, h0, jnp.arange(nc))
+    # ys: [nc, B, chunk, ...] → [B, S, ...]
+    ys = jnp.moveaxis(ys, 0, 1)
+    out = ys.reshape((ys.shape[0], seq_len) + ys.shape[3:])
+    return out, h_final
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over seq; x [B,S,D], w [K,D]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b.astype(x.dtype)
+
+
+def mamba_apply(params: Dict, x: Array, cfg: ModelConfig, *,
+                cache: Optional[Dict[str, Array]] = None,
+                return_state: bool = False
+                ) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """One Mamba block (norm/residual handled by the layer wrapper).
+
+    Training/prefill: ``cache=None`` (pass ``return_state=True`` to get the
+    final state for a subsequent decode).  Decode: S must be 1.
+    """
+    s = cfg.ssm
+    B, S, d = x.shape
+    di = s.d_inner(d)
+    dt = x.dtype
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = shard(x_in, ("batch", None, "inner"))
+
+    decode = cache is not None and S == 1
+    if decode:
+        conv_ctx = jnp.concatenate([cache["conv"].astype(dt), x_in], axis=1)
+        new_conv = conv_ctx[:, 1:]
+        w = params["conv_w"].astype(dt)
+        xc = jnp.einsum("bkd,kd->bd", conv_ctx, w)[:, None] \
+            + params["conv_b"].astype(dt)
+    else:
+        xc = _causal_conv(x_in, params["conv_w"], params["conv_b"])
+        new_conv = x_in[:, -(s.d_conv - 1):] if return_state else None
+    xc = jax.nn.silu(xc)
+
+    if s.kind == "mamba1":
+        y, h_final = _mamba1_core(params, xc, cfg, cache, decode)
+    else:
+        y, h_final = _mamba2_core(params, xc, x, cfg, cache, decode)
+
+    if s.kind == "mamba2":
+        from repro.models.common import rms_norm
+        y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    else:
+        y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt))
+    out = shard(out, ("batch", "seq", "embed"))
+
+    new_cache = None
+    if decode or return_state:
+        new_cache = {"h": h_final, "conv": new_conv}
+    return out, new_cache
+
+
+def _mamba1_core(params, xc, cfg, cache, decode):
+    s = cfg.ssm
+    B, S, di = xc.shape
+    n = s.d_state
+    r = dt_rank(cfg)
+    dt_ = xc.dtype
+
+    proj = jnp.einsum("bsd,de->bse", xc, params["x_proj"].astype(dt_))
+    dt_in, Bm, Cm = jnp.split(proj, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, params["dt_proj"].astype(dt_))
+        .astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))        # [di,n]
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    xf = xc.astype(jnp.float32)
+
+    if decode:
+        h0 = cache["h"].astype(jnp.float32)                   # [B,di,n]
+        log_a = delta[:, 0, :, None] * A[None]                # [B,di,n]
+        u = (delta * xf)[:, 0, :, None] * Bm[:, 0, None, :]
+        h = jnp.exp(log_a) * h0 + u
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+        y = y + params["D"].astype(jnp.float32) * xf
+        return y.astype(dt_), h
+
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+
+    def make_chunk(c0):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, c0, min(s.chunk, S), 1)
+        d_c, B_c, C_c, x_c = sl(delta), sl(Bm), sl(Cm), sl(xf)
+        log_a = d_c[..., None] * A[None, None]                # [B,c,di,n]
+        u = (d_c * x_c)[..., None] * B_c[:, :, None, :]
+        return log_a, u, C_c
+
+    def out_fn(h_all, C_c):
+        return jnp.einsum("bcdn,bcn->bcd", h_all, C_c)
+
+    y, h_final = chunked_scan(make_chunk, S, s.chunk, h0, out_fn)
+    y = y + params["D"].astype(jnp.float32) * xf
+    return y.astype(dt_), h_final
+
+
+def _mamba2_core(params, xc, x_raw, cfg, cache, decode):
+    s = cfg.ssm
+    B, S, di = xc.shape
+    n, p = s.d_state, s.head_dim
+    nh = di // p
+    dt_ = xc.dtype
+
+    bc = jnp.einsum("bsd,de->bse", x_raw, params["w_bc"].astype(dt_))
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)    # [B,S,n]
+    delta = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x_raw, params["w_dt"].astype(dt_))
+        .astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))         # [nh]
+    xh = xc.astype(jnp.float32).reshape(B, S, nh, p)
+
+    if decode:
+        h0 = cache["h"].astype(jnp.float32)                   # [B,nh,p,n]
+        log_a = (delta[:, 0] * A[None])[:, :, None, None]
+        u = (delta[:, 0, :, None] * xh[:, 0])[..., None] \
+            * Bm[:, 0, None, None, :]
+        h = jnp.exp(log_a) * h0 + u
+        y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, 0])
+        y = y + xh[:, 0] * 1.0
+        y = y.reshape(B, 1, di)
+        return y.astype(dt_), h
+
+    y, h_final = _ssd_matmul_scan(delta, Bm, Cm, xh, A, s.chunk)
+    y = y + xh
+    return y.reshape(B, S, di).astype(dt_), h_final
+
+
+def _ssd_matmul_scan(delta, Bm, Cm, xh, A, chunk):
+    """Mamba-2 SSD block-decomposition (arXiv:2405.21060 §6) — the
+    matmul-native formulation.
+
+    Within a chunk, outputs are an attention-like matmul against the
+    decay-weighted Gram matrix ``(C Bᵀ) ⊙ L`` (all [c, c] per head); the
+    inter-chunk state [nh, p, n] is carried by a sequential scan.  Nothing
+    of size [c, p, n] is ever materialized — the original elementwise scan
+    streamed exactly such tensors, which made zamba2 train 270× more
+    HBM-bound than MXU-bound (see EXPERIMENTS.md §Perf iteration 1).
+
+    delta: [B,S,nh]; Bm, Cm: [B,S,n]; xh: [B,S,nh,p]; A: [nh].
+    Returns (y [B,S,nh,p], h_final [B,nh,p,n]); fp32 math.
+    """
+    B, S, nh = delta.shape
+    p = xh.shape[-1]
+    n = Bm.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    h0 = jnp.zeros((B, nh, p, n), jnp.float32)
+
+    bf16 = jnp.bfloat16
+
+    def body(h, idx):
+        c0 = idx * c
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, c0, c, 1)
+        d_c, B_c, C_c, x_c = sl(delta), sl(Bm), sl(Cm), sl(xh)
+        la = d_c * A[None, None]                    # [B,c,nh] log-decay ≤ 0
+        cum = jnp.cumsum(la, axis=1)                # A_t (inclusive prefix)
+        # intra-chunk: M[t,τ] = exp(A_t − A_τ) · (C_t·B_τ) for τ ≤ t.
+        # Matmuls in bf16 with fp32 accumulation (kernel-style numerics);
+        # the decay exponentials stay fp32.
+        gram = jnp.einsum("btn,bsn->bts", C_c.astype(bf16),
+                          B_c.astype(bf16),
+                          preferred_element_type=jnp.float32)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # [B,t,s,nh]
+        tri = jnp.tril(jnp.ones((c, c), jnp.float32))
+        M = (gram[..., None] * jnp.exp(jnp.minimum(decay, 0.0))
+             * tri[None, :, :, None]).astype(bf16)       # [B,t,s,nh]
+        dx = d_c[..., None] * x_c                        # [B,c,nh,p]
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, dx.astype(bf16),
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: the carried state seen through this chunk's decay
+        y_inter = jnp.einsum("btn,bhpn->bthp", C_c, h) \
+            * jnp.exp(cum)[..., None]
+        # state update: h' = exp(A_end)·h + Σ_τ exp(A_end − A_τ)·dx_τ ⊗ B_τ
+        a_end = cum[:, -1]                               # [B,nh]
+        w = jnp.exp(a_end[:, None] - cum)                # [B,c,nh]
+        h_new = jnp.exp(a_end)[..., None, None] * h \
+            + jnp.einsum("bshp,bsn->bhpn", w[..., None] * dx, B_c)
+        return h_new, y_intra + y_inter
+
+    # remat the chunk body: M is recomputed in the backward instead of a
+    # [nc, B, c, c, nh] stash being streamed to HBM
+    h_final, ys = jax.lax.scan(jax.checkpoint(body), h0, jnp.arange(nc))
+    ys = jnp.moveaxis(ys, 0, 1).reshape(B, S, nh, p)
+    return ys, h_final

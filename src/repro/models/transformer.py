@@ -1,0 +1,366 @@
+"""Top-level model: layouts, forward pass, and decode caches for every
+assigned architecture family.
+
+Structure-aware scan-over-layers: layers are grouped into *periods* (the
+local:global pattern length for gemma-2/3, the shared-attention interval
+for zamba2, 1 otherwise).  Params are stacked per period-slot and the
+period is scanned ``n_layers // period`` times — so each slot's locality
+is a static property (local layers lower to banded attention, global to
+full), the HLO stays O(period) in depth, and gradient checkpointing wraps
+each layer body.  Remainder layers (62 % 6 = 2 for gemma3-27b) and MoE
+leading dense layers are unrolled outside the scan with their own params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import common, ffn as ffn_mod, moe as moe_mod, ssm as ssm_mod
+from repro.models.common import ParamDef, fan_in_def, stacked
+from repro.parallel.sharding import shard
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Structure
+# ---------------------------------------------------------------------------
+
+
+def period_of(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        return cfg.shared_attn_every
+    a = cfg.attention
+    if a is not None and a.pattern_period:
+        return a.pattern_period
+    return 1
+
+
+def scanned_layers(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(prefix_layers, n_periods, remainder_layers)."""
+    prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    rest = cfg.n_layers - prefix
+    p = period_of(cfg)
+    return prefix, rest // p, rest % p
+
+
+def _layer_kind(cfg: ModelConfig, global_idx: int) -> str:
+    if cfg.family in ("ssm", "hybrid"):
+        return "mamba"
+    if cfg.moe is not None and global_idx >= cfg.moe.first_dense_layers:
+        return "moe"
+    return "dense"
+
+
+def _is_local(cfg: ModelConfig, global_idx: int) -> bool:
+    a = cfg.attention
+    return a.is_local(global_idx) if a is not None else False
+
+
+# ---------------------------------------------------------------------------
+# Layouts
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer_layout(cfg: ModelConfig, d_ff: int) -> Dict[str, Any]:
+    return {
+        "ln1": ParamDef((cfg.d_model,), (None,), "ones"),
+        "attn": attn_mod.attention_layout(cfg),
+        "ln2": ParamDef((cfg.d_model,), (None,), "ones"),
+        "ffn": ffn_mod.ffn_layout(cfg.d_model, d_ff),
+    }
+
+
+def _moe_layer_layout(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": ParamDef((cfg.d_model,), (None,), "ones"),
+        "attn": attn_mod.attention_layout(cfg),
+        "ln2": ParamDef((cfg.d_model,), (None,), "ones"),
+        "moe": moe_mod.moe_layout(cfg),
+    }
+
+
+def _mamba_layer_layout(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln": ParamDef((cfg.d_model,), (None,), "ones"),
+        "mamba": ssm_mod.mamba_layout(cfg),
+    }
+
+
+def _layer_layout(cfg: ModelConfig, global_idx: int) -> Dict[str, Any]:
+    kind = _layer_kind(cfg, global_idx)
+    if kind == "mamba":
+        return _mamba_layer_layout(cfg)
+    if kind == "moe":
+        return _moe_layer_layout(cfg)
+    d_ff = cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense) else cfg.d_ff
+    return _dense_layer_layout(cfg, d_ff)
+
+
+def model_layout(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    prefix, n_per, rem = scanned_layers(cfg)
+    p = period_of(cfg)
+
+    out: Dict[str, Any] = {
+        "embed": ParamDef((cfg.padded_vocab, d), ("vocab", "embed"), "normal",
+                          scale=0.02),
+        "final_norm": ParamDef((d,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings and cfg.family != "audio":
+        out["lm_head"] = fan_in_def((d, cfg.padded_vocab), ("embed", "vocab"))
+    if cfg.family == "audio":
+        out["lm_head"] = fan_in_def((d, cfg.padded_vocab), ("embed", "vocab"))
+        out["frontend"] = {
+            "proj": fan_in_def((cfg.frontend_dim, d), ("frontend", "embed")),
+            "bias": ParamDef((d,), (None,), "zeros"),
+        }
+    if cfg.family == "vlm":
+        out["frontend"] = {
+            "w1": fan_in_def((cfg.frontend_dim, d), ("frontend", "embed")),
+            "b1": ParamDef((d,), (None,), "zeros"),
+            "w2": fan_in_def((d, d), ("embed", None)),
+            "b2": ParamDef((d,), (None,), "zeros"),
+        }
+
+    out["prefix"] = [_layer_layout(cfg, i) for i in range(prefix)]
+    out["slots"] = [stacked(_layer_layout(cfg, prefix + s), n_per)
+                    for s in range(p)] if n_per else []
+    out["rem"] = [_layer_layout(cfg, prefix + n_per * p + i)
+                  for i in range(rem)]
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        out["shared"] = _dense_layer_layout(cfg, cfg.d_ff)
+    return out
+
+
+def cache_layout(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    """Decode-cache layout mirroring the layer structure."""
+    prefix, n_per, rem = scanned_layers(cfg)
+    p = period_of(cfg)
+
+    def layer_cache(global_idx: int):
+        if _layer_kind(cfg, global_idx) == "mamba":
+            return ssm_mod.mamba_cache_layout(cfg, batch)
+        return attn_mod.attention_cache_layout(
+            cfg, batch, seq_len, _is_local(cfg, global_idx))
+
+    out: Dict[str, Any] = {
+        "prefix": [layer_cache(i) for i in range(prefix)],
+        "slots": [stacked(layer_cache(prefix + s), n_per)
+                  for s in range(p)] if n_per else [],
+        "rem": [layer_cache(prefix + n_per * p + i) for i in range(rem)],
+    }
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        # one shared-attention invocation per scanned period (+1 if rem)
+        n_shared = n_per
+        out["shared"] = stacked(
+            attn_mod.attention_cache_layout(cfg, batch, seq_len, False),
+            n_shared)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_dense_or_moe(lp, x, cfg, *, kind, is_local, positions, cache,
+                        cache_pos, return_state=False, cache_capacity=None):
+    h = common.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    h, new_cache = attn_mod.attention_apply(
+        lp["attn"], h, cfg, positions=positions, is_local=is_local,
+        cache=cache, cache_pos=cache_pos, return_state=return_state,
+        cache_capacity=cache_capacity)
+    x = x + h
+    h = common.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    aux: Dict[str, Array] = {}
+    if kind == "moe":
+        h, aux = moe_mod.moe_apply(lp["moe"], h, cfg)
+    else:
+        h = ffn_mod.ffn_apply(lp["ffn"], h, cfg)
+    return x + h, new_cache, aux
+
+
+def _apply_mamba(lp, x, cfg, *, cache, return_state):
+    h = common.rms_norm(x, lp["ln"], cfg.norm_eps)
+    h, new_cache = ssm_mod.mamba_apply(lp["mamba"], h, cfg, cache=cache,
+                                       return_state=return_state)
+    return x + h, new_cache, {}
+
+
+def _apply_layer(lp, x, cfg, *, kind, is_local, positions, cache, cache_pos,
+                 return_state, cache_capacity=None):
+    if kind == "mamba":
+        return _apply_mamba(lp, x, cfg, cache=cache,
+                            return_state=return_state)
+    return _apply_dense_or_moe(lp, x, cfg, kind=kind, is_local=is_local,
+                               positions=positions, cache=cache,
+                               cache_pos=cache_pos, return_state=return_state,
+                               cache_capacity=cache_capacity)
+
+
+def _zero_aux(cfg: ModelConfig) -> Dict[str, Array]:
+    if cfg.moe is None:
+        return {}
+    return {"moe_load_balance": jnp.zeros(()), "moe_router_z": jnp.zeros(()),
+            "moe_dropped": jnp.zeros(())}
+
+
+def _acc_aux(acc: Dict[str, Array], aux: Dict[str, Array]) -> Dict[str, Array]:
+    return {k: acc[k] + aux.get(k, 0.0) for k in acc} if acc else {}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, Array]) -> Array:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        x = jnp.einsum("bsf,fd->bsd", batch["features"].astype(dt),
+                       params["frontend"]["proj"].astype(dt))
+        x = x + params["frontend"]["bias"].astype(dt)
+        return shard(x, ("batch", "seq", "embed"))
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.family == "vlm" and "patches" in batch:
+        f = params["frontend"]
+        ph = jax.nn.gelu(
+            jnp.einsum("bpf,fd->bpd", batch["patches"].astype(dt),
+                       f["w1"].astype(dt)) + f["b1"].astype(dt))
+        ph = jnp.einsum("bpd,de->bpe", ph, f["w2"].astype(dt)) \
+            + f["b2"].astype(dt)
+        n_patch = ph.shape[1]
+        x = jnp.concatenate([ph, x[:, n_patch:]], axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return shard(x, ("batch", "seq", "embed"))
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Array], *,
+            cache: Optional[Dict[str, Any]] = None,
+            cache_pos: Optional[Array] = None,
+            return_state: bool = False,
+            cache_capacity: Optional[int] = None,
+            last_only: bool = False
+            ) -> Tuple[Array, Optional[Dict[str, Any]], Dict[str, Array]]:
+    """Returns (logits, new_cache_or_None, aux_losses).
+
+    ``cache`` drives decode mode (tokens are [B, 1]).  ``return_state``
+    makes a prefill pass additionally build the decode cache (KV caches /
+    SSM states) sized ``cache_capacity`` (default: prefill length).
+    ``last_only`` computes logits for the final position only (serving
+    prefill — skips the O(S·V) head over the prompt).
+    """
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    decoding = cache is not None
+    if decoding:
+        positions = cache_pos[:, None]
+    else:
+        positions = jnp.arange(S)[None, :]
+    prefix, n_per, rem = scanned_layers(cfg)
+    p = period_of(cfg)
+    aux_acc = _zero_aux(cfg)
+    collect = decoding or return_state
+    new_cache: Dict[str, Any] = {"prefix": [], "rem": []}
+
+    def run_layer(lp, x, gidx, layer_cache):
+        return _apply_layer(
+            lp, x, cfg, kind=_layer_kind(cfg, gidx),
+            is_local=_is_local(cfg, gidx), positions=positions,
+            cache=layer_cache, cache_pos=cache_pos,
+            return_state=return_state, cache_capacity=cache_capacity)
+
+    maybe_remat = (jax.checkpoint if (cfg.remat and not decoding
+                                      and not return_state) else (lambda f: f))
+
+    # ---- prefix (unrolled) layers ----------------------------------------
+    for i in range(prefix):
+        lc = cache["prefix"][i] if decoding else None
+        x, nc, aux = functools.partial(run_layer, gidx=i)(
+            params["prefix"][i], x, layer_cache=lc)
+        new_cache["prefix"].append(nc)
+        aux_acc = _acc_aux(aux_acc, aux)
+
+    # ---- scanned periods ---------------------------------------------------
+    if n_per:
+        shared_lp = params.get("shared")
+
+        def period_body(carry, xs):
+            x, aux_acc = carry
+            slot_params = xs[0]
+            slot_caches = xs[1] if decoding else [None] * p
+            shared_cache = xs[2] if (decoding and shared_lp is not None) \
+                else None
+            new_slot_caches, new_shared_cache = [], None
+            for si in range(p):
+                gidx = prefix + si  # locality depends on si only
+                fn = maybe_remat(functools.partial(
+                    run_layer, gidx=gidx))
+                x, nc, aux = fn(slot_params[si], x,
+                                layer_cache=slot_caches[si])
+                new_slot_caches.append(nc)
+                aux_acc = _acc_aux(aux_acc, aux)
+            if shared_lp is not None:
+                fn = maybe_remat(functools.partial(
+                    _apply_dense_or_moe, cfg=cfg, kind="dense",
+                    is_local=False, positions=positions,
+                    cache_pos=cache_pos, return_state=return_state,
+                    cache_capacity=cache_capacity))
+                x, new_shared_cache, _ = fn(shared_lp, x,
+                                            cache=shared_cache)
+            ys = None
+            if collect:
+                ys = (new_slot_caches,)
+                if shared_lp is not None:
+                    ys = ys + (new_shared_cache,)
+            return (x, aux_acc), ys
+
+        xs = (params["slots"],)
+        if decoding:
+            xs = xs + (cache["slots"],)
+            if shared_lp is not None:
+                xs = xs + (cache["shared"],)
+        (x, aux_acc), ys = jax.lax.scan(period_body, (x, aux_acc), xs)
+        if collect:
+            new_cache["slots"] = ys[0]
+            if shared_lp is not None:
+                new_cache["shared"] = ys[1]
+
+    # ---- remainder layers ---------------------------------------------------
+    for i in range(rem):
+        gidx = prefix + n_per * p + i
+        lc = cache["rem"][i] if decoding else None
+        x, nc, aux = functools.partial(run_layer, gidx=gidx)(
+            params["rem"][i], x, layer_cache=lc)
+        new_cache["rem"].append(nc)
+        aux_acc = _acc_aux(aux_acc, aux)
+
+    # ---- head ---------------------------------------------------------------
+    if last_only:
+        # serving prefill needs only the final position's logits — slice
+        # before the O(S·V) head matmul
+        x = x[:, -1:]
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings and "lm_head" not in params:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype))
+    logits = common.softcap(logits, cfg.final_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # padding columns exist only so the vocab dim shards; mask them
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, jnp.asarray(-1e9, logits.dtype))
+    logits = shard(logits, ("batch", None, "vocab"))
+    return logits, (new_cache if collect else None), aux_acc

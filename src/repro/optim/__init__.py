@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, \
+    opt_state_layout
+from repro.optim.schedule import make_schedule
+from repro.optim.compress import compress_gradients
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "opt_state_layout",
+           "make_schedule", "compress_gradients"]

@@ -1,0 +1,22 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def make_schedule(cfg: OptimizerConfig):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+        if cfg.schedule == "constant":
+            return cfg.learning_rate * warm
+        # cosine decay to 10 % of peak
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+    return lr

@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (ShardingRules, default_rules,
+                                     param_specs, shard, spec_for)
+
+__all__ = ["ShardingRules", "default_rules", "param_specs", "shard",
+           "spec_for"]

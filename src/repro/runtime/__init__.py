@@ -1,0 +1,7 @@
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.fault import FaultInjector, run_with_restarts
+from repro.runtime.elastic import reshard_tree, shrink_mesh_plan
+from repro.runtime.straggler import StragglerMitigator
+
+__all__ = ["CheckpointManager", "FaultInjector", "run_with_restarts",
+           "reshard_tree", "shrink_mesh_plan", "StragglerMitigator"]

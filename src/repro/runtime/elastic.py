@@ -1,0 +1,55 @@
+"""Elastic scaling: re-mesh and re-shard state when the fleet changes.
+
+Checkpoint leaves are stored unsharded (host numpy), so moving between
+mesh sizes is a re-placement: build the new mesh, resolve the same layout
+against it (divisibility-checked sharding rules degrade gracefully when
+an axis stops dividing), and ``device_put`` each leaf.  ``shrink_mesh_plan``
+picks the largest (data × model) grid that fits the surviving chip count
+while keeping the model axis large enough for the arch's weights.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.models.common import ParamDef
+from repro.parallel import sharding as shd
+
+
+def shrink_mesh_plan(n_alive: int, prefer_model: int = 16
+                     ) -> Tuple[int, int]:
+    """(data, model) for the largest usable grid ≤ n_alive chips.
+
+    Keeps the model axis at ``prefer_model`` if possible (weights must
+    still fit per-chip), else the largest power-of-two divisor.
+    """
+    model = prefer_model
+    while model > 1 and n_alive // model < 1:
+        model //= 2
+    data = n_alive // model
+    # largest power of two ≤ data (collectives want power-of-two groups)
+    p = 1
+    while p * 2 <= data:
+        p *= 2
+    return p, model
+
+
+def reshard_tree(tree: Any, layout: Any, new_rules: shd.ShardingRules) -> Any:
+    """Re-place every leaf of ``tree`` according to ``layout`` under the
+    new mesh/rules (host round-trip; leaves may be sharded or numpy)."""
+    import numpy as np
+
+    defs = jax.tree.leaves(layout,
+                           is_leaf=lambda x: isinstance(x, ParamDef))
+    leaves, treedef = jax.tree.flatten(tree)
+    assert len(defs) == len(leaves), (len(defs), len(leaves))
+    out = []
+    for d, leaf in zip(defs, leaves):
+        host = np.asarray(leaf)
+        ns = NamedSharding(new_rules.mesh,
+                           new_rules.resolve(d.axes, d.shape))
+        out.append(jax.device_put(host, ns))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,78 @@
+"""Failure injection and checkpoint/restart orchestration.
+
+On a real fleet, node failure surfaces as a collective timeout or a
+coordinator health-check miss; the recovery contract is identical either
+way: abandon the step, reload the newest committed checkpoint (possibly
+onto a smaller mesh — see ``elastic``), and continue.  This module
+provides (a) a deterministic failure injector for tests/examples and
+(b) ``run_with_restarts``, the supervision loop implementing that
+contract around any step function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.runtime.checkpoint import CheckpointManager
+
+
+class NodeFailure(RuntimeError):
+    def __init__(self, node: int, step: int):
+        super().__init__(f"node {node} failed at step {step}")
+        self.node = node
+        self.step = step
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic failure schedule: fail at given steps (once each)."""
+
+    fail_at: Dict[int, int]  # step -> node id
+    _fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self._fired:
+            self._fired.add(step)
+            raise NodeFailure(self.fail_at[step], step)
+
+
+def run_with_restarts(step_fn: Callable[[Any, int], Any], state: Any,
+                      n_steps: int, ckpt: CheckpointManager,
+                      ckpt_every: int = 10,
+                      injector: Optional[FaultInjector] = None,
+                      on_failure: Optional[Callable[[NodeFailure, Any],
+                                                    Any]] = None
+                      ) -> Dict[str, Any]:
+    """Supervised training loop with checkpoint/restart.
+
+    ``step_fn(state, step) -> state``.  On ``NodeFailure`` the loop reloads
+    the last committed checkpoint (after letting ``on_failure`` adapt the
+    restore — e.g. elastic re-meshing) and resumes from its step.
+    """
+    step = 0
+    restarts = 0
+    restored = ckpt.restore_latest(state)
+    if restored is not None:
+        state, step = restored
+    while step < n_steps:
+        try:
+            if injector is not None:
+                injector.check(step)
+            state = step_fn(state, step)
+            step += 1
+            if step % ckpt_every == 0:
+                ckpt.save(state, step=step, blocking=True)
+        except NodeFailure as e:
+            restarts += 1
+            if on_failure is not None:
+                state = on_failure(e, state)
+            restored = ckpt.restore_latest(state)
+            if restored is None:
+                step = 0
+            else:
+                state, step = restored
+    ckpt.wait()
+    return {"state": state, "steps": step, "restarts": restarts}

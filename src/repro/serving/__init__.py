@@ -1,0 +1,6 @@
+from repro.serving.engine import ServeEngine, make_decode_step, make_prefill
+from repro.serving.batching import Request, ContinuousBatcher
+from repro.serving.autoscale import DvfsServingSimulator
+
+__all__ = ["ServeEngine", "make_decode_step", "make_prefill", "Request",
+           "ContinuousBatcher", "DvfsServingSimulator"]

@@ -1,0 +1,83 @@
+"""Serving engine: jitted prefill and decode steps + a small host loop.
+
+``serve_step`` (decode) is the function the dry-run lowers for
+``decode_32k`` / ``long_500k``: one new token per sequence against a
+seq_len-deep cache.  ``prefill`` runs the full forward with
+``return_state=True`` so the decode cache comes back ready.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.serving import kvcache
+
+Array = jax.Array
+
+
+def make_prefill(cfg: ModelConfig, capacity: int):
+    """(params, batch) -> (last_logits, cache)."""
+
+    def prefill(params, batch):
+        logits, cache, _ = transformer.forward(
+            params, cfg, batch, return_state=True, cache_capacity=capacity,
+            last_only=True)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, cache, tokens[B,1], pos[B]) -> (logits[B,V], new_cache)."""
+
+    def decode_step(params, cache, tokens, pos):
+        logits, new_cache, _ = transformer.forward(
+            params, cfg, {"tokens": tokens}, cache=cache, cache_pos=pos)
+        return logits[:, 0], new_cache
+
+    return decode_step
+
+
+def greedy_sample(logits: Array) -> Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Host-side convenience wrapper for examples/tests (single process)."""
+
+    cfg: ModelConfig
+    params: Any
+    capacity: int
+    batch_size: int
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill(self.cfg, self.capacity))
+        self._decode = jax.jit(make_decode_step(self.cfg))
+
+    def generate(self, prompt_tokens: Array, n_new: int,
+                 extra_inputs: Optional[Dict[str, Array]] = None
+                 ) -> Array:
+        """Greedy-generate ``n_new`` tokens after a shared-length prompt."""
+        B, S = prompt_tokens.shape
+        batch = {"tokens": prompt_tokens}
+        if extra_inputs:
+            batch.update(extra_inputs)
+        last_logits, cache = self._prefill(self.params, batch)
+        tok = greedy_sample(last_logits)
+        out = [tok]
+        pos = jnp.full((B,), S, jnp.int32)
+        for _ in range(n_new - 1):
+            logits, cache = self._decode(self.params, cache, tok[:, None],
+                                         pos)
+            tok = greedy_sample(logits)
+            out.append(tok)
+            pos = pos + 1
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,75 @@
+"""Decode-cache utilities: allocation, abstract specs, prefill padding.
+
+Cache layouts come from ``models.transformer.cache_layout``; this module
+materializes them (zeros for real serving, ShapeDtypeStruct for dry-run)
+and pads prefill-produced caches out to serving capacity.
+
+Sharding: cache ParamDefs carry ("batch", "kv_seq", "kv_heads", ...)
+logical axes.  ``parallel.default_rules(split_kv=...)`` decides whether
+kv_heads (TP decode) or kv_seq (split-KV / FlashDecoding) rides the model
+axis — chosen per arch by ``split_kv_needed``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, transformer
+
+
+def cache_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Any:
+    layout = transformer.cache_layout(cfg, batch, capacity)
+    return common.init_params(jax.random.PRNGKey(0), layout,
+                              dtype=cache_dtype(cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, capacity: int) -> Any:
+    layout = transformer.cache_layout(cfg, batch, capacity)
+    return common.abstract_params(layout, dtype=cache_dtype(cfg))
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, capacity: int) -> int:
+    layout = transformer.cache_layout(cfg, batch, capacity)
+    import numpy as np
+    from repro.models.common import ParamDef
+    leaves = jax.tree.leaves(layout,
+                             is_leaf=lambda x: isinstance(x, ParamDef))
+    itemsize = cache_dtype(cfg).itemsize
+    return int(sum(np.prod(d.shape) for d in leaves) * itemsize)
+
+
+def split_kv_needed(cfg: ModelConfig, model_axis: int) -> bool:
+    """True when kv_heads can't shard the model axis ⇒ shard the cache's
+    seq dim instead (split-KV decode)."""
+    a = cfg.attention
+    if a is None:
+        return False
+    if a.kind == "mla":
+        return True  # compressed latent cache has no head dim
+    return a.n_kv_heads % model_axis != 0
+
+
+def pad_prefill_cache(cfg: ModelConfig, prefill_cache: Any,
+                      capacity: int) -> Any:
+    """Pad a return_state prefill cache (built at prefill length) out to
+    serving capacity along the kv_seq axis."""
+
+    def pad_leaf(path_leaf):
+        x = path_leaf
+        if x is None or x.ndim < 2:
+            return x
+        return x
+
+    # The model already builds caches at the requested capacity when
+    # ``cache_capacity`` is passed to forward; this helper exists for
+    # callers that prefilled without capacity.
+    del cfg, capacity
+    return jax.tree.map(pad_leaf, prefill_cache)

@@ -1,0 +1,3 @@
+from repro.train.step import make_loss_fn, make_train_step
+
+__all__ = ["make_loss_fn", "make_train_step"]

@@ -1,0 +1,94 @@
+"""Training step factory: loss, gradient accumulation, AdamW.
+
+``make_train_step`` builds a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with donated params/opt_state.  Microbatching is a ``lax.scan``
+over batch slices with gradient accumulation in fp32 — activation memory
+stays bounded by one microbatch while the optimizer sees the full-batch
+gradient.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import common, moe as moe_mod, transformer
+from repro.optim import adamw_update, compress_gradients
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    prefix, n_per, rem = transformer.scanned_layers(cfg)
+    n_moe_layers = max(1, cfg.n_layers - (cfg.moe.first_dense_layers
+                                          if cfg.moe else 0))
+
+    def loss_fn(params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, _, aux = transformer.forward(params, cfg, batch)
+        total, metrics = common.cross_entropy(
+            logits, batch["labels"], z_loss=tcfg.z_loss,
+            mask=batch.get("mask"))
+        if cfg.moe is not None:
+            mean_aux = {k: v / n_moe_layers for k, v in aux.items()}
+            total = total + moe_mod.moe_aux_loss(cfg, mean_aux)
+            metrics.update(mean_aux)
+        metrics["loss"] = total
+        return total, metrics
+
+    return loss_fn
+
+
+def _split_micro(batch: Dict[str, jax.Array], n_micro: int):
+    def re(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+    return jax.tree.map(re, batch)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    loss_fn = make_loss_fn(cfg, tcfg)
+    ocfg = tcfg.optimizer
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            micro = _split_micro(batch, tcfg.microbatch)
+            acc_dt = jnp.dtype(tcfg.grad_accum_dtype)
+
+            def body(acc, mb):
+                g_acc, m_acc = acc
+                _, metrics, grads = compute_grads(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dt), g_acc, grads)
+                m_acc = jax.tree.map(lambda a, m: a + m, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            _, m0, g_probe = jax.eval_shape(
+                lambda p, b: compute_grads(p, b), params,
+                jax.tree.map(lambda x: x[0], micro))
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, metrics), _ = jax.lax.scan(body, (g0, m0), micro)
+            k = 1.0 / tcfg.microbatch
+            grads = jax.tree.map(lambda g: g * k, grads)
+            metrics = jax.tree.map(lambda m: m * k, metrics)
+        else:
+            _, metrics, grads = compute_grads(params, batch)
+
+        if ocfg.compress_grads:
+            grads, _ = compress_gradients(grads, None)
+
+        params, opt_state, om = adamw_update(ocfg, grads, opt_state, params)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step

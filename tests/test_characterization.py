@@ -1,0 +1,80 @@
+"""Unit tests for the delay/power characterization library (paper §III)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import characterization as char
+
+
+def test_delay_monotone_decreasing_in_voltage():
+    """Every resource slows down as its rail voltage drops."""
+    for name, res in char.FPGA_LIBRARY.items():
+        if res.rail in ("io", "config"):
+            continue
+        v = jnp.linspace(0.55, res.v_nominal(), 32)
+        d = res.delay_factor(v)
+        assert bool(jnp.all(jnp.diff(d) < 0)), name
+        assert np.isclose(float(res.delay_factor(
+            jnp.asarray(res.v_nominal()))), 1.0, atol=1e-6), name
+
+
+def test_logic_more_voltage_sensitive_than_routing():
+    """§III: logic delay blows up at low V_core, routing tolerates it."""
+    v = jnp.asarray(0.55)
+    d_logic = float(char.FPGA_LIBRARY["logic"].delay_factor(v))
+    d_route = float(char.FPGA_LIBRARY["routing"].delay_factor(v))
+    assert d_logic > d_route > 1.0
+
+
+def test_bram_static_power_drops_75_percent_by_0v8():
+    """§III: V_bram 0.95→0.80 cuts BRAM static power by more than 75 %."""
+    mem = char.FPGA_LIBRARY["memory"]
+    p95 = float(mem.static_power(jnp.asarray(0.95)))
+    p80 = float(mem.static_power(jnp.asarray(0.80)))
+    assert p80 < 0.25 * p95
+
+
+def test_bram_delay_small_effect_until_0v8():
+    """§III: 0.95→0.80 has a relatively small delay effect (<25 %)."""
+    mem = char.FPGA_LIBRARY["memory"]
+    assert float(mem.delay_factor(jnp.asarray(0.80))) < 1.25
+    # ... and a much larger one approaching the crash voltage
+    assert float(mem.delay_factor(jnp.asarray(0.55))) > 1.8
+
+
+def test_dynamic_power_scales_v2f():
+    res = char.FPGA_LIBRARY["logic"]
+    p1 = float(res.dynamic_power(jnp.asarray(0.8), jnp.asarray(1.0)))
+    p2 = float(res.dynamic_power(jnp.asarray(0.4), jnp.asarray(0.5)))
+    assert np.isclose(p2, p1 * 0.25 * 0.5, rtol=1e-6)
+
+
+def test_vtr_device_fits_and_io_bound_designs_get_big_fabric():
+    from repro.core.accelerators import ACCELERATORS
+    for name, acc in ACCELERATORS.items():
+        dev = acc.device()
+        u = acc.util
+        assert dev.labs >= u.labs and dev.io >= u.io
+        assert dev.m9ks >= u.m9ks and dev.m144ks >= u.m144ks
+        assert dev.dsps >= u.dsps
+    # stripes (I/O 8797) must land on a far larger fabric than tabla (567)
+    big = ACCELERATORS["stripes"].device()
+    small = ACCELERATORS["tabla"].device()
+    assert big.labs > 10 * small.labs
+
+
+def test_nominal_power_positive_and_beta_range():
+    from repro.core.accelerators import ACCELERATORS
+    for acc in ACCELERATORS.values():
+        pm = acc.power_model()
+        assert float(pm.nominal_power()) > 0
+        assert 0.01 < pm.beta() < 2.0
+
+
+def test_rail_grids_respect_crash_voltage():
+    g = char.CORE_RAIL.grid()
+    assert float(g[0]) >= char.V_CRASH - 1e-6
+    assert float(g[-1]) <= char.V_CORE_NOM + 1e-6
+    gb = char.BRAM_RAIL.grid()
+    assert float(gb[-1]) <= char.V_BRAM_NOM + 1e-6

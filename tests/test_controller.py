@@ -1,0 +1,112 @@
+"""End-to-end controller tests — the paper's headline claims (Table II)."""
+
+import numpy as np
+import pytest
+
+from repro.core import controller as ctl
+from repro.core import pll as pll_mod
+from repro.core import workload as wl
+from repro.core.accelerators import ACCELERATORS, PAPER_TABLE_II
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return wl.generate_trace(wl.WorkloadConfig(n_steps=1024, seed=0))
+
+
+@pytest.fixture(scope="module")
+def results(trace):
+    out = {}
+    for name, acc in ACCELERATORS.items():
+        plat = ctl.fpga_platform(acc)
+        out[name] = ctl.compare_all(plat, trace)
+    return out
+
+
+def test_proposed_beats_all_baselines_per_app(results):
+    """Table II ordering: proposed > core-only, bram-only, DFS, PG."""
+    for name, res in results.items():
+        g = {t: s.power_gain for t, s in res.items()}
+        assert g["proposed"] >= g["core_only"] - 1e-6, name
+        assert g["proposed"] >= g["bram_only"] - 1e-6, name
+        assert g["proposed"] > g["freq_only"], name
+        assert g["proposed"] > g["power_gating"], name
+
+
+def test_table2_reproduction_within_tolerance(results):
+    """Power-reduction factors within 20 % of the paper's Table II."""
+    for tech in ("proposed", "core_only", "bram_only"):
+        ours = np.mean([results[n][tech].power_gain for n in ACCELERATORS])
+        paper = PAPER_TABLE_II[tech]["average"]
+        assert abs(np.log(ours / paper)) < np.log(1.20), \
+            f"{tech}: {ours:.2f} vs paper {paper:.2f}"
+
+
+def test_headline_efficiency_over_best_prior(results):
+    """Paper: proposed surpasses the best single-rail method by ~33.6 %."""
+    prop = np.mean([results[n]["proposed"].power_gain for n in ACCELERATORS])
+    best = max(
+        np.mean([results[n]["core_only"].power_gain for n in ACCELERATORS]),
+        np.mean([results[n]["bram_only"].power_gain for n in ACCELERATORS]))
+    improvement = prop / best - 1.0
+    assert 0.20 < improvement < 0.55  # paper: 0.336
+
+
+def test_bram_rich_apps_favor_bram_scaling(results):
+    """Table II structure: bram-only is strong for tabla/dnnweaver (BRAM-
+    rich) and weak for stripes/diannao (logic/IO-rich)."""
+    assert results["dnnweaver"]["bram_only"].power_gain > \
+        results["stripes"]["bram_only"].power_gain
+    assert results["tabla"]["bram_only"].power_gain > \
+        results["diannao"]["bram_only"].power_gain
+
+
+def test_all_offered_work_eventually_served(results):
+    for name, res in results.items():
+        for t, s in res.items():
+            assert s.served_fraction > 0.995, (name, t)
+
+
+def test_power_gating_wins_at_very_low_load():
+    """Fig. 4: below the crash-voltage floor PG keeps scaling — visible
+    once the fleet is large enough for fine node granularity."""
+    acc = ACCELERATORS["tabla"]
+    plat = ctl.fpga_platform(acc)
+    low = np.full(512, 0.03)
+    pg = ctl.run_technique(plat, low, "power_gating", n_nodes=64)
+    prop = ctl.run_technique(plat, low, "proposed", n_nodes=64)
+    assert pg.power_gain > prop.power_gain
+
+
+def test_oracle_bound_not_worse(trace):
+    plat = ctl.fpga_platform(ACCELERATORS["tabla"])
+    normal = ctl.run_technique(plat, trace, "proposed")
+    oracle = ctl.run_technique(plat, trace, "proposed", use_oracle=True)
+    assert oracle.power_gain >= normal.power_gain - 0.1
+    assert oracle.qos_violation_rate <= normal.qos_violation_rate + 1e-6
+
+
+def test_dual_pll_break_even():
+    cfg = pll_mod.PllConfig()
+    # paper §V: with practical numbers the break-even is ~2 ms and τ is
+    # seconds-to-minutes ⇒ always dual (Fig. 9c architecture)
+    assert pll_mod.breakeven_tau(cfg) < 0.01
+    assert pll_mod.should_use_dual(cfg, tau=1.0)
+    assert not pll_mod.should_use_dual(cfg, tau=1e-6)
+    single = pll_mod.PllConfig(dual=False)
+    assert pll_mod.stall_fraction(single, 1.0) > 0.0
+    assert pll_mod.stall_fraction(cfg, 1.0) == 0.0
+    assert pll_mod.energy_overhead_single(cfg, 1.0) > 0.0
+    assert pll_mod.energy_overhead(cfg, 1.0) == \
+        pll_mod.energy_overhead_dual(cfg, 1.0)
+
+
+def test_tpu_platform_controller_runs(trace):
+    """The TPU adaptation: controller on roofline-derived terms."""
+    plat = ctl.tpu_platform(t_compute=0.002, t_memory=0.012,
+                            t_collective=0.001)
+    res = ctl.compare_all(plat, trace)
+    g = {t: s.power_gain for t, s in res.items()}
+    assert g["proposed"] >= g["core_only"] - 1e-6
+    assert g["proposed"] >= g["bram_only"] - 1e-6
+    assert g["proposed"] > 1.5  # memory-bound decode has headroom

@@ -1,0 +1,114 @@
+"""Loop-aware HLO cost-analysis tests: the roofline's measurement layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_parse import analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    comp = _compile(lambda x, y: x @ y, a, b)
+    c = analyze_hlo(comp.as_text())
+    assert c.flops == pytest.approx(2 * 128 * 256 * 64, rel=0.01)
+
+
+def test_scan_multiplies_loop_body():
+    """A scanned matmul must count trip-count × per-iteration FLOPs."""
+    w = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def fn(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    comp = _compile(fn, w, x)
+    c = analyze_hlo(comp.as_text())
+    expect = 6 * 2 * 8 * 64 * 64
+    assert c.flops == pytest.approx(expect, rel=0.05)
+
+
+def test_nested_scan_multiplies_twice():
+    w = jax.ShapeDtypeStruct((3, 4, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+
+    def fn(w, x):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return ci @ wi, None
+            c2, _ = jax.lax.scan(inner, c, wo)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, w)
+        return out
+
+    comp = _compile(fn, w, x)
+    c = analyze_hlo(comp.as_text())
+    expect = 3 * 4 * 2 * 8 * 32 * 32
+    assert c.flops == pytest.approx(expect, rel=0.05)
+
+
+def test_bytes_scale_with_tensor_size():
+    a1 = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    a2 = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    fn = lambda x: jnp.tanh(x) * 2.0
+    c1 = analyze_hlo(_compile(fn, a1).as_text())
+    c2 = analyze_hlo(_compile(fn, a2).as_text())
+    assert c2.bytes > 10 * c1.bytes
+
+
+def test_backward_flops_roughly_triple_forward():
+    """grad(matmul chain) ≈ 3× forward FLOPs (dx and dw per layer).
+
+    (A remat-vs-plain comparison is not stable at toy sizes — XLA CSE
+    merges identical recomputed dots — so we assert the fwd:bwd ratio,
+    which exercises the same loop-aware accounting.)"""
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def fwd(w, x):
+        for _ in range(4):
+            x = jnp.tanh(x @ w)
+        return jnp.sum(x)
+
+    c_f = analyze_hlo(_compile(fwd, w, x).as_text())
+    c_g = analyze_hlo(_compile(jax.grad(fwd), w, x).as_text())
+    ratio = c_g.flops / c_f.flops
+    assert 2.5 <= ratio <= 3.5, ratio
+
+
+def test_collectives_detected_on_sharded_matmul():
+    devs = jax.devices()
+    if len(devs) < 1:
+        pytest.skip("no devices")
+    # single-device: no collectives expected
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    comp = _compile(lambda x: x @ x, a)
+    c = analyze_hlo(comp.as_text())
+    assert c.coll_total() == 0.0
+
+
+def test_dryrun_smoke_reduced_cell():
+    """End-to-end: one reduced cell through run_cell on a small mesh is
+    exercised by scripts; here we validate the analyzer's outputs exist
+    in the full-run artifact when present."""
+    import json, os
+    path = "benchmarks/dryrun_results.jsonl"
+    if not os.path.exists(path):
+        pytest.skip("dry-run artifact not yet produced")
+    rows = [json.loads(l) for l in open(path)]
+    ok = [r for r in rows if r["status"] == "ok"]
+    assert ok, "no successful dry-run cells"
+    for r in ok[:5]:
+        rf = r["roofline"]
+        assert rf["t_compute_s"] > 0
+        assert rf["t_memory_s"] > 0
+        assert rf["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,102 @@
+"""Markov workload predictor tests (paper §IV-A, §V)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predictor as pred
+
+
+def _run(cfg, trace):
+    state = pred.init_state(cfg)
+    preds = []
+    for w in trace:
+        p = pred.predict(cfg, state)
+        actual = pred.workload_to_bin(jnp.asarray(w), cfg.n_bins)
+        state = pred.observe(cfg, state, actual, p)
+        preds.append(int(p))
+    return state, np.asarray(preds)
+
+
+def test_warmup_predicts_nominal():
+    """§IV-A: the first I steps run at maximum frequency."""
+    cfg = pred.PredictorConfig(n_bins=8, warmup_steps=10)
+    state = pred.init_state(cfg)
+    for _ in range(10):
+        p = pred.predict(cfg, state)
+        assert int(p) == cfg.n_bins - 1
+        state = pred.observe(cfg, state, jnp.asarray(2), p)
+
+
+def test_learns_deterministic_cycle():
+    """A periodic bin sequence is predicted perfectly after training."""
+    cfg = pred.PredictorConfig(n_bins=4, warmup_steps=8)
+    cycle = [0.1, 0.35, 0.6, 0.85]  # bins 0,1,2,3 repeating
+    trace = cycle * 32
+    state, preds = _run(cfg, trace)
+    actual_bins = [pred.workload_to_bin(jnp.asarray(w), 4) for w in trace]
+    # after warmup + a few cycles, predictions must match exactly
+    tail_p = preds[-32:]
+    tail_a = np.asarray([int(b) for b in actual_bins])[-32:]
+    assert (tail_p == tail_a).mean() == 1.0
+
+
+def test_transition_matrix_row_stochastic():
+    cfg = pred.PredictorConfig(n_bins=6)
+    rng = np.random.default_rng(0)
+    state, _ = _run(cfg, rng.random(200))
+    P = np.asarray(pred.transition_matrix(state))
+    assert np.allclose(P.sum(axis=1), 1.0, atol=1e-5)
+    assert (P >= 0).all()
+
+
+def test_misprediction_counting():
+    cfg = pred.PredictorConfig(n_bins=4, warmup_steps=0)
+    state = pred.init_state(cfg)
+    # force a wrong prediction: predict() from fresh state, observe far bin
+    p = pred.predict(cfg, state)
+    state = pred.observe(cfg, state, jnp.asarray((int(p) + 2) % 4), p)
+    assert int(state.mispredictions) == 1
+    # state corrected to the actual bin (§V)
+    assert int(state.current_bin) == (int(p) + 2) % 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(ws=st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=5,
+                   max_size=60))
+def test_bins_always_valid(ws):
+    cfg = pred.PredictorConfig(n_bins=10, warmup_steps=2)
+    state, preds = _run(cfg, ws)
+    assert ((preds >= 0) & (preds < 10)).all()
+    assert int(state.steps) == len(ws)
+
+
+def test_quantile_policy_is_more_conservative():
+    """Beyond-paper: the quantile policy never under-predicts more often
+    than argmax on a noisy trace."""
+    rng = np.random.default_rng(1)
+    trace = np.clip(0.5 + 0.15 * rng.standard_normal(400), 0, 1)
+    am, _ = None, None
+    cfg_a = pred.PredictorConfig(n_bins=10, warmup_steps=16,
+                                 policy="argmax")
+    cfg_q = pred.PredictorConfig(n_bins=10, warmup_steps=16,
+                                 policy="quantile", quantile=0.9)
+    _, pa = _run(cfg_a, trace)
+    _, pq = _run(cfg_q, trace)
+    actual = (trace * 10).astype(int).clip(0, 9)
+    under_a = (pa < actual).mean()
+    under_q = (pq < actual).mean()
+    assert under_q <= under_a + 1e-9
+
+
+def test_periodic_predictor_learns_period():
+    period = 8
+    state = pred.init_periodic(period)
+    trace = [0.1 * (i % period) for i in range(64)]
+    errs = []
+    for w in trace:
+        guess = pred.periodic_predict(state, period)
+        errs.append(abs(float(guess) - w))
+        state = pred.periodic_observe(state, jnp.asarray(w), period)
+    assert np.mean(errs[-16:]) < 0.02

@@ -1,0 +1,115 @@
+"""Fault tolerance: checkpoint/restart, elastic re-mesh, stragglers."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.fault import FaultInjector, NodeFailure, run_with_restarts
+from repro.runtime.straggler import StragglerMitigator
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 4)),
+            "b": jnp.arange(4, dtype=jnp.float32),
+            "step": jnp.asarray(3)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    ckpt.save(tree, step=10, blocking=True)
+    out = ckpt.restore_latest(tree)
+    assert out is not None
+    restored, step = out
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        ckpt.save(tree, step=s)
+        ckpt.wait()
+    assert ckpt.list_steps() == [3, 4]
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    ckpt.save(tree, step=1, blocking=True)
+    # flip bytes in a leaf file
+    d = os.path.join(str(tmp_path), "step_000000001")
+    f = os.path.join(d, "arr_0000.npy")
+    data = bytearray(open(f, "rb").read())
+    data[-8] ^= 0xFF
+    open(f, "wb").write(bytes(data))
+    with pytest.raises(IOError):
+        ckpt.restore(tree, 1)
+
+
+def test_partial_checkpoint_never_loads(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    ckpt.save(tree, step=5, blocking=True)
+    # simulate a crash mid-write: step dir without _COMMITTED
+    d = os.path.join(str(tmp_path), "step_000000009")
+    os.makedirs(d)
+    assert ckpt.list_steps() == [5]
+
+
+def test_run_with_restarts_recovers(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+
+    def step_fn(state, step):
+        return {"x": state["x"] + 1}
+
+    inj = FaultInjector(fail_at={7: 3, 15: 1})
+    out = run_with_restarts(step_fn, {"x": jnp.asarray(0)}, n_steps=20,
+                            ckpt=ckpt, ckpt_every=5, injector=inj)
+    assert out["restarts"] == 2
+    assert out["steps"] == 20
+    # state is consistent with 20 completed steps
+    assert int(out["state"]["x"]) == 20
+
+
+def test_elastic_shrink_plan():
+    from repro.runtime.elastic import shrink_mesh_plan
+    assert shrink_mesh_plan(256) == (16, 16)
+    d, m = shrink_mesh_plan(255)   # one chip lost
+    assert d * m <= 255 and d >= 8
+    d, m = shrink_mesh_plan(17, prefer_model=16)
+    assert d * m <= 17 and m == 16
+
+
+def test_straggler_shares_rebalance():
+    mit = StragglerMitigator(n_nodes=4, ema=0.0, granularity=2)
+    # node 3 runs at half speed
+    times = np.array([1.0, 1.0, 1.0, 2.0])
+    mit.observe(times)
+    shares = mit.shares(64)
+    assert sum(shares) == 64
+    assert shares[3] < shares[0]
+    assert all(s % 2 == 0 for s in shares)
+
+
+def test_straggler_eviction_vs_intended_slowdown():
+    mit = StragglerMitigator(n_nodes=4, ema=0.0, evict_threshold=1.5,
+                             evict_patience=3)
+    # node 2 is DVFS-throttled on purpose: not a straggler
+    mit.set_intended_speed(2, 0.4)
+    times = np.array([1.0, 1.0, 2.5, 1.0])
+    for _ in range(5):
+        mit.observe(times)
+    assert 2 not in mit.evictions()
+    # node 1 becomes slow WITHOUT intent: flagged
+    times = np.array([1.0, 4.0, 2.5, 1.0])
+    for _ in range(5):
+        mit.observe(times)
+    assert 1 in mit.evictions()

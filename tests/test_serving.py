@@ -1,0 +1,118 @@
+"""Serving engine, continuous batching, and DVFS autoscaler tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import common, transformer
+from repro.serving.autoscale import (DvfsServingSimulator, RooflineTerms,
+                                     compare_techniques)
+from repro.serving.batching import ContinuousBatcher, Request
+from repro.serving.engine import ServeEngine
+from repro.serving.kvcache import cache_bytes, split_kv_needed
+
+
+def test_generate_is_deterministic_and_consistent():
+    cfg = get_config("llama3.2-1b", reduced=True)
+    params = common.init_params(jax.random.PRNGKey(0),
+                                transformer.model_layout(cfg))
+    eng = ServeEngine(cfg=cfg, params=params, capacity=48, batch_size=2)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                 cfg.vocab_size)
+    a = eng.generate(prompts, 8)
+    b = eng.generate(prompts, 8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == (2, 8)
+
+
+def test_generate_matches_teacher_forced_forward():
+    """Greedy generation must agree with argmax over a full forward pass
+    on the generated sequence (cache == recompute)."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    params = common.init_params(jax.random.PRNGKey(0),
+                                transformer.model_layout(cfg))
+    eng = ServeEngine(cfg=cfg, params=params, capacity=32, batch_size=1)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                 cfg.vocab_size)
+    gen = eng.generate(prompts, 4)
+    seq = jnp.concatenate([prompts, gen], axis=1)
+    logits, _, _ = transformer.forward(params, cfg, {"tokens": seq})
+    for t in range(4):
+        expect = int(jnp.argmax(logits[0, 8 + t - 1]))
+        assert int(gen[0, t]) == expect, t
+
+
+def test_continuous_batcher_occupancy_and_completion():
+    b = ContinuousBatcher(batch_size=4)
+    for i in range(6):
+        b.submit(Request(rid=i, prompt_len=8, max_new_tokens=2))
+    occs = []
+    while not b.drained():
+        occs.append(b.step()["occupancy"])
+    assert len(b.finished) == 6
+    assert max(occs) == 1.0     # fully packed at the start
+    assert occs[-1] <= 0.5      # drains at the end
+
+
+def test_batcher_respects_throughput_scaling():
+    b = ContinuousBatcher(batch_size=2)
+    b.submit(Request(rid=0, prompt_len=1, max_new_tokens=4))
+    steps = 0
+    while not b.drained():
+        b.step(throughput=0.5)
+        steps += 1
+        assert steps < 100
+    assert steps >= 8  # half speed ⇒ at least 2× the steps
+
+
+def test_split_kv_selection():
+    assert split_kv_needed(get_config("llama3-405b"), 16)       # kv=8
+    assert not split_kv_needed(get_config("gemma3-27b"), 16)    # kv=16
+    assert split_kv_needed(get_config("deepseek-v2-236b"), 16)  # MLA
+    assert not split_kv_needed(get_config("falcon-mamba-7b"), 16)
+
+
+def test_mla_cache_is_compressed():
+    """DeepSeek MLA cache must be ~n_heads× smaller than GQA-equivalent."""
+    cfg = get_config("deepseek-v2-236b")
+    mla_bytes = cache_bytes(cfg, batch=1, capacity=1024)
+    a = cfg.attention
+    per_head_equiv = (1024 * a.n_heads * (a.qk_nope_dim + a.qk_rope_dim
+                                          + a.v_head_dim)
+                      * cfg.n_layers * 2)
+    assert mla_bytes < per_head_equiv / 10
+
+
+def test_window_cache_smaller_than_global():
+    g2 = get_config("gemma2-2b")
+    w = cache_bytes(g2, batch=1, capacity=32768)
+    full = get_config("llama3.2-1b")
+    f = cache_bytes(full, batch=1, capacity=32768)
+    # gemma2 halves its layers to 4k-window ring buffers
+    per_layer_g2 = w / g2.n_layers
+    per_layer_full = f / full.n_layers
+    assert per_layer_g2 < per_layer_full * 1.5  # window bound helps
+
+
+def test_autoscaler_techniques_ordering():
+    terms = RooflineTerms(t_compute=0.002, t_memory=0.012,
+                          t_collective=0.001)
+    trace = np.clip(0.4 + 0.1 * np.sin(np.arange(128) / 5.0), 0, 1)
+    out = compare_techniques(terms, trace)
+    g = {k: v.power_gain for k, v in out.items()}
+    assert g["proposed"] >= max(g["core_only"], g["bram_only"]) - 1e-6
+    assert g["proposed"] > g["freq_only"]
+
+
+def test_autoscaler_request_loop():
+    terms = RooflineTerms(t_compute=0.002, t_memory=0.012,
+                          t_collective=0.001)
+    sim = DvfsServingSimulator(terms=terms, steps_per_tau=16)
+    lam = np.concatenate([np.full(256, 2.0), np.full(256, 8.0)])
+    out = sim.run_request_load(lam, batch_size=16, mean_new_tokens=8)
+    assert out["completed"] > 100
+    s = out["summary"]
+    assert s.power_gain > 1.0
+    assert 0.0 <= s.qos_violation_rate <= 1.0

@@ -1,0 +1,78 @@
+"""Tests for the joint (V_core, V_bram) optimizer (paper §III/§V)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import characterization as char
+from repro.core import voltage as volt
+from repro.core.accelerators import ACCELERATORS
+from repro.core.controller import fpga_platform
+
+
+def _platform(name="tabla"):
+    return fpga_platform(ACCELERATORS[name])
+
+
+def test_nominal_frequency_feasible_at_nominal_voltages():
+    p = _platform()
+    pt = volt.optimize_point(p.delay_fn, p.power_fn, jnp.asarray(1.0),
+                             volt.VoltageGrids.default())
+    assert bool(pt.feasible)
+    # at full load there is no headroom: voltages stay at/near nominal
+    assert float(pt.v_core) >= char.V_CORE_NOM - 1e-6
+
+
+def test_joint_beats_single_rail_everywhere():
+    """The 2-D solution space always contains the 1-D ones (§III)."""
+    p = _platform()
+    for f in (0.3, 0.5, 0.7, 0.9):
+        f = jnp.asarray(f)
+        joint = volt.optimize_point(p.delay_fn, p.power_fn, f,
+                                    volt.VoltageGrids.default())
+        core = volt.optimize_point(p.delay_fn, p.power_fn, f,
+                                   volt.VoltageGrids.core_only())
+        bram = volt.optimize_point(p.delay_fn, p.power_fn, f,
+                                   volt.VoltageGrids.bram_only())
+        assert float(joint.power) <= float(core.power) + 1e-6
+        assert float(joint.power) <= float(bram.power) + 1e-6
+
+
+def test_selected_point_meets_timing():
+    p = _platform("diannao")
+    for f in (0.25, 0.5, 0.75, 1.0):
+        pt = volt.optimize_point(p.delay_fn, p.power_fn, jnp.asarray(f),
+                                 volt.VoltageGrids.default())
+        d = float(p.delay_fn(pt.v_core, pt.v_bram))
+        assert d <= 1.0 / f + 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(f=st.floats(min_value=0.1, max_value=1.0))
+def test_power_monotone_in_frequency(f):
+    """Optimal power never increases when the required throughput drops."""
+    p = _platform()
+    grids = volt.VoltageGrids.default()
+    lo = volt.optimize_point(p.delay_fn, p.power_fn, jnp.asarray(f), grids)
+    hi = volt.optimize_point(p.delay_fn, p.power_fn, jnp.asarray(1.0), grids)
+    assert float(lo.power) <= float(hi.power) + 1e-6
+
+
+def test_operating_table_lookup_ceils():
+    p = _platform()
+    levels = volt.bin_frequency_levels(10, 0.05)
+    table = volt.build_operating_table(p.delay_fn, p.power_fn, levels)
+    pt = table.lookup(jnp.asarray(0.42))
+    assert float(pt.f_rel) >= 0.42  # QoS: never provision below demand
+
+
+def test_voltages_on_grid_resolution():
+    """Selected points land on the 25 mV DC-DC grid (ref. [39])."""
+    p = _platform()
+    pt = volt.optimize_point(p.delay_fn, p.power_fn, jnp.asarray(0.5),
+                             volt.VoltageGrids.default())
+    for v, base in ((float(pt.v_core), char.V_CRASH),
+                    (float(pt.v_bram), char.V_CRASH)):
+        steps = (v - base) / char.V_STEP
+        assert abs(steps - round(steps)) < 1e-4

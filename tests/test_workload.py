@@ -1,0 +1,59 @@
+"""Bursty self-similar workload generator tests (paper §VI-B)."""
+
+import numpy as np
+import pytest
+
+from repro.core import workload as wl
+
+
+def test_trace_in_unit_range_and_mean_load():
+    cfg = wl.WorkloadConfig(n_steps=2048, mean_load=0.4, seed=0)
+    t = wl.generate_trace(cfg)
+    assert t.shape == (2048,)
+    assert (t >= 0).all() and (t <= 1).all()
+    assert abs(t.mean() - 0.4) < 0.05
+
+
+def test_deterministic_per_seed():
+    cfg = wl.WorkloadConfig(n_steps=256, seed=7)
+    a = wl.generate_trace(cfg)
+    b = wl.generate_trace(cfg)
+    c = wl.generate_trace(wl.WorkloadConfig(n_steps=256, seed=8))
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_hurst_estimate_close_to_target():
+    """Self-similarity: variance-of-aggregates estimator ≈ configured H."""
+    rng = np.random.default_rng(0)
+    x = wl.fgn(1 << 14, 0.76, rng)
+    h = wl.estimate_hurst(x)
+    assert 0.65 < h < 0.87
+
+
+def test_fgn_white_noise_limit():
+    rng = np.random.default_rng(0)
+    x = wl.fgn(1 << 13, 0.501, rng)
+    h = wl.estimate_hurst(x)
+    assert h < 0.62  # ≈ 0.5 for (nearly) independent increments
+
+
+def test_aggregation_smooths():
+    fine = wl.generate_trace(wl.WorkloadConfig(n_steps=1024, aggregate=1,
+                                               seed=0))
+    coarse = wl.generate_trace(wl.WorkloadConfig(n_steps=1024, aggregate=32,
+                                                 seed=0))
+    assert coarse.std() < fine.std()
+
+
+def test_mean_load_parameter_respected():
+    for load in (0.2, 0.5, 0.7):
+        t = wl.generate_trace(wl.WorkloadConfig(n_steps=2048,
+                                                mean_load=load, seed=1))
+        assert abs(t.mean() - load) < 0.07
+
+
+def test_periodic_trace():
+    t = wl.generate_periodic_trace(192, period=96, seed=0)
+    assert t.shape == (192,)
+    assert (t >= 0).all() and (t <= 1).all()
