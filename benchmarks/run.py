@@ -1,12 +1,15 @@
 """Benchmark harness — one entry per paper table/figure + TPU adaptation.
 
-Run:  PYTHONPATH=src python -m benchmarks.run
+Run:  PYTHONPATH=src python -m benchmarks.run [--steps N] [--only SUBSTRS]
 Prints ``name,us_per_call,derived`` CSV rows (derived = the table's
-headline metric).
+headline metric) and writes the same rows to ``BENCH_fleet.json`` so the
+perf trajectory is trackable across PRs.  ``--only table2,fleet`` with
+``--steps 64`` is the CI smoke subset.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -21,6 +24,9 @@ from repro.core import voltage as volt
 from repro.core import workload as wl
 from repro.core.accelerators import ACCELERATORS, PAPER_TABLE_II
 
+#: Default control-trace length; overridden by ``--steps`` for smoke runs.
+N_STEPS = 1024
+
 
 def _timeit(fn, n=5):
     fn()  # warm
@@ -30,8 +36,9 @@ def _timeit(fn, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def _trace(n=1024, seed=0):
-    return wl.generate_trace(wl.WorkloadConfig(n_steps=n, seed=seed))
+def _trace(n=None, seed=0):
+    return wl.generate_trace(
+        wl.WorkloadConfig(n_steps=n or N_STEPS, seed=seed))
 
 
 def bench_table2():
@@ -131,25 +138,61 @@ def bench_fig12_per_accelerator_traces():
 
 
 def bench_predictor():
-    """§IV-A predictor: accuracy and runtime cost of the control path."""
-    trace = _trace(2048)
+    """§IV-A predictor: accuracy and runtime cost of the control path.
+
+    One ``lax.scan`` per trace (``predictor.evaluate_trace``) — the seed's
+    host loop paid 2 dispatches per step.
+    """
+    trace = _trace(2 * N_STEPS)
     cfg = pred_mod.PredictorConfig(n_bins=25, warmup_steps=32)
-    state = pred_mod.init_state(cfg)
-    import jax
-    predict = jax.jit(lambda s: pred_mod.predict(cfg, s))
-    observe = jax.jit(lambda s, a, p: pred_mod.observe(cfg, s, a, p))
-    hits = off_by_one = 0
+    out = pred_mod.evaluate_trace(cfg, trace)   # warm/compile
+    out.predicted.block_until_ready()
     t0 = time.perf_counter()
-    for w in trace:
-        p = predict(state)
-        a = pred_mod.workload_to_bin(jnp.asarray(float(w)), cfg.n_bins)
-        hits += int(p == a)
-        off_by_one += int(abs(int(p) - int(a)) <= 1)
-        state = observe(state, a, p)
+    out = pred_mod.evaluate_trace(cfg, trace)
+    out.predicted.block_until_ready()
     us = (time.perf_counter() - t0) / len(trace) * 1e6
+    preds = np.asarray(out.predicted)
+    acts = np.asarray(out.actual)
     return [("predictor/markov_25bins", us,
-             f"exact={hits/len(trace):.3f}"
-             f";within1={off_by_one/len(trace):.3f}")]
+             f"exact={np.mean(preds == acts):.3f}"
+             f";within1={np.mean(np.abs(preds - acts) <= 1):.3f}")]
+
+
+def bench_fleet():
+    """The fused fleet engine vs the seed's per-cell loop (Table II sweep).
+
+    Same 5 accelerators × 5 techniques × bursty trace; the per-cell path
+    re-closes and retraces every cell, the batched path compiles two
+    programs and vmaps the rest.
+    """
+    trace = _trace()
+    platforms = [ctl.fpga_platform(acc) for acc in ACCELERATORS.values()]
+    # One-time backend init shouldn't be charged to either path.
+    jnp.zeros(1).block_until_ready()
+
+    t0 = time.perf_counter()
+    percell = {p.name: ctl.compare_all(p, trace) for p in platforms}
+    t_cell = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fleet = ctl.compare_all_batched(platforms, trace)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fleet = ctl.compare_all_batched(platforms, trace)
+    t_warm = time.perf_counter() - t0
+
+    err = max(abs(fleet[n][t].power_gain - percell[n][t].power_gain)
+              for n in fleet for t in fleet[n])
+    cells = sum(len(v) for v in fleet.values())
+    counts = ctl.fleet_trace_counts()
+    return [
+        ("fleet/percell_loop", t_cell / cells * 1e6, "seed_path"),
+        ("fleet/batched_cold", t_cold / cells * 1e6,
+         f"speedup={t_cell / t_cold:.1f}x;max_gain_err={err:.1e}"),
+        ("fleet/batched_warm", t_warm / cells * 1e6,
+         f"speedup={t_cell / t_warm:.1f}x"
+         f";traces=tables:{counts['tables']}/simulate:{counts['simulate']}"),
+    ]
 
 
 def bench_voltage_optimizer():
@@ -203,21 +246,53 @@ def bench_tpu_serving():
     return rows
 
 
-BENCHES = [bench_table2, bench_fig4_workload_sweep, bench_fig5_alpha_sweep,
-           bench_fig6_beta_sweep, bench_fig10_trace,
+# bench_fleet first: its per-cell-vs-batched comparison wants both paths
+# measured from the same cold-start state.
+BENCHES = [bench_fleet, bench_table2, bench_fig4_workload_sweep,
+           bench_fig5_alpha_sweep, bench_fig6_beta_sweep, bench_fig10_trace,
            bench_fig12_per_accelerator_traces, bench_predictor,
            bench_voltage_optimizer, bench_tpu_serving]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    global N_STEPS
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=1024,
+                    help="control-trace length (64 for the CI smoke)")
+    ap.add_argument("--only", type=str, default="",
+                    help="comma-separated substrings of bench names to run")
+    ap.add_argument("--json", type=str, default=None,
+                    help="machine-readable output path ('' to disable); "
+                    "defaults to BENCH_fleet.json for full default runs "
+                    "and off for --only/--steps subsets (so smoke runs "
+                    "don't clobber the tracked perf record)")
+    args = ap.parse_args(argv)
+    N_STEPS = args.steps
+    only = [s for s in args.only.split(",") if s]
+    if args.json is None:
+        args.json = "" if (only or N_STEPS != 1024) else "BENCH_fleet.json"
+
+    results = {}
     print("name,us_per_call,derived")
     for bench in BENCHES:
+        if only and not any(s in bench.__name__ for s in only):
+            continue
         try:
             for name, us, derived in bench():
+                results[name] = {"us_per_call": round(us, 1),
+                                 "derived": derived}
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception as e:  # noqa: BLE001
+            results[bench.__name__] = {"us_per_call": None,
+                                       "derived":
+                                       f"ERROR:{type(e).__name__}:{e}"}
             print(f"{bench.__name__},nan,ERROR:{type(e).__name__}:{e}",
                   flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"steps": N_STEPS, "benches": results}, f, indent=1,
+                      sort_keys=True)
+        print(f"# wrote {args.json} ({len(results)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -23,9 +23,11 @@ def main() -> int:
     print(header)
     print("-" * len(header))
     gains = {t: [] for t in ("proposed", "core_only", "bram_only")}
-    for name, acc in ACCELERATORS.items():
-        plat = ctl.fpga_platform(acc)
-        res = ctl.compare_all(plat, trace)
+    # One fused program evaluates all accelerators × techniques at once.
+    platforms = [ctl.fpga_platform(acc) for acc in ACCELERATORS.values()]
+    fleet = ctl.compare_all_batched(platforms, trace)
+    for name, plat in zip(ACCELERATORS, platforms):
+        res = fleet[plat.name]
         for t in gains:
             gains[t].append(res[t].power_gain)
         print(f"{name:11s} {res['proposed'].power_gain:8.2f}x "

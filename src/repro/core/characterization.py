@@ -32,7 +32,7 @@ roofline *max* composition (see DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Mapping, Tuple
+from typing import Dict, Mapping, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -409,3 +409,233 @@ def tpu_core_delay_factor(v: jnp.ndarray) -> jnp.ndarray:
 
 def tpu_hbm_delay_factor(v: jnp.ndarray) -> jnp.ndarray:
     return TPU_LIBRARY["hbm"].delay_factor(v)
+
+
+# ---------------------------------------------------------------------------
+# Array-parameterized platforms (the fleet-scale fast path)
+# ---------------------------------------------------------------------------
+#
+# The closure-based API above (``AppPowerModel.power``, ``fpga_delay_fn``,
+# ...) captures platform constants in Python, so every platform is a fresh
+# function object and every (platform × technique) cell of a sweep retraces
+# its own XLA program.  ``PlatformParams`` lifts those constants into pytree
+# *leaves*: one program compiles for the array shapes, and new platforms —
+# new accelerators, new roofline terms — are just new leaf values, stackable
+# with :func:`stack_platform_params` and ``vmap``-able along the fleet axis.
+#
+# Both delay models reduce to one parametric form over padded "terms":
+#
+#   delay(Vc, Vb) = combine_i  w_i · D(V_rail_i; vth_i, alpha_i, v0_i)
+#   power(Vc, Vb, f) = Σ_i  dyn_i·(V/v0)²·f + stat_i·(V/v0)·exp(κ_i·(V−v0))
+#
+# with ``combine`` = Σ (FPGA serial critical path, Eq. 1) or max (TPU
+# roofline).  Weights are pre-normalized so delay(nominal) == 1; padding
+# terms carry zero weight/coefficients and are inert under both reductions.
+
+#: Rail codes for ``PlatformParams`` term arrays.
+RAIL_CORE, RAIL_BRAM, RAIL_FIXED = 0, 1, 2
+
+#: Default padded term counts — every platform builder pads to these so all
+#: ``PlatformParams`` in a fleet share one pytree structure and shapes.
+DELAY_TERMS_PAD = 4
+POWER_TERMS_PAD = 8
+
+
+class PlatformParams(NamedTuple):
+    """One platform's delay/power model as arrays (a JAX pytree).
+
+    Leading batch axes are allowed on every leaf: ``stack_platform_params``
+    builds a fleet ``PlatformParams`` whose leaves are ``[K, ...]``.
+    """
+
+    # Delay terms [D]: weight · normalized alpha-power-law delay per term.
+    dl_weight: jnp.ndarray
+    dl_vth: jnp.ndarray
+    dl_alpha: jnp.ndarray
+    dl_v0: jnp.ndarray
+    dl_rail: jnp.ndarray       # int32 — RAIL_CORE / RAIL_BRAM
+    delay_mode: jnp.ndarray    # int32 scalar — 0: sum (Eq. 1), 1: max (roofline)
+    # Power terms [P]: folded dynamic/static coefficients per term.
+    pw_rail: jnp.ndarray       # int32 — RAIL_CORE / RAIL_BRAM / RAIL_FIXED
+    pw_v0: jnp.ndarray
+    pw_dyn: jnp.ndarray
+    pw_stat: jnp.ndarray
+    pw_kappa: jnp.ndarray
+    # Scalars.
+    nominal_power_arb: jnp.ndarray
+    watts_scale: jnp.ndarray   # watts per arbitrary power unit
+
+
+def params_delay(p: PlatformParams, v_core, v_bram) -> jnp.ndarray:
+    """Normalized critical-path / step delay (1.0 at nominal rails)."""
+    vc, vb = jnp.broadcast_arrays(jnp.asarray(v_core, jnp.float32),
+                                  jnp.asarray(v_bram, jnp.float32))
+    v = jnp.where(p.dl_rail == RAIL_CORE, vc[..., None], vb[..., None])
+    num = v / jnp.maximum(v - p.dl_vth, 1e-6) ** p.dl_alpha
+    den = p.dl_v0 / (p.dl_v0 - p.dl_vth) ** p.dl_alpha
+    d = p.dl_weight * (num / den)
+    return jnp.where(p.delay_mode == 1, jnp.max(d, axis=-1),
+                     jnp.sum(d, axis=-1))
+
+
+def params_power(p: PlatformParams, v_core, v_bram, f_rel) -> jnp.ndarray:
+    """Platform power (arbitrary units) at an operating point."""
+    vc, vb, f = jnp.broadcast_arrays(jnp.asarray(v_core, jnp.float32),
+                                     jnp.asarray(v_bram, jnp.float32),
+                                     jnp.asarray(f_rel, jnp.float32))
+    v = jnp.where(p.pw_rail == RAIL_CORE, vc[..., None],
+                  jnp.where(p.pw_rail == RAIL_BRAM, vb[..., None], p.pw_v0))
+    dyn = p.pw_dyn * (v / p.pw_v0) ** 2 * f[..., None]
+    stat = p.pw_stat * (v / p.pw_v0) * jnp.exp(p.pw_kappa * (v - p.pw_v0))
+    return jnp.sum(dyn + stat, axis=-1)
+
+
+def params_power_watts(p: PlatformParams, v_core, v_bram, f_rel) -> jnp.ndarray:
+    return params_power(p, v_core, v_bram, f_rel) * p.watts_scale
+
+
+_RAIL_CODE = {"core": RAIL_CORE, "bram": RAIL_BRAM,
+              "io": RAIL_FIXED, "config": RAIL_FIXED}
+
+
+def _pad(xs: Sequence[float], n: int, fill: float) -> np.ndarray:
+    if len(xs) > n:
+        raise ValueError(f"{len(xs)} terms exceed pad size {n}")
+    return np.asarray(list(xs) + [fill] * (n - len(xs)), np.float32)
+
+
+def make_platform_params(
+        delay_terms: Sequence[Tuple[float, float, float, float, int]],
+        power_terms: Sequence[Tuple[int, float, float, float, float]],
+        *, delay_mode: int = 0, watts_nominal: float = 20.0,
+        delay_pad: int = DELAY_TERMS_PAD,
+        power_pad: int = POWER_TERMS_PAD) -> PlatformParams:
+    """Assemble a :class:`PlatformParams` from raw term tuples.
+
+    ``delay_terms``: (weight, vth, alpha, v0, rail); weights must already be
+    normalized so delay == 1 at nominal rails.  ``power_terms``:
+    (rail, v0, dyn_coef, stat_coef, kappa).
+    """
+    if any(t[4] == RAIL_FIXED for t in delay_terms):
+        # params_delay only distinguishes core vs bram; a fixed-rail delay
+        # term would silently be evaluated at v_bram.
+        raise ValueError("delay terms must ride a scalable rail "
+                         "(RAIL_CORE or RAIL_BRAM)")
+    dw = _pad([t[0] for t in delay_terms], delay_pad, 0.0)
+    p = PlatformParams(
+        dl_weight=jnp.asarray(dw),
+        dl_vth=jnp.asarray(_pad([t[1] for t in delay_terms], delay_pad, 0.1)),
+        dl_alpha=jnp.asarray(_pad([t[2] for t in delay_terms], delay_pad, 1.0)),
+        dl_v0=jnp.asarray(_pad([t[3] for t in delay_terms], delay_pad, 1.0)),
+        dl_rail=jnp.asarray(
+            _pad([t[4] for t in delay_terms], delay_pad, RAIL_CORE),
+            jnp.int32),
+        delay_mode=jnp.asarray(delay_mode, jnp.int32),
+        pw_rail=jnp.asarray(
+            _pad([t[0] for t in power_terms], power_pad, RAIL_FIXED),
+            jnp.int32),
+        pw_v0=jnp.asarray(_pad([t[1] for t in power_terms], power_pad, 1.0)),
+        pw_dyn=jnp.asarray(_pad([t[2] for t in power_terms], power_pad, 0.0)),
+        pw_stat=jnp.asarray(_pad([t[3] for t in power_terms], power_pad, 0.0)),
+        pw_kappa=jnp.asarray(_pad([t[4] for t in power_terms], power_pad, 0.0)),
+        nominal_power_arb=jnp.asarray(0.0),
+        watts_scale=jnp.asarray(0.0),
+    )
+    nominal = float(params_power(p, V_CORE_NOM, V_BRAM_NOM, 1.0))
+    return p._replace(nominal_power_arb=jnp.asarray(nominal, jnp.float32),
+                      watts_scale=jnp.asarray(watts_nominal / nominal,
+                                              jnp.float32))
+
+
+def fpga_platform_params(util: Utilization, device: Device, bram_alpha: float,
+                         core_mix: Mapping[str, float] | None = None,
+                         activity: float = 0.125,
+                         watts_nominal: float = 20.0) -> PlatformParams:
+    """Array form of ``fpga_delay_fn`` + ``AppPowerModel.power`` (Eq. 1-3)."""
+    mix = dict(CORE_PATH_MIX if core_mix is None else core_mix)
+    total = sum(mix.values())
+    # Mix terms always ride the core rail, matching core_delay_factor —
+    # which evaluates every mix entry at v_core regardless of its power rail.
+    delay_terms = [((w / total) / (1.0 + bram_alpha), FPGA_LIBRARY[n].vth,
+                    FPGA_LIBRARY[n].alpha, FPGA_LIBRARY[n].v_nominal(),
+                    RAIL_CORE) for n, w in mix.items()]
+    mem = FPGA_LIBRARY["memory"]
+    delay_terms.append((bram_alpha / (1.0 + bram_alpha), mem.vth, mem.alpha,
+                        mem.v_nominal(), RAIL_BRAM))
+
+    pm = AppPowerModel(util=util, device=device, activity=activity)
+    power_terms = []
+    for name, (used, idle) in pm._counts().items():
+        res = FPGA_LIBRARY[name]
+        power_terms.append((
+            _RAIL_CODE[res.rail], res.v_nominal(),
+            used * activity * res.p_dyn0,
+            (used + idle * res.p_stat_idle_frac) * res.p_stat0,
+            res.kappa))
+    return make_platform_params(delay_terms, power_terms, delay_mode=0,
+                                watts_nominal=watts_nominal)
+
+
+def analytic_platform_params(alpha: float = 0.2, beta: float = 0.4,
+                             watts_nominal: float = 20.0) -> PlatformParams:
+    """Array form of the §III motivational (α, β) model (Figs. 4-6)."""
+    mix = dict(CORE_PATH_MIX)
+    total = sum(mix.values())
+    delay_terms = [((w / total) / (1.0 + alpha), FPGA_LIBRARY[n].vth,
+                    FPGA_LIBRARY[n].alpha, FPGA_LIBRARY[n].v_nominal(),
+                    RAIL_CORE) for n, w in mix.items()]
+    mem = FPGA_LIBRARY["memory"]
+    delay_terms.append((alpha / (1.0 + alpha), mem.vth, mem.alpha,
+                        mem.v_nominal(), RAIL_BRAM))
+
+    logic, routing = FPGA_LIBRARY["logic"], FPGA_LIBRARY["routing"]
+    norm_core = float(
+        0.4 * logic.total_power(jnp.asarray(V_CORE_NOM), jnp.asarray(1.0))
+        + 0.6 * routing.total_power(jnp.asarray(V_CORE_NOM), jnp.asarray(1.0)))
+    norm_mem = float(mem.total_power(jnp.asarray(V_BRAM_NOM), jnp.asarray(1.0)))
+    power_terms = [
+        (RAIL_CORE, V_CORE_NOM, 0.4 * logic.p_dyn0 / norm_core,
+         0.4 * logic.p_stat0 / norm_core, logic.kappa),
+        (RAIL_CORE, V_CORE_NOM, 0.6 * routing.p_dyn0 / norm_core,
+         0.6 * routing.p_stat0 / norm_core, routing.kappa),
+        (RAIL_BRAM, V_BRAM_NOM, beta * mem.p_dyn0 / norm_mem,
+         beta * mem.p_stat0 / norm_mem, mem.kappa),
+    ]
+    return make_platform_params(delay_terms, power_terms, delay_mode=0,
+                                watts_nominal=watts_nominal)
+
+
+def tpu_platform_params(t_compute: float, t_memory: float,
+                        t_collective: float, composition: str = "max",
+                        watts_nominal: float = 200.0) -> PlatformParams:
+    """Array form of ``tpu_delay_fn`` + ``TpuChipPowerModel`` (DESIGN.md §2)."""
+    terms = np.asarray([t_compute, t_memory, t_collective], np.float64)
+    nominal = terms.max() if composition == "max" else terms.sum()
+    core, hbm, unc = (TPU_LIBRARY["core"], TPU_LIBRARY["hbm"],
+                      TPU_LIBRARY["uncore"])
+    delay_terms = [
+        (t_compute / nominal, core.vth, core.alpha, core.v_nominal(),
+         RAIL_CORE),
+        (t_memory / nominal, hbm.vth, hbm.alpha, hbm.v_nominal(), RAIL_BRAM),
+        (t_collective / nominal, core.vth, core.alpha, core.v_nominal(),
+         RAIL_CORE),
+    ]
+    chip = TpuChipPowerModel()
+    power_terms = [
+        (RAIL_CORE, core.v_nominal(), chip.w_core * core.p_dyn0,
+         chip.w_core * core.p_stat0, core.kappa),
+        (RAIL_BRAM, hbm.v_nominal(), chip.w_hbm * hbm.p_dyn0,
+         chip.w_hbm * hbm.p_stat0, hbm.kappa),
+        (RAIL_FIXED, unc.v_nominal(), chip.w_uncore * unc.p_dyn0,
+         chip.w_uncore * unc.p_stat0, unc.kappa),
+    ]
+    return make_platform_params(delay_terms, power_terms,
+                                delay_mode=1 if composition == "max" else 0,
+                                watts_nominal=watts_nominal)
+
+
+def stack_platform_params(params: Sequence[PlatformParams]) -> PlatformParams:
+    """Stack same-shaped platforms along a new leading fleet axis."""
+    if not params:
+        raise ValueError("empty platform list")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)

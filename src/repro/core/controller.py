@@ -22,7 +22,8 @@ QoS backlog dynamics are included.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, NamedTuple
+import functools
+from typing import Dict, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +60,9 @@ class PlatformSpec:
     power_fn: volt_mod.PowerFn
     nominal_power_arb: float
     watts_nominal: float = 20.0
+    #: Array-parameterized twin of (delay_fn, power_fn) — required by the
+    #: batched fleet path (``compare_all_batched`` / ``simulate_fleet``).
+    params: Optional[char.PlatformParams] = None
 
     @property
     def watts_scale(self) -> float:
@@ -72,13 +76,15 @@ def fpga_platform(acc: Accelerator, activity: float = 0.125,
                   watts_nominal: float = 20.0) -> PlatformSpec:
     """Paper's platform: one accelerator mapped on its smallest device."""
     pm = acc.power_model(activity)
+    mix = dict(acc.core_mix or {}) or None
     return PlatformSpec(
         name=f"fpga:{acc.name}",
-        delay_fn=volt_mod.fpga_delay_fn(acc.alpha, dict(acc.core_mix or {})
-                                        or None),
+        delay_fn=volt_mod.fpga_delay_fn(acc.alpha, mix),
         power_fn=pm.power,
         nominal_power_arb=float(pm.nominal_power()),
         watts_nominal=watts_nominal,
+        params=char.fpga_platform_params(acc.util, acc.device(), acc.alpha,
+                                         mix, activity, watts_nominal),
     )
 
 
@@ -110,6 +116,7 @@ def analytic_platform(alpha: float = 0.2, beta: float = 0.4,
         power_fn=power_fn,
         nominal_power_arb=1.0 + beta,
         watts_nominal=watts_nominal,
+        params=char.analytic_platform_params(alpha, beta, watts_nominal),
     )
 
 
@@ -135,6 +142,8 @@ def tpu_platform(t_compute: float, t_memory: float, t_collective: float,
         power_fn=power_fn,
         nominal_power_arb=float(chip.nominal_power()),
         watts_nominal=watts_nominal,
+        params=char.tpu_platform_params(t_compute, t_memory, t_collective,
+                                        composition, watts_nominal),
     )
 
 
@@ -192,17 +201,31 @@ def _grids_for(technique: str, v_step: float) -> volt_mod.VoltageGrids:
     raise ValueError(technique)
 
 
+def nominal_node_watts(platform: PlatformSpec) -> float:
+    """One node's watts at nominal rails and full frequency.
+
+    Shared by the nominal/power-gating table builders and ``summarize`` —
+    the denominator of the paper's power-reduction factor.
+    """
+    return float(platform.power_watts(jnp.asarray(char.V_CORE_NOM),
+                                      jnp.asarray(char.V_BRAM_NOM),
+                                      jnp.asarray(1.0)))
+
+
+def pll_standing_watts(cfg: ControllerConfig) -> float:
+    """Standing PLL power per node (two PLLs in the Fig. 9c architecture)."""
+    return (2 if cfg.pll.dual else 1) * cfg.pll.p_pll
+
+
 def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables:
     """Precompute the optimal operating point for every workload bin."""
     m = cfg.n_bins
-    pll_watts = (2 if cfg.pll.dual else 1) * cfg.pll.p_pll
+    pll_watts = pll_standing_watts(cfg)
     stall = pll_mod.stall_fraction(cfg.pll, cfg.tau)
 
     if cfg.technique == "nominal":
         cap = jnp.ones(m)
-        node_w = platform.power_watts(jnp.asarray(char.V_CORE_NOM),
-                                      jnp.asarray(char.V_BRAM_NOM),
-                                      jnp.asarray(1.0))
+        node_w = nominal_node_watts(platform)
         power = jnp.full(m, (node_w + pll_watts) * cfg.n_nodes)
         return BinTables(capacity=cap, power=power,
                          v_core=jnp.full(m, char.V_CORE_NOM),
@@ -217,9 +240,7 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
         edges = (np.arange(m) + 1.0) / m
         n_active = np.minimum(np.ceil(edges * cfg.n_nodes), cfg.n_nodes)
         cap = jnp.asarray(n_active / cfg.n_nodes)
-        node_w = float(platform.power_watts(jnp.asarray(char.V_CORE_NOM),
-                                            jnp.asarray(char.V_BRAM_NOM),
-                                            jnp.asarray(1.0)))
+        node_w = nominal_node_watts(platform)
         gated = (cfg.n_nodes - n_active) * cfg.gated_power_frac * node_w
         power = jnp.asarray(n_active * (node_w + pll_watts) + gated)
         return BinTables(capacity=cap, power=power,
@@ -270,11 +291,10 @@ class Summary:
     mean_backlog: float
 
 
-def simulate(platform: PlatformSpec, cfg: ControllerConfig,
-             trace: np.ndarray | Array) -> TraceResult:
-    """Run the §V control loop over a workload trace (one jitted scan)."""
-    tables = build_bin_tables(platform, cfg)
-    trace = jnp.asarray(trace, jnp.float32)
+def _scan_control_loop(tables: BinTables, cfg: ControllerConfig,
+                       trace: Array) -> TraceResult:
+    """The §V runtime loop as one ``lax.scan`` — shared by the
+    per-platform :func:`simulate` and the batched fleet path."""
     m = cfg.n_bins
 
     def step(carry, w_t):
@@ -308,11 +328,17 @@ def simulate(platform: PlatformSpec, cfg: ControllerConfig,
                        final_predictor=mstate)
 
 
+def simulate(platform: PlatformSpec, cfg: ControllerConfig,
+             trace: np.ndarray | Array) -> TraceResult:
+    """Run the §V control loop over a workload trace (one jitted scan)."""
+    tables = build_bin_tables(platform, cfg)
+    return _scan_control_loop(tables, cfg, jnp.asarray(trace, jnp.float32))
+
+
 def summarize(platform: PlatformSpec, cfg: ControllerConfig,
               trace: np.ndarray | Array, result: TraceResult) -> Summary:
-    nominal_cfg = dataclasses.replace(cfg, technique="nominal")
-    nominal_tables = build_bin_tables(platform, nominal_cfg)
-    nominal_w = float(nominal_tables.power[0])
+    nominal_w = (nominal_node_watts(platform)
+                 + pll_standing_watts(cfg)) * cfg.n_nodes
     mean_w = float(jnp.mean(result.power))
     offered = float(jnp.sum(jnp.asarray(trace)))
     served = offered - float(result.backlog[-1])
@@ -342,3 +368,218 @@ def compare_all(platform: PlatformSpec, trace,
                 **cfg_kwargs) -> Dict[str, Summary]:
     return {t: run_technique(platform, trace, t, **cfg_kwargs)
             for t in techniques}
+
+
+# ---------------------------------------------------------------------------
+# Fused fleet evaluation (one compiled program for platforms × techniques)
+# ---------------------------------------------------------------------------
+#
+# ``compare_all`` above re-closes over ``delay_fn``/``power_fn`` per
+# platform, so every (platform × technique) sweep cell traces its own XLA
+# program.  The fleet path instead stacks array-parameterized
+# ``PlatformParams`` along a leading axis, expresses techniques as boolean
+# grid masks, and runs *one* jitted program per stage:
+#
+#   * ``fleet_bin_tables``  — one vmapped grid sweep builds every
+#     (platform × technique) operating table;
+#   * ``simulate_fleet``    — one vmapped ``lax.scan`` runs every
+#     (platform × technique × trace) runtime loop.
+#
+# Both jits are keyed only on array *shapes* and the static
+# ``ControllerConfig``, so adding a platform of the same shape never
+# retraces — ``fleet_trace_counts`` exposes the trace counters for tests.
+
+DEFAULT_TECHNIQUES = ("proposed", "core_only", "bram_only", "freq_only",
+                      "power_gating")
+
+_TRACE_COUNTS = {"tables": 0, "simulate": 0}
+
+
+def fleet_trace_counts() -> Dict[str, int]:
+    """Times each fleet program has been (re)traced (for retrace tests)."""
+    return dict(_TRACE_COUNTS)
+
+
+@jax.jit
+def _fleet_dvfs_tables_jit(params: char.PlatformParams, masks: Array,
+                           levels: Array, core_grid: Array,
+                           bram_grid: Array) -> volt_mod.OperatingPoint:
+    """Grid-optimize every platform × technique × bin in one program.
+
+    ``params`` leaves are stacked [P, ...]; ``masks`` is [T, C, B]; returns
+    an :class:`~repro.core.voltage.OperatingPoint` with [P, T, M] fields.
+    """
+    _TRACE_COUNTS["tables"] += 1  # Python side effect → counts tracings only
+
+    def per_platform(p):
+        return jax.vmap(lambda mk: volt_mod.optimize_batch_params(
+            p, levels, core_grid, bram_grid, mk))(masks)
+
+    return jax.vmap(per_platform)(params)
+
+
+@jax.jit
+def _fleet_nominal_watts_jit(params: char.PlatformParams) -> Array:
+    return jax.vmap(lambda p: char.params_power_watts(
+        p, jnp.asarray(char.V_CORE_NOM), jnp.asarray(char.V_BRAM_NOM),
+        jnp.asarray(1.0)))(params)
+
+
+def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
+                     techniques: Sequence[str] = DEFAULT_TECHNIQUES
+                     ) -> BinTables:
+    """§V synthesis-time tables for a whole fleet: fields are [P, T, M].
+
+    ``params`` must be stacked (``stack_platform_params``) with leading
+    axis P.  DVFS techniques share one masked full-grid sweep; nominal and
+    power-gating are closed-form in the platform's nominal watts.
+    """
+    m = cfg.n_bins
+    pll_watts = pll_standing_watts(cfg)
+    stall = pll_mod.stall_fraction(cfg.pll, cfg.tau)
+    n_p = params.watts_scale.shape[0]
+
+    per_tech: Dict[str, BinTables] = {}
+    dvfs = [t for t in techniques if t not in ("nominal", "power_gating")]
+    if dvfs:
+        grids = volt_mod.VoltageGrids.default(cfg.v_step)
+        levels = volt_mod.bin_frequency_levels(m, cfg.margin, cfg.f_floor)
+        masks = jnp.stack([volt_mod.technique_grid_mask(t, grids)
+                           for t in dvfs])
+        pts = _fleet_dvfs_tables_jit(params, masks, levels,
+                                     grids.core, grids.bram)
+        node_w = pts.power * params.watts_scale[:, None, None]  # [P, Td, M]
+        cap = jnp.broadcast_to(levels * (1.0 - stall), node_w.shape)
+        power = (node_w + pll_watts) * cfg.n_nodes
+        f_rel = jnp.broadcast_to(levels, node_w.shape)
+        for i, t in enumerate(dvfs):
+            per_tech[t] = BinTables(capacity=cap[:, i], power=power[:, i],
+                                    v_core=pts.v_core[:, i],
+                                    v_bram=pts.v_bram[:, i],
+                                    f_rel=f_rel[:, i])
+
+    if "nominal" in techniques or "power_gating" in techniques:
+        node_w = _fleet_nominal_watts_jit(params)  # [P]
+        nom_vc = jnp.full((n_p, m), char.V_CORE_NOM)
+        nom_vb = jnp.full((n_p, m), char.V_BRAM_NOM)
+        ones = jnp.ones((n_p, m))
+        if "nominal" in techniques:
+            per_tech["nominal"] = BinTables(
+                capacity=ones,
+                power=jnp.broadcast_to(
+                    ((node_w + pll_watts) * cfg.n_nodes)[:, None], (n_p, m)),
+                v_core=nom_vc, v_bram=nom_vb, f_rel=ones)
+        if "power_gating" in techniques:
+            edges = (np.arange(m) + 1.0) / m
+            n_active = jnp.asarray(np.minimum(np.ceil(edges * cfg.n_nodes),
+                                              cfg.n_nodes), jnp.float32)
+            gated = ((cfg.n_nodes - n_active) * cfg.gated_power_frac
+                     * node_w[:, None])
+            per_tech["power_gating"] = BinTables(
+                capacity=jnp.broadcast_to(n_active / cfg.n_nodes, (n_p, m)),
+                power=n_active * (node_w[:, None] + pll_watts) + gated,
+                v_core=nom_vc, v_bram=nom_vb, f_rel=ones)
+
+    return BinTables(*[jnp.stack([getattr(per_tech[t], f) for t in techniques],
+                                 axis=1)
+                       for f in BinTables._fields])
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _simulate_fleet_jit(tables: BinTables, traces: Array,
+                        cfg: ControllerConfig) -> TraceResult:
+    """One vmapped ``lax.scan`` over the flattened [K] fleet axis."""
+    _TRACE_COUNTS["simulate"] += 1
+    return jax.vmap(lambda tab, trace: _scan_control_loop(tab, cfg, trace)
+                    )(tables, traces)
+
+
+def simulate_fleet(tables: BinTables, traces: np.ndarray | Array,
+                   cfg: ControllerConfig) -> TraceResult:
+    """Run the §V loop for every fleet cell in one compiled program.
+
+    ``tables`` fields carry arbitrary leading axes ``[..., M]`` (e.g.
+    [P, T, M] from :func:`fleet_bin_tables`); ``traces`` is either one
+    shared trace [S] or per-cell traces broadcastable to ``[..., S]``.
+    Returns a :class:`TraceResult` whose fields have shape ``[..., S]``.
+    The jit cache is keyed on shapes + the static config (normalized to be
+    technique-independent — the runtime loop is shared across techniques),
+    so repeat calls with same-shaped inputs never retrace.
+    """
+    lead = tables.capacity.shape[:-1]
+    k = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    flat = BinTables(*[jnp.reshape(x, (k,) + x.shape[len(lead):])
+                       for x in tables])
+    traces = jnp.asarray(traces, jnp.float32)
+    if traces.ndim == 1:
+        traces = jnp.broadcast_to(traces, lead + traces.shape)
+    elif (traces.ndim - 1 == len(lead)
+          and all(a == b or a == 1 for a, b in zip(traces.shape[:-1], lead))):
+        traces = jnp.broadcast_to(traces, lead + traces.shape[-1:])
+    else:
+        # No rank-extending broadcasting: [P, S] traces against [P, T, M]
+        # tables would silently line P up against T whenever P == T.
+        raise ValueError(
+            f"traces leading axes {traces.shape[:-1]} must match the "
+            f"tables' leading axes {lead} dim-for-dim (1s broadcast), or "
+            "pass a single [S] trace; expand per-platform traces to "
+            "[P, 1, S] explicitly")
+    traces = jnp.reshape(traces, (k, traces.shape[-1]))
+    cfg = dataclasses.replace(cfg, technique="proposed")
+    out = _simulate_fleet_jit(flat, traces, cfg)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.reshape(x, lead + x.shape[1:]), out)
+
+
+def compare_all_batched(platforms: Sequence[PlatformSpec],
+                        trace: np.ndarray | Array,
+                        techniques: Sequence[str] = DEFAULT_TECHNIQUES,
+                        **cfg_kwargs) -> Dict[str, Dict[str, Summary]]:
+    """Batched ``compare_all`` over many platforms: one fused program.
+
+    Returns ``{platform.name: {technique: Summary}}`` matching the
+    per-platform ``compare_all`` summaries (same math, array-parameterized).
+    Every platform needs ``params`` (all factory helpers attach them).
+    """
+    missing = [p.name for p in platforms if p.params is None]
+    if missing:
+        raise ValueError(f"platforms lack PlatformParams: {missing}")
+    names = [p.name for p in platforms]
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(f"duplicate platform names {dupes}: results are "
+                         "keyed by name — pass distinct names (e.g. "
+                         "tpu_platform(..., name=...))")
+    cfg = ControllerConfig(**cfg_kwargs)
+    params = char.stack_platform_params([p.params for p in platforms])
+    tables = fleet_bin_tables(params, cfg, techniques)     # [P, T, M]
+    res = simulate_fleet(tables, trace, cfg)               # [P, T, S]
+
+    pll_watts = pll_standing_watts(cfg)
+    nominal_w = (np.asarray(_fleet_nominal_watts_jit(params))
+                 + pll_watts) * cfg.n_nodes                # [P]
+    offered = float(jnp.sum(jnp.asarray(trace, jnp.float32)))
+    power = np.asarray(res.power)
+    viol = np.asarray(res.violations)
+    backlog = np.asarray(res.backlog)
+    mispred = np.asarray(res.mispredictions)
+    n_steps = power.shape[-1]
+
+    out: Dict[str, Dict[str, Summary]] = {}
+    for i, plat in enumerate(platforms):
+        per_tech = {}
+        for j, tech in enumerate(techniques):
+            mean_w = float(power[i, j].mean())
+            served = offered - float(backlog[i, j, -1])
+            per_tech[tech] = Summary(
+                technique=tech,
+                mean_power_w=mean_w,
+                nominal_power_w=float(nominal_w[i]),
+                power_gain=float(nominal_w[i]) / mean_w,
+                qos_violation_rate=float(viol[i, j].mean()),
+                served_fraction=served / max(offered, 1e-9),
+                misprediction_rate=float(mispred[i, j]) / max(n_steps, 1),
+                mean_backlog=float(backlog[i, j].mean()),
+            )
+        out[plat.name] = per_tech
+    return out

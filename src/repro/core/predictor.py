@@ -23,6 +23,7 @@ a known period.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Tuple
 
 import jax
@@ -139,6 +140,35 @@ def observe(cfg: PredictorConfig, state: MarkovState, actual_bin: Array,
         mispredictions=state.mispredictions + mispred.astype(jnp.int32),
         consecutive_mispred=consecutive,
     )
+
+
+class TraceEval(NamedTuple):
+    """Whole-trace predictor evaluation (see :func:`evaluate_trace`)."""
+
+    predicted: Array      # [T] int32 — bin predicted for each step
+    actual: Array         # [T] int32 — bin observed at each step
+    final_state: MarkovState
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def evaluate_trace(cfg: PredictorConfig, trace: Array) -> TraceEval:
+    """Run predict→observe over a whole workload trace in one ``lax.scan``.
+
+    Replaces per-step host loops (2 dispatches per step) with a single
+    compiled program; the jit cache is keyed on the static config and the
+    trace shape, so sweeps over same-length traces never retrace.
+    Accuracy metrics are cheap array reductions on the result, e.g.
+    ``jnp.mean(out.predicted == out.actual)``.
+    """
+    trace = jnp.asarray(trace, jnp.float32)
+
+    def step(state, w):
+        p = predict(cfg, state)
+        a = workload_to_bin(w, cfg.n_bins)
+        return observe(cfg, state, a, p), (p, a)
+
+    state, (preds, acts) = jax.lax.scan(step, init_state(cfg), trace)
+    return TraceEval(predicted=preds, actual=acts, final_state=state)
 
 
 def transition_matrix(state: MarkovState) -> Array:

@@ -168,6 +168,75 @@ def optimize_batch(delay_fn: DelayFn, power_fn: PowerFn, f_rels: Array,
 
 
 # ---------------------------------------------------------------------------
+# Array-parameterized masked-grid optimizer (the fleet fast path)
+# ---------------------------------------------------------------------------
+#
+# The closure optimizer above builds a *different-shaped* grid per technique
+# (core-only pins V_bram, etc.), so each technique is its own XLA program.
+# Here every technique shares the one full (core × bram) grid and differs
+# only in a boolean feasibility *mask* — a traced array — so a single
+# compiled program sweeps all platforms × techniques via ``vmap``.  Grids
+# ascend to nominal, so ``grid[-1]`` is the nominal point and every
+# technique mask keeps it feasible.
+
+
+def technique_grid_mask(technique: str, grids: VoltageGrids) -> Array:
+    """Boolean [C, B] mask of grid points a technique may select."""
+    c, b = grids.core.shape[0], grids.bram.shape[0]
+    mask = jnp.zeros((c, b), bool)
+    if technique == "proposed":
+        return jnp.ones((c, b), bool)
+    if technique == "core_only":
+        return mask.at[:, -1].set(True)      # V_bram pinned at nominal
+    if technique == "bram_only":
+        return mask.at[-1, :].set(True)      # V_core pinned at nominal
+    if technique in ("freq_only", "nominal", "power_gating"):
+        return mask.at[-1, -1].set(True)     # both rails nominal
+    raise ValueError(technique)
+
+
+def optimize_point_params(params: "char.PlatformParams", f_rel: Array,
+                          core_grid: Array, bram_grid: Array, mask: Array,
+                          slack_eps: float = 1e-6) -> OperatingPoint:
+    """:func:`optimize_point` over array-parameterized platforms.
+
+    All platform constants live in ``params`` (a pytree of arrays) and the
+    technique lives in ``mask``, so the whole argument list is traced —
+    ``vmap`` freely over platforms, techniques, and frequency levels.
+    """
+    f_rel = jnp.asarray(f_rel)
+    stretch = 1.0 / jnp.maximum(f_rel, 1e-6)
+
+    vc = core_grid[:, None]
+    vb = bram_grid[None, :]
+    delay = char.params_delay(params, vc, vb)         # [C, B]
+    power = char.params_power(params, vc, vb, f_rel)  # [C, B]
+
+    feasible = (delay <= stretch * (1.0 + slack_eps)) & mask
+    masked = jnp.where(feasible, power, jnp.inf)
+    flat_idx = jnp.argmin(masked.reshape(-1))
+    ci, bi = jnp.unravel_index(flat_idx, masked.shape)
+    any_feasible = jnp.any(feasible)
+
+    v_core = jnp.where(any_feasible, core_grid[ci], core_grid[-1])
+    v_bram = jnp.where(any_feasible, bram_grid[bi], bram_grid[-1])
+    p = jnp.where(any_feasible, masked.reshape(-1)[flat_idx],
+                  char.params_power(params, core_grid[-1], bram_grid[-1],
+                                    f_rel))
+    return OperatingPoint(v_core=v_core, v_bram=v_bram, f_rel=f_rel,
+                          power=p, feasible=any_feasible)
+
+
+def optimize_batch_params(params: "char.PlatformParams", f_rels: Array,
+                          core_grid: Array, bram_grid: Array,
+                          mask: Array) -> OperatingPoint:
+    """vmap of :func:`optimize_point_params` over frequency levels."""
+    return jax.vmap(
+        lambda f: optimize_point_params(params, f, core_grid, bram_grid,
+                                        mask))(jnp.asarray(f_rels))
+
+
+# ---------------------------------------------------------------------------
 # Synthesis-time operating table (paper §V)
 # ---------------------------------------------------------------------------
 

@@ -98,9 +98,14 @@ def compare_techniques(terms: RooflineTerms, trace: np.ndarray,
                        techniques=("proposed", "core_only", "bram_only",
                                    "freq_only", "power_gating")
                        ) -> Dict[str, ctl.Summary]:
-    """Paper Table II on the TPU serving platform (modeled power)."""
-    out = {}
-    for t in techniques:
-        sim = DvfsServingSimulator(terms=terms, technique=t, n_chips=n_chips)
-        out[t] = sim.run_trace(trace)
-    return out
+    """Paper Table II on the TPU serving platform (modeled power).
+
+    Runs the fused fleet path: all techniques share one masked-grid table
+    sweep and one vmapped ``lax.scan``, so sweeping many (arch × shape)
+    roofline cells reuses the same two compiled programs.
+    """
+    platform = ctl.tpu_platform(terms.t_compute, terms.t_memory,
+                                terms.t_collective)
+    out = ctl.compare_all_batched([platform], trace, techniques=techniques,
+                                  n_nodes=n_chips)
+    return out[platform.name]

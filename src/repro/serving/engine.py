@@ -60,24 +60,41 @@ class ServeEngine:
 
     def __post_init__(self):
         self._prefill = jax.jit(make_prefill(self.cfg, self.capacity))
-        self._decode = jax.jit(make_decode_step(self.cfg))
+        decode_step = make_decode_step(self.cfg)
+
+        def decode_loop(params, cache, first_tok, pos, n_steps):
+            """``lax.scan`` token loop: one program for the whole decode."""
+
+            def step(carry, _):
+                tok, cache, pos = carry
+                logits, cache = decode_step(params, cache, tok[:, None], pos)
+                tok = greedy_sample(logits)
+                return (tok, cache, pos + 1), tok
+
+            (_, _, _), toks = jax.lax.scan(step, (first_tok, cache, pos),
+                                           None, length=n_steps)
+            # [n_steps, B] -> [B, n_steps], prefixed by the prefill token
+            return jnp.concatenate([first_tok[:, None],
+                                    jnp.moveaxis(toks, 0, 1)], axis=1)
+
+        self._decode_loop = jax.jit(decode_loop, static_argnames=("n_steps",))
 
     def generate(self, prompt_tokens: Array, n_new: int,
                  extra_inputs: Optional[Dict[str, Array]] = None
                  ) -> Array:
-        """Greedy-generate ``n_new`` tokens after a shared-length prompt."""
+        """Greedy-generate ``n_new`` tokens after a shared-length prompt.
+
+        The token loop is a compiled ``lax.scan`` (2 host dispatches per
+        call — prefill + decode loop — instead of 2 per *token*).  The
+        loop length is static: each distinct ``n_new`` compiles its own
+        loop program, so callers sweeping lengths should bucket them.
+        """
         B, S = prompt_tokens.shape
         batch = {"tokens": prompt_tokens}
         if extra_inputs:
             batch.update(extra_inputs)
         last_logits, cache = self._prefill(self.params, batch)
         tok = greedy_sample(last_logits)
-        out = [tok]
         pos = jnp.full((B,), S, jnp.int32)
-        for _ in range(n_new - 1):
-            logits, cache = self._decode(self.params, cache, tok[:, None],
-                                         pos)
-            tok = greedy_sample(logits)
-            out.append(tok)
-            pos = pos + 1
-        return jnp.stack(out, axis=1)
+        return self._decode_loop(self.params, cache, tok, pos,
+                                 max(n_new - 1, 0))

@@ -1,0 +1,143 @@
+"""Fused fleet path: array-parameterized platforms, masked grids, batched
+controller — parity with the closure path and zero-retrace guarantees."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import characterization as char
+from repro.core import controller as ctl
+from repro.core import predictor as pred_mod
+from repro.core import voltage as volt
+from repro.core import workload as wl
+from repro.core.accelerators import ACCELERATORS
+
+SUMMARY_FIELDS = ("mean_power_w", "nominal_power_w", "power_gain",
+                  "qos_violation_rate", "served_fraction",
+                  "misprediction_rate", "mean_backlog")
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return wl.generate_trace(wl.WorkloadConfig(n_steps=256, seed=0))
+
+
+def test_platform_params_match_closures():
+    """params_delay/params_power == the captured-closure models."""
+    vc = char.CORE_RAIL.grid()[:, None]
+    vb = char.BRAM_RAIL.grid()[None, :]
+    plats = [ctl.fpga_platform(ACCELERATORS["tabla"]),
+             ctl.fpga_platform(ACCELERATORS["stripes"]),
+             ctl.analytic_platform(alpha=0.2, beta=0.4),
+             ctl.tpu_platform(t_compute=0.002, t_memory=0.012,
+                              t_collective=0.001)]
+    for p in plats:
+        d0 = np.asarray(p.delay_fn(vc, vb))
+        d1 = np.asarray(char.params_delay(p.params, vc, vb))
+        np.testing.assert_allclose(d1, d0, rtol=1e-5, atol=1e-5)
+        for f in (0.3, 1.0):
+            w0 = np.asarray(p.power_fn(vc, vb, jnp.asarray(f)))
+            w1 = np.asarray(char.params_power(p.params, vc, vb, f))
+            np.testing.assert_allclose(w1, w0, rtol=1e-5)
+
+
+def test_masked_grid_matches_per_technique_grids():
+    """One full grid + technique mask == the per-technique small grids."""
+    plat = ctl.fpga_platform(ACCELERATORS["tabla"])
+    full = volt.VoltageGrids.default()
+    per_tech = {"proposed": full,
+                "core_only": volt.VoltageGrids.core_only(),
+                "bram_only": volt.VoltageGrids.bram_only(),
+                "freq_only": volt.VoltageGrids.frequency_only()}
+    levels = volt.bin_frequency_levels(25, 0.05)
+    for tech, grids in per_tech.items():
+        ref = volt.optimize_batch(plat.delay_fn, plat.power_fn, levels, grids)
+        mask = volt.technique_grid_mask(tech, full)
+        got = volt.optimize_batch_params(plat.params, levels, full.core,
+                                         full.bram, mask)
+        np.testing.assert_allclose(np.asarray(got.v_core),
+                                   np.asarray(ref.v_core), atol=1e-6,
+                                   err_msg=tech)
+        np.testing.assert_allclose(np.asarray(got.v_bram),
+                                   np.asarray(ref.v_bram), atol=1e-6,
+                                   err_msg=tech)
+        np.testing.assert_allclose(np.asarray(got.power),
+                                   np.asarray(ref.power), rtol=1e-5,
+                                   err_msg=tech)
+
+
+def test_compare_all_batched_parity(trace):
+    """Fused fleet summaries == per-technique compare_all within 1e-5."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"]),
+                 ctl.fpga_platform(ACCELERATORS["dnnweaver"])]
+    batched = ctl.compare_all_batched(platforms, trace)
+    for plat in platforms:
+        ref = ctl.compare_all(plat, trace)
+        for tech, s in ref.items():
+            got = batched[plat.name][tech]
+            for f in SUMMARY_FIELDS:
+                np.testing.assert_allclose(
+                    getattr(got, f), getattr(s, f), rtol=1e-5, atol=1e-5,
+                    err_msg=f"{plat.name}/{tech}/{f}")
+
+
+def test_simulate_fleet_zero_retrace(trace):
+    """Same-shaped new platforms reuse both compiled fleet programs."""
+    first = [ctl.fpga_platform(ACCELERATORS["tabla"]),
+             ctl.fpga_platform(ACCELERATORS["dnnweaver"])]
+    ctl.compare_all_batched(first, trace)
+    before = ctl.fleet_trace_counts()
+    # New platforms + new trace values, same shapes → zero retraces.
+    second = [ctl.fpga_platform(ACCELERATORS["diannao"]),
+              ctl.fpga_platform(ACCELERATORS["proteus"])]
+    trace2 = wl.generate_trace(wl.WorkloadConfig(n_steps=256, seed=9))
+    ctl.compare_all_batched(second, trace2)
+    after = ctl.fleet_trace_counts()
+    assert after == before, f"retraced: {before} -> {after}"
+
+
+def test_simulate_fleet_shapes_and_technique_independence(trace):
+    """Leading axes round-trip [P, T, M] and cfg.technique is ignored by
+    the shared runtime loop (it only shapes the tables)."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    params = char.stack_platform_params([p.params for p in platforms])
+    cfg_a = ctl.ControllerConfig(technique="proposed")
+    cfg_b = ctl.ControllerConfig(technique="bram_only")
+    tables = ctl.fleet_bin_tables(params, cfg_a, ("proposed", "core_only"))
+    assert tables.capacity.shape == (1, 2, cfg_a.n_bins)
+    ra = ctl.simulate_fleet(tables, trace, cfg_a)
+    rb = ctl.simulate_fleet(tables, trace, cfg_b)
+    assert ra.power.shape == (1, 2, len(trace))
+    np.testing.assert_array_equal(np.asarray(ra.power), np.asarray(rb.power))
+    # Ambiguous per-platform traces must be rejected, not mis-broadcast
+    # (a [P, S] array would line P up against the technique axis).
+    with pytest.raises(ValueError):
+        ctl.simulate_fleet(tables, np.stack([trace, trace]), cfg_a)
+
+
+def test_evaluate_trace_matches_host_loop():
+    cfg = pred_mod.PredictorConfig(n_bins=10, warmup_steps=8)
+    trace = wl.generate_trace(wl.WorkloadConfig(n_steps=96, seed=4))
+    state = pred_mod.init_state(cfg)
+    preds, acts = [], []
+    for w in trace:
+        p = pred_mod.predict(cfg, state)
+        a = pred_mod.workload_to_bin(jnp.asarray(float(w)), cfg.n_bins)
+        state = pred_mod.observe(cfg, state, a, p)
+        preds.append(int(p))
+        acts.append(int(a))
+    out = pred_mod.evaluate_trace(cfg, trace)
+    np.testing.assert_array_equal(np.asarray(out.predicted), preds)
+    np.testing.assert_array_equal(np.asarray(out.actual), acts)
+    assert int(out.final_state.mispredictions) == int(state.mispredictions)
+
+
+def test_stack_platform_params_shapes():
+    ps = [ctl.fpga_platform(ACCELERATORS[n]).params
+          for n in ("tabla", "diannao", "proteus")]
+    stacked = char.stack_platform_params(ps)
+    assert stacked.dl_weight.shape == (3, char.DELAY_TERMS_PAD)
+    assert stacked.pw_dyn.shape == (3, char.POWER_TERMS_PAD)
+    assert stacked.watts_scale.shape == (3,)
+    with pytest.raises(ValueError):
+        char.stack_platform_params([])
