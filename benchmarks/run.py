@@ -195,6 +195,54 @@ def bench_fleet():
     ]
 
 
+def bench_hybrid():
+    """Hybrid node-scaling + DVFS vs proposed / power-gating (fleet path).
+
+    The node-count gears ride the same masked grid sweep as the DVFS
+    techniques, so the whole comparison is still two compiled programs.
+    ``mean_nodes`` is the average powered-on node count under the bursty
+    trace; the closed-loop row drives the serving batcher with the
+    controller's f_rel in the loop and reports measured latency.
+    """
+    trace = _trace()
+    platforms = [ctl.fpga_platform(acc) for acc in ACCELERATORS.values()]
+    techniques = ("proposed", "power_gating", "hybrid")
+    t0 = time.perf_counter()
+    fleet = ctl.compare_all_batched(platforms, trace, techniques=techniques)
+    dt = (time.perf_counter() - t0) / (len(platforms) * len(techniques)) \
+        / len(trace) * 1e6
+    rows = []
+    for name, plat in zip(ACCELERATORS, platforms):
+        res = fleet[plat.name]
+        sim = ctl.simulate(plat, ctl.ControllerConfig(technique="hybrid"),
+                           trace)
+        rows.append((f"hybrid/{name}", dt,
+                     f"hybrid={res['hybrid'].power_gain:.2f}x"
+                     f";prop={res['proposed'].power_gain:.2f}x"
+                     f";pg={res['power_gating'].power_gain:.2f}x"
+                     f";mean_nodes={float(np.mean(np.asarray(sim.n_active))):.2f}"))
+
+    from repro.serving.autoscale import DvfsServingSimulator, RooflineTerms
+    terms = RooflineTerms(t_compute=0.002, t_memory=0.012, t_collective=0.001)
+    # Short predictor warmup so even the 64-step CI smoke leaves the
+    # pinned-top-bin phase and actually exercises the closed loop.
+    sim = DvfsServingSimulator(
+        terms=terms, steps_per_tau=16,
+        controller_cfg=ctl.ControllerConfig(
+            technique="hybrid", n_nodes=8,
+            predictor=pred_mod.PredictorConfig(warmup_steps=4)))
+    lam = np.full(max(4 * N_STEPS, 256), 1.0)
+    t0 = time.perf_counter()
+    out = sim.run_request_load(lam, batch_size=32, mean_new_tokens=8)
+    us = (time.perf_counter() - t0) / len(lam) * 1e6
+    s = out["summary"]
+    rows.append(("hybrid/closed_loop_serving", us,
+                 f"gain={s.power_gain:.2f}x;occ={out['occupancy_tau'].mean():.2f}"
+                 f";p50={s.latency_p50:.0f};p99={s.latency_p99:.0f}"
+                 f";completed={out['completed']}"))
+    return rows
+
+
 def bench_voltage_optimizer():
     """Runtime cost of the §V voltage selection (table build + lookup)."""
     plat = ctl.fpga_platform(ACCELERATORS["tabla"])
@@ -251,7 +299,7 @@ def bench_tpu_serving():
 BENCHES = [bench_fleet, bench_table2, bench_fig4_workload_sweep,
            bench_fig5_alpha_sweep, bench_fig6_beta_sweep, bench_fig10_trace,
            bench_fig12_per_accelerator_traces, bench_predictor,
-           bench_voltage_optimizer, bench_tpu_serving]
+           bench_hybrid, bench_voltage_optimizer, bench_tpu_serving]
 
 
 def main(argv=None) -> None:

@@ -44,15 +44,27 @@ def main() -> int:
         print(f"{tech:14s} {s.power_gain:9.2f}x {s.qos_violation_rate:9.3f} "
               f"{s.served_fraction:7.3f}")
 
-    # closed-loop: continuous batcher feeding the controller
-    sim = DvfsServingSimulator(terms=terms, steps_per_tau=32)
-    lam = np.concatenate([np.full(512, 2.0), np.full(512, 9.0),
-                          np.full(512, 4.0)])
-    out = sim.run_request_load(lam, batch_size=16, mean_new_tokens=24)
-    s = out["summary"]
-    print(f"[closed-loop] completed={out['completed']} requests, "
-          f"power_gain={s.power_gain:.2f}x, "
-          f"qos_violations={s.qos_violation_rate:.3f}")
+    # closed-loop: the controller's f_rel throttles the continuous batcher,
+    # so occupancy and request latency respond to the DVFS decisions.
+    # (Load kept below saturation so the response is visible.)
+    from repro.core import controller as ctl
+    from repro.core import predictor as pred_mod
+    lam = np.concatenate([np.full(512, 0.6), np.full(512, 2.2),
+                          np.full(512, 1.0)])
+    for tech in ("proposed", "hybrid", "nominal"):
+        cfg = ctl.ControllerConfig(
+            technique=tech, n_nodes=8,
+            predictor=pred_mod.PredictorConfig(warmup_steps=4))
+        sim = DvfsServingSimulator(terms=terms, steps_per_tau=32,
+                                   controller_cfg=cfg)
+        out = sim.run_request_load(lam, batch_size=32, mean_new_tokens=12)
+        s = out["summary"]
+        print(f"[closed-loop/{tech:8s}] completed={out['completed']}, "
+              f"power_gain={s.power_gain:.2f}x, "
+              f"qos_violations={s.qos_violation_rate:.3f}, "
+              f"occ={out['occupancy_tau'].mean():.2f}, "
+              f"latency p50={s.latency_p50:.0f} p99={s.latency_p99:.0f} "
+              f"steps")
     return 0
 
 

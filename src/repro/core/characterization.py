@@ -62,11 +62,18 @@ class Rail:
     scalable: bool = True
 
     def grid(self, step: float = V_STEP) -> jnp.ndarray:
-        """All voltage set-points for this rail (ascending, includes nominal)."""
+        """All voltage set-points for this rail (ascending, includes nominal).
+
+        Anchored at ``v_max`` (== nominal for the scalable rails) so
+        ``grid[-1]`` is *exactly* the nominal point for any ``step`` —
+        the masked fleet optimizer pins baseline techniques there.  A
+        step that doesn't divide the range shortens the bottom end, never
+        overshoots either bound.
+        """
         if not self.scalable:
             return jnp.array([self.v_nominal])
-        n = int(round((self.v_max - self.v_min) / step)) + 1
-        return self.v_min + step * jnp.arange(n)
+        n = int(np.floor((self.v_max - self.v_min) / step + 1e-9)) + 1
+        return self.v_max - step * jnp.arange(n - 1, -1, -1)
 
 
 CORE_RAIL = Rail("core", V_CORE_NOM, V_CRASH, V_CORE_NOM)

@@ -9,7 +9,8 @@ The paper's runtime loop per time step τ:
 We reproduce that loop exactly, as a jit-compiled ``lax.scan`` over the
 workload trace, so thousand-step platform simulations take microseconds.
 The *technique* (proposed joint scaling / core-only / bram-only / DFS /
-power-gating) only changes how the per-bin operating table is built —
+power-gating / hybrid node-scaling+DVFS) only changes how the per-bin
+operating table is built —
 mirroring the paper's synthesis-time precomputation — while the runtime
 loop is shared.
 
@@ -23,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, NamedTuple, Optional, Sequence
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +39,7 @@ from repro.core.accelerators import Accelerator
 Array = jax.Array
 
 TECHNIQUES = ("proposed", "core_only", "bram_only", "freq_only",
-              "power_gating", "nominal")
+              "power_gating", "nominal", "hybrid")
 
 
 # ---------------------------------------------------------------------------
@@ -170,10 +171,12 @@ class ControllerConfig:
     def __post_init__(self):
         if self.technique not in TECHNIQUES:
             raise ValueError(f"unknown technique {self.technique!r}")
-        if self.margin <= 1.0 / self.n_bins - 1e-9:
-            # §V: t must exceed 1/M to discriminate adjacent bins; we only
-            # warn-by-clamping in the table builder, but reject nonsense.
-            pass
+        if self.margin < 1.0 / self.n_bins + 1e-9:
+            # §V: t must exceed 1/M so the capacity provisioned for bin i
+            # still covers a one-bin under-prediction.
+            raise ValueError(
+                f"margin {self.margin} must exceed 1/n_bins = "
+                f"{1.0 / self.n_bins:.4f} (paper §V: t > 1/M)")
         object.__setattr__(self, "predictor",
                            dataclasses.replace(self.predictor,
                                                n_bins=self.n_bins))
@@ -187,10 +190,11 @@ class BinTables(NamedTuple):
     v_core: Array     # [M]
     v_bram: Array     # [M]
     f_rel: Array      # [M]
+    n_active: Array   # [M] powered-on nodes at this bin's point
 
 
 def _grids_for(technique: str, v_step: float) -> volt_mod.VoltageGrids:
-    if technique == "proposed":
+    if technique in ("proposed", "hybrid"):
         return volt_mod.VoltageGrids.default(v_step)
     if technique == "core_only":
         return volt_mod.VoltageGrids.core_only(v_step)
@@ -217,6 +221,22 @@ def pll_standing_watts(cfg: ControllerConfig) -> float:
     return (2 if cfg.pll.dual else 1) * cfg.pll.p_pll
 
 
+def _hybrid_gears(cfg: ControllerConfig) -> Tuple[Array, Array, Array]:
+    """Node-count sweep cells for the hybrid technique.
+
+    Gear ``g`` keeps ``g`` of ``n_nodes`` nodes powered on; to deliver a
+    bin's provisioned level the active nodes must run at
+    ``f_node = level·n/g`` — infeasible when that exceeds 1.  Returns
+    ``(gears [G], f_node [G, M], feasible [G, M])``.
+    """
+    levels = volt_mod.bin_frequency_levels(cfg.n_bins, cfg.margin,
+                                           cfg.f_floor)
+    gears = jnp.arange(1, cfg.n_nodes + 1, dtype=jnp.float32)
+    f_need = levels[None, :] * cfg.n_nodes / gears[:, None]
+    f_node = jnp.clip(f_need, cfg.f_floor, 1.0)
+    return gears, f_node, f_need <= 1.0 + 1e-9
+
+
 def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables:
     """Precompute the optimal operating point for every workload bin."""
     m = cfg.n_bins
@@ -230,7 +250,8 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
         return BinTables(capacity=cap, power=power,
                          v_core=jnp.full(m, char.V_CORE_NOM),
                          v_bram=jnp.full(m, char.V_BRAM_NOM),
-                         f_rel=jnp.ones(m))
+                         f_rel=jnp.ones(m),
+                         n_active=jnp.full(m, float(cfg.n_nodes)))
 
     if cfg.technique == "power_gating":
         # Conventional baseline (paper §III): scale the number of *active*
@@ -246,7 +267,34 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
         return BinTables(capacity=cap, power=power,
                          v_core=jnp.full(m, char.V_CORE_NOM),
                          v_bram=jnp.full(m, char.V_BRAM_NOM),
-                         f_rel=jnp.ones(m))
+                         f_rel=jnp.ones(m),
+                         n_active=jnp.asarray(n_active, jnp.float32))
+
+    if cfg.technique == "hybrid":
+        # Joint node-scaling + DVFS: sweep how many nodes stay powered on
+        # (a "gear") and jointly voltage-scale the active ones at the
+        # gear's per-node frequency; gated nodes draw the residual
+        # gated_power_frac.  Per bin, pick the gear minimizing total power.
+        gears, f_node, gear_ok = _hybrid_gears(cfg)
+        g_n = gears.shape[0]
+        grids = _grids_for(cfg.technique, cfg.v_step)
+        pts = volt_mod.optimize_batch(platform.delay_fn, platform.power_fn,
+                                      f_node.reshape(-1), grids)
+        node_w = (pts.power * platform.watts_scale).reshape(g_n, m)
+        nom_w = nominal_node_watts(platform)
+        total = (gears[:, None] * (node_w + pll_watts)
+                 + (cfg.n_nodes - gears[:, None]) * cfg.gated_power_frac
+                 * nom_w)
+        total = jnp.where(gear_ok, total, jnp.inf)
+        gi = jnp.argmin(total, axis=0)                        # [M]
+        cols = jnp.arange(m)
+        f_sel = f_node[gi, cols]
+        return BinTables(
+            capacity=(gears[gi] / cfg.n_nodes) * f_sel * (1.0 - stall),
+            power=total[gi, cols],
+            v_core=pts.v_core.reshape(g_n, m)[gi, cols],
+            v_bram=pts.v_bram.reshape(g_n, m)[gi, cols],
+            f_rel=f_sel, n_active=gears[gi])
 
     # DVFS techniques: joint / single-rail / frequency-only.
     levels = volt_mod.bin_frequency_levels(m, cfg.margin, cfg.f_floor)
@@ -257,7 +305,8 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
     cap = levels * (1.0 - stall)
     power = (node_w + pll_watts) * cfg.n_nodes
     return BinTables(capacity=cap, power=power, v_core=pts.v_core,
-                     v_bram=pts.v_bram, f_rel=levels)
+                     v_bram=pts.v_bram, f_rel=levels,
+                     n_active=jnp.full(m, float(cfg.n_nodes)))
 
 
 # ---------------------------------------------------------------------------
@@ -275,6 +324,7 @@ class TraceResult(NamedTuple):
     v_core: Array           # [T]
     v_bram: Array           # [T]
     f_rel: Array            # [T]
+    n_active: Array         # [T] powered-on nodes during the step
     mispredictions: Array   # scalar int
     final_predictor: pred_mod.MarkovState
 
@@ -287,8 +337,12 @@ class Summary:
     power_gain: float            # nominal / mean — the paper's headline metric
     qos_violation_rate: float
     served_fraction: float       # work served in-step / work offered
-    misprediction_rate: float
+    misprediction_rate: float    # post-warmup mispredictions / post-warmup steps
     mean_backlog: float
+    #: Measured request-latency QoS (closed-loop serving only; NaN for the
+    #: open-loop modeled simulations, which have no per-request timeline).
+    latency_p50: float = float("nan")
+    latency_p99: float = float("nan")
 
 
 def _scan_control_loop(tables: BinTables, cfg: ControllerConfig,
@@ -315,16 +369,16 @@ def _scan_control_loop(tables: BinTables, cfg: ControllerConfig,
         mstate = pred_mod.observe(cfg.predictor, mstate, actual, predicted)
         out = (pwr, cap, violation, new_backlog, predicted, actual,
                tables.v_core[selected], tables.v_bram[selected],
-               tables.f_rel[selected])
+               tables.f_rel[selected], tables.n_active[selected])
         return (mstate, new_backlog), out
 
     init = (pred_mod.init_state(cfg.predictor), jnp.asarray(0.0))
     (mstate, _), outs = jax.lax.scan(step, init, trace)
-    (pwr, cap, viol, backlog, pred_b, act_b, vc, vb, fr) = outs
+    (pwr, cap, viol, backlog, pred_b, act_b, vc, vb, fr, na) = outs
     return TraceResult(power=pwr, capacity=cap, violations=viol,
                        backlog=backlog, predicted_bin=pred_b,
                        actual_bin=act_b, v_core=vc, v_bram=vb, f_rel=fr,
-                       mispredictions=mstate.mispredictions,
+                       n_active=na, mispredictions=mstate.mispredictions,
                        final_predictor=mstate)
 
 
@@ -343,6 +397,7 @@ def summarize(platform: PlatformSpec, cfg: ControllerConfig,
     offered = float(jnp.sum(jnp.asarray(trace)))
     served = offered - float(result.backlog[-1])
     n = result.power.shape[0]
+    n_scored = max(n - cfg.predictor.warmup_steps, 1)
     return Summary(
         technique=cfg.technique,
         mean_power_w=mean_w,
@@ -350,7 +405,7 @@ def summarize(platform: PlatformSpec, cfg: ControllerConfig,
         power_gain=nominal_w / mean_w,
         qos_violation_rate=float(jnp.mean(result.violations)),
         served_fraction=served / max(offered, 1e-9),
-        misprediction_rate=float(result.mispredictions) / max(n, 1),
+        misprediction_rate=float(result.mispredictions) / n_scored,
         mean_backlog=float(jnp.mean(result.backlog)),
     )
 
@@ -364,7 +419,7 @@ def run_technique(platform: PlatformSpec, trace, technique: str,
 
 def compare_all(platform: PlatformSpec, trace,
                 techniques=("proposed", "core_only", "bram_only",
-                            "freq_only", "power_gating"),
+                            "freq_only", "power_gating", "hybrid"),
                 **cfg_kwargs) -> Dict[str, Summary]:
     return {t: run_technique(platform, trace, t, **cfg_kwargs)
             for t in techniques}
@@ -390,7 +445,7 @@ def compare_all(platform: PlatformSpec, trace,
 # retraces — ``fleet_trace_counts`` exposes the trace counters for tests.
 
 DEFAULT_TECHNIQUES = ("proposed", "core_only", "bram_only", "freq_only",
-                      "power_gating")
+                      "power_gating", "hybrid")
 
 _TRACE_COUNTS = {"tables": 0, "simulate": 0}
 
@@ -404,16 +459,18 @@ def fleet_trace_counts() -> Dict[str, int]:
 def _fleet_dvfs_tables_jit(params: char.PlatformParams, masks: Array,
                            levels: Array, core_grid: Array,
                            bram_grid: Array) -> volt_mod.OperatingPoint:
-    """Grid-optimize every platform × technique × bin in one program.
+    """Grid-optimize every platform × sweep-row × bin in one program.
 
-    ``params`` leaves are stacked [P, ...]; ``masks`` is [T, C, B]; returns
-    an :class:`~repro.core.voltage.OperatingPoint` with [P, T, M] fields.
+    ``params`` leaves are stacked [P, ...]; ``masks`` is [R, C, B] and
+    ``levels`` is [R, M] — a row per DVFS technique *plus* one per hybrid
+    node-count gear (the node axis rides the same masked sweep); returns
+    an :class:`~repro.core.voltage.OperatingPoint` with [P, R, M] fields.
     """
     _TRACE_COUNTS["tables"] += 1  # Python side effect → counts tracings only
 
     def per_platform(p):
-        return jax.vmap(lambda mk: volt_mod.optimize_batch_params(
-            p, levels, core_grid, bram_grid, mk))(masks)
+        return jax.vmap(lambda mk, lv: volt_mod.optimize_batch_params(
+            p, lv, core_grid, bram_grid, mk))(masks, levels)
 
     return jax.vmap(per_platform)(params)
 
@@ -440,23 +497,53 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
     n_p = params.watts_scale.shape[0]
 
     per_tech: Dict[str, BinTables] = {}
-    dvfs = [t for t in techniques if t not in ("nominal", "power_gating")]
-    if dvfs:
+    dvfs = [t for t in techniques
+            if t not in ("nominal", "power_gating", "hybrid")]
+    hybrid = "hybrid" in techniques
+    if dvfs or hybrid:
         grids = volt_mod.VoltageGrids.default(cfg.v_step)
         levels = volt_mod.bin_frequency_levels(m, cfg.margin, cfg.f_floor)
-        masks = jnp.stack([volt_mod.technique_grid_mask(t, grids)
-                           for t in dvfs])
-        pts = _fleet_dvfs_tables_jit(params, masks, levels,
+        # One sweep row per DVFS technique; the hybrid node-count axis is
+        # expressed as extra rows (full grid mask, per-gear frequencies),
+        # so everything stays inside the one shape-keyed jitted program.
+        row_masks = [volt_mod.technique_grid_mask(t, grids) for t in dvfs]
+        row_levels = [levels] * len(dvfs)
+        if hybrid:
+            gears, f_node, gear_ok = _hybrid_gears(cfg)
+            full_mask = volt_mod.technique_grid_mask("hybrid", grids)
+            row_masks += [full_mask] * gears.shape[0]
+            row_levels += list(f_node)
+        pts = _fleet_dvfs_tables_jit(params, jnp.stack(row_masks),
+                                     jnp.stack(row_levels),
                                      grids.core, grids.bram)
-        node_w = pts.power * params.watts_scale[:, None, None]  # [P, Td, M]
-        cap = jnp.broadcast_to(levels * (1.0 - stall), node_w.shape)
-        power = (node_w + pll_watts) * cfg.n_nodes
-        f_rel = jnp.broadcast_to(levels, node_w.shape)
+        node_w = pts.power * params.watts_scale[:, None, None]  # [P, R, M]
+        n_full = jnp.full((n_p, m), float(cfg.n_nodes))
         for i, t in enumerate(dvfs):
-            per_tech[t] = BinTables(capacity=cap[:, i], power=power[:, i],
-                                    v_core=pts.v_core[:, i],
-                                    v_bram=pts.v_bram[:, i],
-                                    f_rel=f_rel[:, i])
+            per_tech[t] = BinTables(
+                capacity=jnp.broadcast_to(levels * (1.0 - stall), (n_p, m)),
+                power=(node_w[:, i] + pll_watts) * cfg.n_nodes,
+                v_core=pts.v_core[:, i], v_bram=pts.v_bram[:, i],
+                f_rel=jnp.broadcast_to(levels, (n_p, m)), n_active=n_full)
+        if hybrid:
+            h_w = node_w[:, len(dvfs):]                       # [P, G, M]
+            nom_w = _fleet_nominal_watts_jit(params)          # [P]
+            total = (gears[None, :, None] * (h_w + pll_watts)
+                     + (cfg.n_nodes - gears[None, :, None])
+                     * cfg.gated_power_frac * nom_w[:, None, None])
+            total = jnp.where(gear_ok[None], total, jnp.inf)
+            gi = jnp.argmin(total, axis=1)                    # [P, M]
+
+            def pick(x):  # gather the chosen gear from a [P, G, M] field
+                return jnp.take_along_axis(x, gi[:, None], axis=1)[:, 0]
+
+            f_sel = pick(jnp.broadcast_to(f_node[None], h_w.shape))
+            n_sel = gears[gi]
+            per_tech["hybrid"] = BinTables(
+                capacity=(n_sel / cfg.n_nodes) * f_sel * (1.0 - stall),
+                power=pick(total),
+                v_core=pick(pts.v_core[:, len(dvfs):]),
+                v_bram=pick(pts.v_bram[:, len(dvfs):]),
+                f_rel=f_sel, n_active=n_sel)
 
     if "nominal" in techniques or "power_gating" in techniques:
         node_w = _fleet_nominal_watts_jit(params)  # [P]
@@ -468,7 +555,8 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
                 capacity=ones,
                 power=jnp.broadcast_to(
                     ((node_w + pll_watts) * cfg.n_nodes)[:, None], (n_p, m)),
-                v_core=nom_vc, v_bram=nom_vb, f_rel=ones)
+                v_core=nom_vc, v_bram=nom_vb, f_rel=ones,
+                n_active=jnp.full((n_p, m), float(cfg.n_nodes)))
         if "power_gating" in techniques:
             edges = (np.arange(m) + 1.0) / m
             n_active = jnp.asarray(np.minimum(np.ceil(edges * cfg.n_nodes),
@@ -478,7 +566,8 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
             per_tech["power_gating"] = BinTables(
                 capacity=jnp.broadcast_to(n_active / cfg.n_nodes, (n_p, m)),
                 power=n_active * (node_w[:, None] + pll_watts) + gated,
-                v_core=nom_vc, v_bram=nom_vb, f_rel=ones)
+                v_core=nom_vc, v_bram=nom_vb, f_rel=ones,
+                n_active=jnp.broadcast_to(n_active, (n_p, m)))
 
     return BinTables(*[jnp.stack([getattr(per_tech[t], f) for t in techniques],
                                  axis=1)
@@ -563,7 +652,7 @@ def compare_all_batched(platforms: Sequence[PlatformSpec],
     viol = np.asarray(res.violations)
     backlog = np.asarray(res.backlog)
     mispred = np.asarray(res.mispredictions)
-    n_steps = power.shape[-1]
+    n_scored = max(power.shape[-1] - cfg.predictor.warmup_steps, 1)
 
     out: Dict[str, Dict[str, Summary]] = {}
     for i, plat in enumerate(platforms):
@@ -578,7 +667,7 @@ def compare_all_batched(platforms: Sequence[PlatformSpec],
                 power_gain=float(nominal_w[i]) / mean_w,
                 qos_violation_rate=float(viol[i, j].mean()),
                 served_fraction=served / max(offered, 1e-9),
-                misprediction_rate=float(mispred[i, j]) / max(n_steps, 1),
+                misprediction_rate=float(mispred[i, j]) / n_scored,
                 mean_backlog=float(backlog[i, j].mean()),
             )
         out[plat.name] = per_tech

@@ -8,8 +8,14 @@ there is no stall, at the cost of a second PLL's standing power.
 
 Break-even (Eq. 5, with t_lock ≪ τ):   P_design · t_lock > P_PLL · τ.
 With the paper's practical numbers (P_design ≈ 20 W, P_PLL ≈ 0.1 W,
-t_lock ≈ 10 µs) dual-PLL wins for τ > 2 ms — i.e. always, since τ is
-seconds-to-minutes in deployment.
+t_lock ≈ 10 µs) the break-even sits at τ ≈ 2 ms: dual-PLL is the more
+*energy*-efficient choice for τ **below** it, because the wasted
+P_design·t_lock lock energy is amortized over a shorter step, while for
+larger τ the second always-on PLL's standing energy dominates.  The
+paper nevertheless deploys dual-PLL at its seconds-to-minutes τ
+(Fig. 9c): Eq. 5 compares pure energies and ignores that the single-PLL
+stall also costs *capacity* (QoS) every step — a trade the deployment
+values separately (see ``stall_fraction``).
 """
 
 from __future__ import annotations
@@ -46,19 +52,21 @@ def stall_fraction(cfg: PllConfig, tau: float) -> float:
 
 
 def breakeven_tau(cfg: PllConfig) -> float:
-    """τ above which dual-PLL is more energy-efficient (Eq. 5)."""
-    # P_design·t_lock + P_PLL·(τ + t_lock) > 2·P_PLL·τ
-    #   ⇒ τ < (P_design + P_PLL)·t_lock / P_PLL
+    """τ *below* which dual-PLL is more energy-efficient (Eq. 5)."""
+    # dual wins iff  2·P_PLL·τ < P_design·t_lock + P_PLL·(τ + t_lock)
+    #   ⇔ τ < (P_design + P_PLL)·t_lock / P_PLL
     return (cfg.p_design + cfg.p_pll) * cfg.t_lock / cfg.p_pll
 
 
 def should_use_dual(cfg: PllConfig, tau: float) -> bool:
-    """Paper §V conclusion: dual-PLL for τ beyond the break-even.
+    """True iff dual-PLL is the more *energy*-efficient choice at τ (Eq. 5).
 
-    Note: Eq. 5 *as printed* compares pure energies, under which a second
-    always-on PLL looks worse at large τ; the paper's own conclusion
-    ("τ is seconds-to-minutes, thus always use two PLLs") additionally
-    values the eliminated per-step stall (QoS capacity), which we follow —
-    the architecture of Fig. 9(c) is dual-PLL.
+    That is τ < :func:`breakeven_tau`: the second always-on PLL's
+    standing energy grows with τ while the single-PLL lock waste does
+    not, so dual wins energy-wise only below the break-even.  The paper's
+    deployment still uses dual-PLL at seconds-to-minutes τ (Fig. 9c,
+    ``PllConfig.dual`` defaults True) because the single-PLL stall also
+    costs per-step *capacity* — a QoS consideration outside Eq. 5's pure
+    energy comparison.
     """
-    return tau > breakeven_tau(cfg)
+    return tau < breakeven_tau(cfg)

@@ -112,12 +112,21 @@ def observe(cfg: PredictorConfig, state: MarkovState, actual_bin: Array,
     into the model after ``mispred_threshold`` consecutive mispredictions
     (the paper's lazy re-learning), while ``always`` mode learns every
     transition immediately.
+
+    Warmup steps are not scored: during the first ``warmup_steps`` steps
+    :func:`predict` is pinned to the top bin (§IV-A nominal-frequency
+    training), so counting those disagreements would charge the predictor
+    for a policy it never applied.
     """
     m = cfg.n_bins
     actual_bin = jnp.asarray(actual_bin, jnp.int32)
     edge = jnp.zeros((m, m), jnp.float32).at[state.current_bin, actual_bin].add(1.0)
 
     mispred = predicted_bin != actual_bin
+    # Only the *score* skips warmup; the consecutive counter (which gates
+    # threshold-mode flushing) still sees every disagreement, so warmup
+    # observations reach the model exactly as before.
+    scored = mispred & (state.steps >= cfg.warmup_steps)
     consecutive = jnp.where(mispred, state.consecutive_mispred + 1,
                             jnp.asarray(0, jnp.int32))
 
@@ -137,7 +146,7 @@ def observe(cfg: PredictorConfig, state: MarkovState, actual_bin: Array,
         pending=pending,
         current_bin=actual_bin,
         steps=state.steps + 1,
-        mispredictions=state.mispredictions + mispred.astype(jnp.int32),
+        mispredictions=state.mispredictions + scored.astype(jnp.int32),
         consecutive_mispred=consecutive,
     )
 

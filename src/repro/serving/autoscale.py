@@ -12,8 +12,11 @@ Per control interval τ the simulator:
      cost analysis), so α/β are per-(arch × shape) facts, not constants;
   5. integrates modeled chip power and tracks QoS.
 
-Baselines (autoscaling = power gating of chips, core-only, hbm-only, DFS)
-share the loop, exactly as in ``repro.core.controller``.
+Baselines (autoscaling = power gating of chips, core-only, hbm-only, DFS,
+and the hybrid chip-gating + DVFS combination) share the loop, exactly as
+in ``repro.core.controller``.  ``run_request_load`` closes the loop: the
+selected frequency throttles the ContinuousBatcher, so measured
+occupancy and request latency respond to the controller's decisions.
 """
 
 from __future__ import annotations
@@ -21,9 +24,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import controller as ctl
+from repro.core import predictor as pred_mod
 from repro.core import workload as wl
 from repro.serving.batching import ContinuousBatcher, Request
 
@@ -67,36 +72,109 @@ class DvfsServingSimulator:
     def run_request_load(self, arrival_rate_per_step: np.ndarray,
                          batch_size: int = 64,
                          mean_new_tokens: int = 64,
-                         seed: int = 0) -> Dict[str, object]:
-        """Drive a ContinuousBatcher from a Poisson request process, then
-        feed the measured per-τ occupancy to the controller."""
+                         seed: int = 0,
+                         closed_loop: bool = True) -> Dict[str, object]:
+        """Drive a ContinuousBatcher from a Poisson request process with
+        the §V controller *in the loop*.
+
+        Each control interval τ (``steps_per_tau`` decode steps) the
+        measured occupancy feeds the Markov predictor, and the selected
+        operating point's delivered relative throughput —
+        ``f_rel · n_active/n_nodes``, so node-gating techniques
+        (power_gating, hybrid) are throttled by their powered-off chips
+        too — is fed **back** into
+        ``ContinuousBatcher.step(throughput=...)`` for the next interval.
+        Occupancy, backlog, and per-request latency therefore respond to
+        the DVFS decision.  ``closed_loop=False`` reproduces the old
+        open-loop behavior (batcher always at nominal throughput) while
+        still integrating modeled power.
+
+        Returns the :class:`~repro.core.controller.Summary` (including
+        measured latency p50/p99 in decode steps) plus per-interval
+        occupancy/frequency/power arrays.
+        """
         rng = np.random.default_rng(seed)
         batcher = ContinuousBatcher(batch_size=batch_size)
-        occupancies = []
+        tables = ctl.build_bin_tables(self.platform, self.cfg)
+        cap = np.asarray(tables.capacity)
+        f_rel = np.asarray(tables.f_rel)
+        power = np.asarray(tables.power)
+        throughput = f_rel * np.asarray(tables.n_active) / self.cfg.n_nodes
+        pcfg = self.cfg.predictor
+
+        mstate = pred_mod.init_state(pcfg)
+        predicted = int(pred_mod.predict(pcfg, mstate))
+        f_now = float(throughput[predicted]) if closed_loop else 1.0
+        occ_tau, f_tau, thr_tau, power_tau, viol_tau = [], [], [], [], []
+        queued, interval_occ = [], []
         rid = 0
-        for t, lam in enumerate(arrival_rate_per_step):
+        offered_tokens = 0
+        for lam in arrival_rate_per_step:
             for _ in range(rng.poisson(lam)):
-                batcher.submit(Request(
-                    rid=rid, prompt_len=128,
-                    max_new_tokens=max(1, int(rng.exponential(
-                        mean_new_tokens)))))
+                n_tok = max(1, int(rng.exponential(mean_new_tokens)))
+                batcher.submit(Request(rid=rid, prompt_len=128,
+                                       max_new_tokens=n_tok))
+                offered_tokens += n_tok
                 rid += 1
-            stats = batcher.step(throughput=1.0)
-            occupancies.append(stats["occupancy"])
-        occ = np.asarray(occupancies)
-        # aggregate decode steps into control intervals τ
-        n_tau = len(occ) // self.steps_per_tau
-        occ_tau = occ[: n_tau * self.steps_per_tau].reshape(
-            n_tau, self.steps_per_tau).mean(axis=1)
-        summary = self.run_trace(occ_tau)
-        return {"summary": summary, "occupancy_tau": occ_tau,
+            stats = batcher.step(throughput=f_now)
+            interval_occ.append(stats["occupancy"])
+            queued.append(stats["queued"])
+            if len(interval_occ) == self.steps_per_tau:
+                # τ boundary: count the interval's workload, train the
+                # predictor, and set the operating point for the next τ.
+                occ = float(np.mean(interval_occ))
+                interval_occ = []
+                occ_tau.append(occ)
+                f_tau.append(float(f_rel[predicted]) if closed_loop else 1.0)
+                thr_tau.append(f_now)
+                power_tau.append(float(power[predicted]))
+                viol_tau.append(occ > float(cap[predicted]) + 1e-9)
+                actual = int(pred_mod.workload_to_bin(jnp.asarray(occ),
+                                                      pcfg.n_bins))
+                mstate = pred_mod.observe(pcfg, mstate, jnp.asarray(actual),
+                                          jnp.asarray(predicted))
+                predicted = int(pred_mod.predict(pcfg, mstate))
+                f_now = (float(throughput[predicted]) if closed_loop
+                         else 1.0)
+
+        lat = np.asarray([r.finished_step - r.arrived_step
+                          for r in batcher.finished], np.float64)
+        p50 = float(np.percentile(lat, 50)) if lat.size else float("nan")
+        p99 = float(np.percentile(lat, 99)) if lat.size else float("nan")
+        served_tokens = (sum(min(r.decoded, r.max_new_tokens)
+                             for r in batcher.finished)
+                         + sum(min(s.decoded, s.max_new_tokens)
+                               for s in batcher.slots if s is not None))
+        n_tau = max(len(occ_tau), 1)
+        nominal_w = ((ctl.nominal_node_watts(self.platform)
+                      + ctl.pll_standing_watts(self.cfg)) * self.cfg.n_nodes)
+        mean_w = float(np.mean(power_tau)) if power_tau else nominal_w
+        summary = ctl.Summary(
+            technique=self.cfg.technique,
+            mean_power_w=mean_w,
+            nominal_power_w=nominal_w,
+            power_gain=nominal_w / mean_w,
+            qos_violation_rate=float(np.mean(viol_tau)) if viol_tau else 0.0,
+            served_fraction=served_tokens / max(offered_tokens, 1),
+            misprediction_rate=(int(mstate.mispredictions)
+                                / max(n_tau - pcfg.warmup_steps, 1)),
+            mean_backlog=float(np.mean(queued)) / batch_size,
+            latency_p50=p50,
+            latency_p99=p99,
+        )
+        return {"summary": summary,
+                "occupancy_tau": np.asarray(occ_tau),
+                "f_rel_tau": np.asarray(f_tau),
+                "throughput_tau": np.asarray(thr_tau),
+                "power_tau": np.asarray(power_tau),
+                "latency_p50": p50, "latency_p99": p99,
                 "completed": len(batcher.finished)}
 
 
 def compare_techniques(terms: RooflineTerms, trace: np.ndarray,
                        n_chips: int = 8,
                        techniques=("proposed", "core_only", "bram_only",
-                                   "freq_only", "power_gating")
+                                   "freq_only", "power_gating", "hybrid")
                        ) -> Dict[str, ctl.Summary]:
     """Paper Table II on the TPU serving platform (modeled power).
 

@@ -82,7 +82,8 @@ class ServeEngine:
     def generate(self, prompt_tokens: Array, n_new: int,
                  extra_inputs: Optional[Dict[str, Array]] = None
                  ) -> Array:
-        """Greedy-generate ``n_new`` tokens after a shared-length prompt.
+        """Greedy-generate exactly ``n_new`` tokens after a shared-length
+        prompt (``[B, n_new]``; ``n_new=0`` yields an empty ``[B, 0]``).
 
         The token loop is a compiled ``lax.scan`` (2 host dispatches per
         call — prefill + decode loop — instead of 2 per *token*).  The
@@ -90,11 +91,14 @@ class ServeEngine:
         loop program, so callers sweeping lengths should bucket them.
         """
         B, S = prompt_tokens.shape
+        if n_new <= 0:
+            return jnp.zeros((B, 0), jnp.int32)
         batch = {"tokens": prompt_tokens}
         if extra_inputs:
             batch.update(extra_inputs)
         last_logits, cache = self._prefill(self.params, batch)
         tok = greedy_sample(last_logits)
         pos = jnp.full((B,), S, jnp.int32)
-        return self._decode_loop(self.params, cache, tok, pos,
-                                 max(n_new - 1, 0))
+        # The prefill's argmax is token 1 of n_new; the scan decodes the
+        # remaining n_new - 1 and the loop prepends the prefill token.
+        return self._decode_loop(self.params, cache, tok, pos, n_new - 1)

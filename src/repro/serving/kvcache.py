@@ -60,16 +60,43 @@ def split_kv_needed(cfg: ModelConfig, model_axis: int) -> bool:
 def pad_prefill_cache(cfg: ModelConfig, prefill_cache: Any,
                       capacity: int) -> Any:
     """Pad a return_state prefill cache (built at prefill length) out to
-    serving capacity along the kv_seq axis."""
+    serving capacity along the kv_seq axis.
 
-    def pad_leaf(path_leaf):
-        x = path_leaf
-        if x is None or x.ndim < 2:
-            return x
-        return x
+    The model builds caches at the requested capacity when
+    ``cache_capacity`` is passed to forward; this helper serves callers
+    that prefilled *without* capacity.  Each leaf is padded on its
+    ``kv_seq`` axis with the layout's init value (``pos`` ring buffers
+    pad with their -1 empty-slot marker, k/v with zeros).  Raises
+    ``ValueError`` when a leaf already exceeds the target capacity.
+    """
+    from repro.models.common import ParamDef
 
-    # The model already builds caches at the requested capacity when
-    # ``cache_capacity`` is passed to forward; this helper exists for
-    # callers that prefilled without capacity.
-    del cfg, capacity
-    return jax.tree.map(pad_leaf, prefill_cache)
+    leaves, treedef = jax.tree.flatten(prefill_cache)
+    if not leaves:
+        return prefill_cache
+    batch = leaves[0].shape[0]
+    layout = transformer.cache_layout(cfg, batch, capacity)
+    defs = jax.tree.leaves(layout, is_leaf=lambda x: isinstance(x, ParamDef))
+    if len(defs) != len(leaves):
+        raise ValueError(
+            f"cache has {len(leaves)} leaves but the layout expects "
+            f"{len(defs)} — not a {cfg.name} decode cache")
+
+    out = []
+    for d, x in zip(defs, leaves):
+        if "kv_seq" not in d.axes:
+            out.append(x)
+            continue
+        ax = d.axes.index("kv_seq")
+        tgt, cur = d.shape[ax], x.shape[ax]
+        if cur > tgt:
+            raise ValueError(
+                f"cache kv_seq length {cur} exceeds capacity {tgt}; "
+                "cannot pad an oversized prefill cache")
+        if cur < tgt:
+            width = [(0, 0)] * x.ndim
+            width[ax] = (0, tgt - cur)
+            fill = d.scale if d.init == "constant" else 0.0
+            x = jnp.pad(x, width, constant_values=jnp.asarray(fill, x.dtype))
+        out.append(x)
+    return jax.tree.unflatten(treedef, out)

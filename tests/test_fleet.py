@@ -115,6 +115,69 @@ def test_simulate_fleet_shapes_and_technique_independence(trace):
         ctl.simulate_fleet(tables, np.stack([trace, trace]), cfg_a)
 
 
+def test_hybrid_fleet_acceptance(trace):
+    """Default BURSE trace: hybrid mean power ≤ min(power_gating,
+    proposed) with served_fraction ≥ proposed's, via the fleet path —
+    and including hybrid keeps the zero-retrace guarantee."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"]),
+                 ctl.fpga_platform(ACCELERATORS["stripes"])]
+    fleet = ctl.compare_all_batched(platforms, trace)  # defaults incl hybrid
+    for plat in platforms:
+        res = fleet[plat.name]
+        assert res["hybrid"].mean_power_w <= min(
+            res["power_gating"].mean_power_w,
+            res["proposed"].mean_power_w) * (1 + 1e-6), plat.name
+        assert res["hybrid"].served_fraction >= \
+            res["proposed"].served_fraction - 1e-6, plat.name
+    before = ctl.fleet_trace_counts()
+    others = [ctl.fpga_platform(ACCELERATORS["diannao"]),
+              ctl.fpga_platform(ACCELERATORS["proteus"])]
+    ctl.compare_all_batched(others, trace)
+    assert ctl.fleet_trace_counts() == before
+
+
+def test_hybrid_tables_carry_n_active(trace):
+    """fleet_bin_tables exposes the hybrid node-count axis and the scan
+    threads it through to per-step bookkeeping."""
+    params = char.stack_platform_params(
+        [ctl.fpga_platform(ACCELERATORS["tabla"]).params])
+    cfg = ctl.ControllerConfig(technique="hybrid")
+    tables = ctl.fleet_bin_tables(params, cfg, ("proposed", "hybrid"))
+    assert tables.n_active.shape == (1, 2, cfg.n_bins)
+    n_act = np.asarray(tables.n_active)
+    assert (n_act[:, 0] == cfg.n_nodes).all()          # proposed: all on
+    assert (n_act[:, 1] >= 1).all() and (n_act[:, 1] <= cfg.n_nodes).all()
+    # hybrid capacity still covers each bin's provisioned level
+    levels = np.asarray(volt.bin_frequency_levels(cfg.n_bins, cfg.margin,
+                                                  cfg.f_floor))
+    stall = 0.0  # dual-PLL default
+    assert (np.asarray(tables.capacity)[:, 1]
+            >= levels * (1.0 - stall) - 1e-6).all()
+    res = ctl.simulate_fleet(tables, trace, cfg)
+    assert res.n_active.shape == (1, 2, len(trace))
+    assert (np.asarray(res.n_active)[:, 0] == cfg.n_nodes).all()
+
+
+def test_grid_top_is_nominal_for_any_step(trace):
+    """The masked fleet path pins baseline techniques at grid[-1]; that
+    must be the exact nominal point even for steps that don't divide the
+    rail range (regression: 0.04 V used to yield core grid[-1]=0.82)."""
+    for step in (0.025, 0.04, 0.03, 0.017):
+        assert float(char.CORE_RAIL.grid(step)[-1]) == \
+            pytest.approx(char.V_CORE_NOM, abs=1e-7), step
+        assert float(char.BRAM_RAIL.grid(step)[-1]) == \
+            pytest.approx(char.V_BRAM_NOM, abs=1e-7), step
+        g = np.asarray(char.CORE_RAIL.grid(step))
+        assert g.min() >= char.V_CRASH - 1e-7
+    # and fleet/closure parity holds at a non-divisible step
+    plat = ctl.fpga_platform(ACCELERATORS["tabla"])
+    ref = ctl.compare_all(plat, trace, v_step=0.04)
+    got = ctl.compare_all_batched([plat], trace, v_step=0.04)[plat.name]
+    for tech, s in ref.items():
+        np.testing.assert_allclose(got[tech].mean_power_w, s.mean_power_w,
+                                   rtol=1e-5, err_msg=tech)
+
+
 def test_evaluate_trace_matches_host_loop():
     cfg = pred_mod.PredictorConfig(n_bins=10, warmup_steps=8)
     trace = wl.generate_trace(wl.WorkloadConfig(n_steps=96, seed=4))

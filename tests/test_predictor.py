@@ -5,9 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:  # property tests need hypothesis (pip install -r requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs it
+    HAVE_HYPOTHESIS = False
 
 from repro.core import predictor as pred
 
@@ -66,14 +68,39 @@ def test_misprediction_counting():
     assert int(state.current_bin) == (int(p) + 2) % 4
 
 
-@settings(max_examples=20, deadline=None)
-@given(ws=st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=5,
-                   max_size=60))
-def test_bins_always_valid(ws):
-    cfg = pred.PredictorConfig(n_bins=10, warmup_steps=2)
-    state, preds = _run(cfg, ws)
-    assert ((preds >= 0) & (preds < 10)).all()
-    assert int(state.steps) == len(ws)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(ws=st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=5,
+                       max_size=60))
+    def test_bins_always_valid(ws):
+        cfg = pred.PredictorConfig(n_bins=10, warmup_steps=2)
+        state, preds = _run(cfg, ws)
+        assert ((preds >= 0) & (preds < 10)).all()
+        assert int(state.steps) == len(ws)
+
+
+def test_warmup_steps_are_not_scored_as_mispredictions():
+    """During warmup predict() is pinned to the top bin (§IV-A nominal
+    frequency), so those forced disagreements must not inflate the
+    misprediction count."""
+    cfg = pred.PredictorConfig(n_bins=8, warmup_steps=10)
+    state = pred.init_state(cfg)
+    for _ in range(10):
+        p = pred.predict(cfg, state)
+        assert int(p) == cfg.n_bins - 1  # pinned, would "mispredict" bin 2
+        state = pred.observe(cfg, state, jnp.asarray(2), p)
+    assert int(state.mispredictions) == 0
+    # ... but the threshold-mode flush logic still sees the disagreements
+    # (warmup observations must keep reaching the model)
+    assert int(state.consecutive_mispred) == 10
+    # post-warmup mispredictions still count
+    p = pred.predict(cfg, state)
+    state = pred.observe(cfg, state, jnp.asarray((int(p) + 3) % 8), p)
+    assert int(state.mispredictions) == 1
+    # ... and correct predictions don't
+    p = pred.predict(cfg, state)
+    state = pred.observe(cfg, state, p, p)
+    assert int(state.mispredictions) == 1
 
 
 def test_quantile_policy_is_more_conservative():

@@ -11,7 +11,8 @@ from repro.serving.autoscale import (DvfsServingSimulator, RooflineTerms,
                                      compare_techniques)
 from repro.serving.batching import ContinuousBatcher, Request
 from repro.serving.engine import ServeEngine
-from repro.serving.kvcache import cache_bytes, split_kv_needed
+from repro.serving.kvcache import (cache_bytes, init_cache,
+                                   pad_prefill_cache, split_kv_needed)
 
 
 def test_generate_is_deterministic_and_consistent():
@@ -42,6 +43,54 @@ def test_generate_matches_teacher_forced_forward():
     for t in range(4):
         expect = int(jnp.argmax(logits[0, 8 + t - 1]))
         assert int(gen[0, t]) == expect, t
+
+
+def test_generate_returns_exactly_n_new_tokens():
+    """Regression: generate(prompt, n_new=0) used to return 1 token (the
+    prefill argmax was unconditionally prepended)."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    params = common.init_params(jax.random.PRNGKey(0),
+                                transformer.model_layout(cfg))
+    eng = ServeEngine(cfg=cfg, params=params, capacity=32, batch_size=2)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    outs = {n: eng.generate(prompts, n) for n in (0, 1, 4)}
+    for n, out in outs.items():
+        assert out.shape == (2, n), n
+    # prefixes agree: token 0 of n_new=4 == the single n_new=1 token
+    np.testing.assert_array_equal(np.asarray(outs[1]),
+                                  np.asarray(outs[4][:, :1]))
+
+
+def test_pad_prefill_cache_pads_kv_seq_axis():
+    """pad_prefill_cache really pads (it used to be a silent no-op)."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    params = common.init_params(jax.random.PRNGKey(0),
+                                transformer.model_layout(cfg))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    # prefill WITHOUT capacity: cache leaves are built at prompt length
+    _, cache, _ = transformer.forward(params, cfg, {"tokens": prompts},
+                                      return_state=True)
+    padded = pad_prefill_cache(cfg, cache, 32)
+    ref = init_cache(cfg, 2, 32)
+    for got, want in zip(jax.tree.leaves(padded), jax.tree.leaves(ref)):
+        assert got.shape == want.shape
+    # original prefill content is preserved (zero/marker padding only)
+    for before, after in zip(jax.tree.leaves(cache),
+                             jax.tree.leaves(padded)):
+        if before.shape == after.shape:
+            np.testing.assert_array_equal(np.asarray(before),
+                                          np.asarray(after))
+        else:
+            ax = next(i for i, (a, b) in
+                      enumerate(zip(before.shape, after.shape)) if a != b)
+            sl = [slice(None)] * before.ndim
+            sl[ax] = slice(0, before.shape[ax])
+            np.testing.assert_array_equal(np.asarray(before),
+                                          np.asarray(after[tuple(sl)]))
+    with pytest.raises(ValueError, match="exceeds capacity"):
+        pad_prefill_cache(cfg, cache, 4)
 
 
 def test_continuous_batcher_occupancy_and_completion():
@@ -104,6 +153,10 @@ def test_autoscaler_techniques_ordering():
     g = {k: v.power_gain for k, v in out.items()}
     assert g["proposed"] >= max(g["core_only"], g["bram_only"]) - 1e-6
     assert g["proposed"] > g["freq_only"]
+    # hybrid's gear sweep contains the proposed point, and also beats
+    # pure chip-gating
+    assert g["hybrid"] >= g["proposed"] - 1e-5
+    assert g["hybrid"] >= g["power_gating"] - 1e-6
 
 
 def test_autoscaler_request_loop():
@@ -116,3 +169,49 @@ def test_autoscaler_request_loop():
     s = out["summary"]
     assert s.power_gain > 1.0
     assert 0.0 <= s.qos_violation_rate <= 1.0
+    # closed loop reports measured latency QoS
+    assert np.isfinite(s.latency_p50) and np.isfinite(s.latency_p99)
+    assert 0.0 < s.latency_p50 <= s.latency_p99
+    assert len(out["f_rel_tau"]) == len(out["occupancy_tau"])
+
+
+def _closed_loop_sim(technique):
+    import repro.core.controller as ctl
+    import repro.core.predictor as pred_mod
+    terms = RooflineTerms(t_compute=0.002, t_memory=0.012,
+                          t_collective=0.001)
+    cfg = ctl.ControllerConfig(
+        technique=technique, n_nodes=8,
+        predictor=pred_mod.PredictorConfig(warmup_steps=4))
+    return DvfsServingSimulator(terms=terms, steps_per_tau=16,
+                                controller_cfg=cfg)
+
+
+def test_closed_loop_occupancy_responds_to_throttle():
+    """The serving loop is genuinely closed: throttled f_rel ⇒ slots stay
+    busy longer ⇒ measurably higher occupancy than at nominal frequency
+    (previously the batcher always ran at throughput=1.0)."""
+    lam = np.full(768, 1.0)
+    dvfs = _closed_loop_sim("proposed").run_request_load(
+        lam, batch_size=32, mean_new_tokens=8)
+    nom = _closed_loop_sim("nominal").run_request_load(
+        lam, batch_size=32, mean_new_tokens=8)
+    assert np.asarray(nom["f_rel_tau"]).min() == 1.0
+    assert np.asarray(dvfs["f_rel_tau"]).min() < 1.0  # controller throttled
+    # low-frequency intervals ⇒ higher occupancy than nominal
+    assert (dvfs["occupancy_tau"].mean()
+            > nom["occupancy_tau"].mean() + 0.05)
+    # and the measured latency reflects the throttling
+    assert dvfs["summary"].latency_p50 >= nom["summary"].latency_p50
+    # node-gating techniques throttle through n_active/n_nodes too:
+    # powered-off chips reduce delivered throughput even at f_rel = 1
+    pg = _closed_loop_sim("power_gating").run_request_load(
+        lam, batch_size=32, mean_new_tokens=8)
+    assert np.asarray(pg["f_rel_tau"]).min() == 1.0      # PG never scales f
+    assert np.asarray(pg["throughput_tau"]).min() < 1.0  # but gates chips
+    assert pg["occupancy_tau"].mean() > nom["occupancy_tau"].mean() + 0.05
+    # open-loop escape hatch reproduces the nominal-throughput batcher
+    open_loop = _closed_loop_sim("proposed").run_request_load(
+        lam, batch_size=32, mean_new_tokens=8, closed_loop=False)
+    np.testing.assert_allclose(open_loop["occupancy_tau"],
+                               nom["occupancy_tau"])
