@@ -243,6 +243,50 @@ def bench_hybrid():
     return rows
 
 
+def bench_campaign():
+    """Scenario-library campaign through the streaming fleet path.
+
+    Platforms × techniques × scenarios in one chunked streaming program;
+    per-scenario power-gain/QoS cells land in the bench JSON.  The
+    ``stream`` trace count is reported so retraces across same-shaped
+    scenario sweeps show up in the perf record.
+    """
+    from repro.core import scenarios as scn
+    platforms = [ctl.fpga_platform(ACCELERATORS[n])
+                 for n in ("tabla", "stripes")]
+    names = ("burse", "diurnal", "flash_crowd", "node_failure")
+    techniques = ("proposed", "power_gating", "hybrid")
+    chunk = max(min(N_STEPS, 512), 1)
+    t0 = time.perf_counter()
+    out = scn.run_campaign(platforms, scenario_names=names,
+                           techniques=techniques, n_steps=N_STEPS,
+                           chunk_size=chunk)
+    dt = time.perf_counter() - t0
+    cells = len(platforms) * len(techniques) * len(names)
+    rows = []
+    for scen in names:
+        per_tech = {}
+        for tech in techniques:
+            per_tech[tech] = np.mean([out["table"][p.name][tech][scen]
+                                      ["power_gain"] for p in platforms])
+        qos = np.mean([out["table"][p.name]["proposed"][scen]
+                       ["qos_violation_rate"] for p in platforms])
+        rows.append((f"campaign/{scen}", dt / cells / N_STEPS * 1e6,
+                     f"prop={per_tech['proposed']:.2f}x"
+                     f";pg={per_tech['power_gating']:.2f}x"
+                     f";hyb={per_tech['hybrid']:.2f}x"
+                     f";qos_viol={qos:.3f}"))
+    # Second same-shaped campaign (new seed) must reuse the compiled
+    # chunk program — the stream count delta is the retrace regression.
+    before = ctl.fleet_trace_counts()["stream"]
+    scn.run_campaign(platforms, scenario_names=names, techniques=techniques,
+                     n_steps=N_STEPS, chunk_size=chunk, seed=1)
+    delta = ctl.fleet_trace_counts()["stream"] - before
+    rows.append(("campaign/stream_reuse", 0.0,
+                 f"retraces={delta};chunk={chunk}"))
+    return rows
+
+
 def bench_voltage_optimizer():
     """Runtime cost of the §V voltage selection (table build + lookup)."""
     plat = ctl.fpga_platform(ACCELERATORS["tabla"])
@@ -299,7 +343,8 @@ def bench_tpu_serving():
 BENCHES = [bench_fleet, bench_table2, bench_fig4_workload_sweep,
            bench_fig5_alpha_sweep, bench_fig6_beta_sweep, bench_fig10_trace,
            bench_fig12_per_accelerator_traces, bench_predictor,
-           bench_hybrid, bench_voltage_optimizer, bench_tpu_serving]
+           bench_hybrid, bench_campaign, bench_voltage_optimizer,
+           bench_tpu_serving]
 
 
 def main(argv=None) -> None:

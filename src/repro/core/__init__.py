@@ -7,12 +7,13 @@ Layers:
   predictor        — online Markov-chain workload prediction
   workload         — bursty self-similar trace synthesis (BURSE-like)
   controller       — the §V runtime loop (predict → frequency → voltages → PLL)
+  scenarios        — named workload scenario library + campaign sweeps
   pll              — PLL lock/energy overhead model (Eqs. 4-5)
   accelerators     — the paper's five DNN accelerators (Table I)
 """
 
 from repro.core import accelerators, characterization, controller, pll, \
-    predictor, voltage, workload  # noqa: F401
+    predictor, scenarios, voltage, workload  # noqa: F401
 
 __all__ = ["accelerators", "characterization", "controller", "pll",
-           "predictor", "voltage", "workload"]
+           "predictor", "scenarios", "voltage", "workload"]

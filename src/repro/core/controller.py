@@ -35,6 +35,7 @@ from repro.core import pll as pll_mod
 from repro.core import predictor as pred_mod
 from repro.core import voltage as volt_mod
 from repro.core.accelerators import Accelerator
+from repro.parallel import sharding as shd
 
 Array = jax.Array
 
@@ -345,40 +346,71 @@ class Summary:
     latency_p99: float = float("nan")
 
 
+class _StepOut(NamedTuple):
+    """Per-step fields produced by one §V control step (scan ``ys``)."""
+
+    power: Array
+    capacity: Array
+    violation: Array
+    backlog: Array
+    predicted_bin: Array
+    actual_bin: Array
+    v_core: Array
+    v_bram: Array
+    f_rel: Array
+    n_active: Array
+
+
+def _control_step(tables: BinTables, cfg: ControllerConfig,
+                  carry: Tuple[pred_mod.MarkovState, Array],
+                  w_t: Array) -> Tuple[Tuple[pred_mod.MarkovState, Array],
+                                       _StepOut]:
+    """One §V control step: predict → select → serve → observe.
+
+    Shared by the materializing scan and the streaming chunk scan.  A step
+    violates QoS when its *demand* — offered work plus carried backlog —
+    exceeds delivered capacity: under the paper's served-within-τ
+    semantics a step that cannot clear its backlog-inflated demand is a
+    miss even when ``w_t`` alone would fit.
+    """
+    mstate, backlog = carry
+    predicted = pred_mod.predict(cfg.predictor, mstate)
+    actual = pred_mod.workload_to_bin(w_t, cfg.n_bins)
+    selected = jnp.where(cfg.use_oracle, actual, predicted)
+
+    cap = tables.capacity[selected]
+    pwr = tables.power[selected]
+
+    # QoS/backlog dynamics: offered work this step plus carried backlog,
+    # served up to delivered capacity.
+    served = jnp.minimum(cap, w_t + backlog)
+    new_backlog = w_t + backlog - served
+    violation = w_t + backlog > cap + 1e-9
+
+    mstate = pred_mod.observe(cfg.predictor, mstate, actual, predicted)
+    out = _StepOut(power=pwr, capacity=cap, violation=violation,
+                   backlog=new_backlog, predicted_bin=predicted,
+                   actual_bin=actual, v_core=tables.v_core[selected],
+                   v_bram=tables.v_bram[selected],
+                   f_rel=tables.f_rel[selected],
+                   n_active=tables.n_active[selected])
+    return (mstate, new_backlog), out
+
+
 def _scan_control_loop(tables: BinTables, cfg: ControllerConfig,
                        trace: Array) -> TraceResult:
     """The §V runtime loop as one ``lax.scan`` — shared by the
     per-platform :func:`simulate` and the batched fleet path."""
-    m = cfg.n_bins
-
-    def step(carry, w_t):
-        mstate, backlog = carry
-        predicted = pred_mod.predict(cfg.predictor, mstate)
-        actual = pred_mod.workload_to_bin(w_t, m)
-        selected = jnp.where(cfg.use_oracle, actual, predicted)
-
-        cap = tables.capacity[selected]
-        pwr = tables.power[selected]
-
-        # QoS/backlog dynamics: offered work this step plus carried backlog,
-        # served up to delivered capacity.
-        served = jnp.minimum(cap, w_t + backlog)
-        new_backlog = w_t + backlog - served
-        violation = w_t > cap + 1e-9
-
-        mstate = pred_mod.observe(cfg.predictor, mstate, actual, predicted)
-        out = (pwr, cap, violation, new_backlog, predicted, actual,
-               tables.v_core[selected], tables.v_bram[selected],
-               tables.f_rel[selected], tables.n_active[selected])
-        return (mstate, new_backlog), out
-
     init = (pred_mod.init_state(cfg.predictor), jnp.asarray(0.0))
-    (mstate, _), outs = jax.lax.scan(step, init, trace)
-    (pwr, cap, viol, backlog, pred_b, act_b, vc, vb, fr, na) = outs
-    return TraceResult(power=pwr, capacity=cap, violations=viol,
-                       backlog=backlog, predicted_bin=pred_b,
-                       actual_bin=act_b, v_core=vc, v_bram=vb, f_rel=fr,
-                       n_active=na, mispredictions=mstate.mispredictions,
+    (mstate, _), outs = jax.lax.scan(
+        lambda c, w: _control_step(tables, cfg, c, w), init, trace)
+    return TraceResult(power=outs.power, capacity=outs.capacity,
+                       violations=outs.violation, backlog=outs.backlog,
+                       predicted_bin=outs.predicted_bin,
+                       actual_bin=outs.actual_bin, v_core=outs.v_core,
+                       v_bram=outs.v_bram, f_rel=outs.f_rel,
+                       n_active=outs.n_active,
+                       mispredictions=mstate.mispredictions,
                        final_predictor=mstate)
 
 
@@ -447,7 +479,7 @@ def compare_all(platform: PlatformSpec, trace,
 DEFAULT_TECHNIQUES = ("proposed", "core_only", "bram_only", "freq_only",
                       "power_gating", "hybrid")
 
-_TRACE_COUNTS = {"tables": 0, "simulate": 0}
+_TRACE_COUNTS = {"tables": 0, "simulate": 0, "stream": 0}
 
 
 def fleet_trace_counts() -> Dict[str, int]:
@@ -583,6 +615,30 @@ def _simulate_fleet_jit(tables: BinTables, traces: Array,
                     )(tables, traces)
 
 
+def _broadcast_traces(traces: np.ndarray, lead: Tuple[int, ...]) -> np.ndarray:
+    """Expand traces to ``lead + (S,)`` as a zero-copy numpy view.
+
+    Accepts a single shared trace [S] or per-cell traces whose leading
+    axes match ``lead`` dim-for-dim (1s broadcast).  Stays in numpy with
+    stride-0 broadcasting so a shared million-step trace never costs
+    ``K·S`` memory — the streaming path materializes one chunk at a time.
+    """
+    traces = np.asarray(traces, np.float32)
+    if traces.ndim == 1:
+        return np.broadcast_to(traces, lead + traces.shape)
+    if (traces.ndim - 1 == len(lead)
+            and all(a == b or a == 1
+                    for a, b in zip(traces.shape[:-1], lead))):
+        return np.broadcast_to(traces, lead + traces.shape[-1:])
+    # No rank-extending broadcasting: [P, S] traces against [P, T, M]
+    # tables would silently line P up against T whenever P == T.
+    raise ValueError(
+        f"traces leading axes {traces.shape[:-1]} must match the "
+        f"tables' leading axes {lead} dim-for-dim (1s broadcast), or "
+        "pass a single [S] trace; expand per-platform traces to "
+        "[P, 1, S] explicitly")
+
+
 def simulate_fleet(tables: BinTables, traces: np.ndarray | Array,
                    cfg: ControllerConfig) -> TraceResult:
     """Run the §V loop for every fleet cell in one compiled program.
@@ -594,30 +650,228 @@ def simulate_fleet(tables: BinTables, traces: np.ndarray | Array,
     The jit cache is keyed on shapes + the static config (normalized to be
     technique-independent — the runtime loop is shared across techniques),
     so repeat calls with same-shaped inputs never retrace.
+
+    Memory scales as ``10·K·S`` floats (every per-step field is
+    materialized); for long traces use :func:`simulate_fleet_stream`.
     """
     lead = tables.capacity.shape[:-1]
     k = int(np.prod(lead, dtype=np.int64)) if lead else 1
     flat = BinTables(*[jnp.reshape(x, (k,) + x.shape[len(lead):])
                        for x in tables])
-    traces = jnp.asarray(traces, jnp.float32)
-    if traces.ndim == 1:
-        traces = jnp.broadcast_to(traces, lead + traces.shape)
-    elif (traces.ndim - 1 == len(lead)
-          and all(a == b or a == 1 for a, b in zip(traces.shape[:-1], lead))):
-        traces = jnp.broadcast_to(traces, lead + traces.shape[-1:])
-    else:
-        # No rank-extending broadcasting: [P, S] traces against [P, T, M]
-        # tables would silently line P up against T whenever P == T.
-        raise ValueError(
-            f"traces leading axes {traces.shape[:-1]} must match the "
-            f"tables' leading axes {lead} dim-for-dim (1s broadcast), or "
-            "pass a single [S] trace; expand per-platform traces to "
-            "[P, 1, S] explicitly")
-    traces = jnp.reshape(traces, (k, traces.shape[-1]))
+    traces = _broadcast_traces(np.asarray(traces), lead)
+    traces = jnp.asarray(np.ascontiguousarray(traces)).reshape(
+        (k, traces.shape[-1]))
     cfg = dataclasses.replace(cfg, technique="proposed")
     out = _simulate_fleet_jit(flat, traces, cfg)
     return jax.tree_util.tree_map(
         lambda x: jnp.reshape(x, lead + x.shape[1:]), out)
+
+
+# ---------------------------------------------------------------------------
+# Streaming fleet evaluation (trace-length-independent compile, O(K) memory)
+# ---------------------------------------------------------------------------
+#
+# ``_simulate_fleet_jit`` materializes all ten per-step TraceResult fields
+# as [K, S] arrays — memory is 10·K·S floats and the compiled program is
+# keyed on S, so million-step traces are impossible and every new trace
+# length retraces.  The streaming path instead accumulates the Summary
+# reductions (power/violation/backlog sums, offered work, final predictor
+# state) *inside* the scan carry and consumes the trace in fixed-size
+# [K, C] chunks: one jitted chunk program keyed only on (K, C), driven by
+# a host loop.  Per-step fields are only materialized on request (`emit`).
+# The flattened fleet axis K is sharded across local devices through the
+# ``parallel.sharding`` helpers — each cell is independent, so the chunk
+# program partitions along K with zero cross-device communication.
+
+
+class _StreamAcc(NamedTuple):
+    """Streaming scan carry: controller state + in-carry reductions."""
+
+    mstate: pred_mod.MarkovState
+    backlog: Array
+    power_sum: Array     # Σ watts over valid steps
+    viol_sum: Array      # Σ violations
+    backlog_sum: Array   # Σ backlog (the backlog integral)
+    offered_sum: Array   # Σ w_t
+
+
+class FleetSummary(NamedTuple):
+    """Per-cell reductions from a streaming fleet run.
+
+    Every field carries the tables' leading axes (e.g. ``[P, T]`` or
+    ``[P, T, N]``) — never the trace length.  ``emitted`` holds the
+    explicitly requested per-step fields (``[..., S]`` host arrays).
+    """
+
+    mean_power_w: np.ndarray
+    qos_violation_rate: np.ndarray
+    served_fraction: np.ndarray
+    mean_backlog: np.ndarray
+    final_backlog: np.ndarray
+    offered: np.ndarray
+    mispredictions: np.ndarray
+    n_steps: int
+    final_predictor: pred_mod.MarkovState
+    emitted: Dict[str, np.ndarray]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "emit"))
+def _fleet_stream_chunk_jit(tables: BinTables, mstate: pred_mod.MarkovState,
+                            backlog: Array, chunk: Array, valid: Array,
+                            cfg: ControllerConfig,
+                            emit: Tuple[str, ...]) -> Tuple:
+    """One fixed-shape streaming chunk over the flattened [K] fleet axis.
+
+    ``chunk`` is [K, C] (the tail chunk zero-padded), ``valid`` is a [C]
+    mask; invalid steps pass the carry through unchanged, so partial tail
+    chunks reuse the same compiled program.  Reduction sums restart at
+    zero each chunk — the host accumulates them in float64, keeping
+    long-trace sums out of float32 range.
+    """
+    _TRACE_COUNTS["stream"] += 1
+
+    def cell(tab, ms, bl, tr):
+        zero = jnp.asarray(0.0, jnp.float32)
+        acc0 = _StreamAcc(mstate=ms, backlog=bl, power_sum=zero,
+                          viol_sum=zero, backlog_sum=zero, offered_sum=zero)
+
+        def step(a, inp):
+            w_t, v = inp
+            (ms2, bl2), out = _control_step(tab, cfg, (a.mstate, a.backlog),
+                                            w_t)
+            new = _StreamAcc(
+                mstate=ms2, backlog=bl2,
+                power_sum=a.power_sum + out.power,
+                viol_sum=a.viol_sum + out.violation.astype(jnp.float32),
+                backlog_sum=a.backlog_sum + bl2,
+                offered_sum=a.offered_sum + w_t)
+            a2 = jax.tree.map(lambda n, o: jnp.where(v, n, o), new, a)
+            return a2, tuple(getattr(out, e) for e in emit)
+
+        return jax.lax.scan(step, acc0, (tr, valid))
+
+    return jax.vmap(cell, in_axes=(0, 0, 0, 0))(tables, mstate, backlog,
+                                                chunk)
+
+
+def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
+                          cfg: ControllerConfig, chunk_size: int = 1024,
+                          emit: Sequence[str] = (),
+                          shard: bool = True) -> FleetSummary:
+    """Streaming :func:`simulate_fleet`: O(K) memory, any trace length.
+
+    The trace is consumed in fixed ``[K, chunk_size]`` chunks, so the
+    compiled program is independent of the trace length — a million-step
+    campaign runs through the same jit cache entry as a 2k-step one — and
+    the Summary reductions ride the scan carry instead of ``[K, S]``
+    per-step arrays.  ``emit`` optionally names :class:`TraceResult`
+    per-step fields (e.g. ``("power", "f_rel")``) to materialize on the
+    host.  With more than one local device and ``shard=True`` the
+    flattened fleet axis is sharded across devices (cells are
+    independent, so the chunk program partitions with no collectives).
+
+    Matches the materialized path to float32 reduction accuracy (≤1e-5
+    relative — see tests/test_fleet.py).
+    """
+    # emit accepts TraceResult per-step names; internally _StepOut names
+    # one field differently ("violations" → "violation").
+    alias = {"violations": "violation"}
+    emit = tuple(emit)
+    emit_internal = tuple(alias.get(e, e) for e in emit)
+    for e, ei in zip(emit, emit_internal):
+        if ei not in _StepOut._fields:
+            per_step = tuple(f for f in TraceResult._fields
+                             if f not in ("mispredictions",
+                                          "final_predictor"))
+            raise ValueError(f"unknown emit field {e!r}; "
+                             f"choose from {per_step}")
+    lead = tables.capacity.shape[:-1]
+    k = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    flat = BinTables(*[jnp.reshape(x, (k,) + x.shape[len(lead):])
+                       for x in tables])
+    traces = _broadcast_traces(np.asarray(traces), lead)
+    traces = traces.reshape((k, traces.shape[-1])) if lead else \
+        traces[None, :]
+    s = traces.shape[-1]
+    c = max(1, min(int(chunk_size), s))
+    cfg = dataclasses.replace(cfg, technique="proposed")
+
+    mesh = shd.fleet_mesh() if shard else None
+    k_pad = k
+    if mesh is not None:
+        d = mesh.devices.size
+        k_pad = -(-k // d) * d
+    if k_pad != k:
+        # Pad the fleet axis so it divides the device count; padded cells
+        # replay cell 0 and are dropped from every result below.  The
+        # trace rows are padded per *chunk* (below), never as a dense
+        # [k_pad, S] array — the O(K·C) memory contract must survive
+        # sharding.
+        pad = [(0, k_pad - k)] + [(0, 0)] * (flat.capacity.ndim - 1)
+        flat = BinTables(*[jnp.pad(x, pad[:x.ndim], mode="edge")
+                           for x in flat])
+
+    mstate = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (k_pad,) + x.shape),
+        pred_mod.init_state(cfg.predictor))
+    backlog = jnp.zeros((k_pad,), jnp.float32)
+    if mesh is not None:
+        rules = shd.fleet_rules(mesh)
+        flat = shd.shard_fleet(flat, rules)
+        mstate = shd.shard_fleet(mstate, rules)
+        backlog = shd.shard_fleet(backlog, rules)
+
+    power_sum = np.zeros(k_pad, np.float64)
+    viol_sum = np.zeros(k_pad, np.float64)
+    backlog_sum = np.zeros(k_pad, np.float64)
+    offered_sum = np.zeros(k_pad, np.float64)
+    emitted = {e: [] for e in emit}
+    for s0 in range(0, s, c):
+        raw = np.ascontiguousarray(traces[:, s0:s0 + c])
+        n_valid = raw.shape[-1]
+        if n_valid < c:
+            raw = np.pad(raw, ((0, 0), (0, c - n_valid)))
+        if k_pad != k:
+            raw = np.concatenate(
+                [raw, np.broadcast_to(raw[:1], (k_pad - k, raw.shape[-1]))])
+        chunk = jnp.asarray(raw)
+        valid = jnp.asarray(np.arange(c) < n_valid)
+        if mesh is not None:
+            chunk = shd.shard_fleet(chunk, rules)
+        acc, ys = _fleet_stream_chunk_jit(flat, mstate, backlog, chunk,
+                                          valid, cfg, emit_internal)
+        mstate, backlog = acc.mstate, acc.backlog
+        power_sum += np.asarray(acc.power_sum, np.float64)
+        viol_sum += np.asarray(acc.viol_sum, np.float64)
+        backlog_sum += np.asarray(acc.backlog_sum, np.float64)
+        offered_sum += np.asarray(acc.offered_sum, np.float64)
+        for e, y in zip(emit, ys):
+            emitted[e].append(np.asarray(y[:, :n_valid]))
+
+    def cut(x):
+        x = np.asarray(x)[:k]
+        return x.reshape(lead + x.shape[1:])
+
+    served = offered_sum - np.asarray(backlog, np.float64)
+    return FleetSummary(
+        mean_power_w=cut(power_sum / s),
+        qos_violation_rate=cut(viol_sum / s),
+        served_fraction=cut(served / np.maximum(offered_sum, 1e-9)),
+        mean_backlog=cut(backlog_sum / s),
+        final_backlog=cut(backlog),
+        offered=cut(offered_sum),
+        mispredictions=cut(mstate.mispredictions),
+        n_steps=s,
+        final_predictor=jax.tree.map(cut, mstate),
+        emitted={e: cut(np.concatenate(v, axis=-1))
+                 for e, v in emitted.items()})
+
+
+def fleet_nominal_watts(params: char.PlatformParams,
+                        cfg: ControllerConfig) -> np.ndarray:
+    """Per-platform nominal fleet watts [P] — the power-gain denominator."""
+    return ((np.asarray(_fleet_nominal_watts_jit(params))
+             + pll_standing_watts(cfg)) * cfg.n_nodes)
 
 
 def compare_all_batched(platforms: Sequence[PlatformSpec],
@@ -644,9 +898,7 @@ def compare_all_batched(platforms: Sequence[PlatformSpec],
     tables = fleet_bin_tables(params, cfg, techniques)     # [P, T, M]
     res = simulate_fleet(tables, trace, cfg)               # [P, T, S]
 
-    pll_watts = pll_standing_watts(cfg)
-    nominal_w = (np.asarray(_fleet_nominal_watts_jit(params))
-                 + pll_watts) * cfg.n_nodes                # [P]
+    nominal_w = fleet_nominal_watts(params, cfg)           # [P]
     offered = float(jnp.sum(jnp.asarray(trace, jnp.float32)))
     power = np.asarray(res.power)
     viol = np.asarray(res.violations)

@@ -42,10 +42,14 @@ def fgn(n: int, hurst: float, rng: np.random.Generator) -> np.ndarray:
 
     Returns n samples of zero-mean, unit-variance fGn with Hurst ``hurst``.
     """
-    if not 0.5 < hurst <= 1.0:
-        raise ValueError("Hurst exponent must be in (0.5, 1.0]")
+    if not 0.5 <= hurst <= 1.0:
+        raise ValueError("Hurst exponent must be in [0.5, 1.0]")
     if hurst == 1.0:  # degenerate: perfectly correlated
         return np.full(n, rng.standard_normal())
+    # H = 0.5 is the valid white-noise boundary: γ(k) = δ(k), so the
+    # circulant embedding below degenerates to iid Gaussians and needs no
+    # special-casing — only the (0.5, 1.0) long-range-dependent interior
+    # has non-trivial correlations.
 
     k = np.arange(n)
     # Autocovariance of fGn: γ(k) = ½(|k+1|^2H − 2|k|^2H + |k−1|^2H)
@@ -114,5 +118,9 @@ def estimate_hurst(x: np.ndarray, min_block: int = 8) -> float:
             sizes.append(m)
             variances.append(v)
         m *= 2
+    if len(sizes) < 2:
+        # Too short (or too degenerate — e.g. constant blocks) to regress
+        # Var[m] on m: no estimate, rather than a np.polyfit crash.
+        return float("nan")
     slope = np.polyfit(np.log(sizes), np.log(variances), 1)[0]
     return float(1.0 + slope / 2.0)

@@ -165,3 +165,49 @@ def named_shardings(layout: Any, rules: Optional[ShardingRules] = None):
     return jax.tree.map(
         lambda d: NamedSharding(rules.mesh, rules.resolve(d.axes, d.shape)),
         layout, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Fleet axis: embarrassingly-parallel batch sharding over local devices
+# ---------------------------------------------------------------------------
+#
+# The controller's streaming fleet path flattens (platform × technique ×
+# scenario) cells into one leading K axis; cells are independent, so
+# sharding K over a 1-D device mesh partitions the compiled chunk program
+# with zero collectives.  The same divisibility-checked ``ShardingRules``
+# used for model tensors resolves each leaf (non-divisible leading axes
+# fall back to replication rather than erroring).
+
+
+def fleet_mesh(axis: str = "fleet") -> Optional[Mesh]:
+    """1-D mesh over all local devices, or None on a single device."""
+    devices = jax.devices()
+    if len(devices) < 2:
+        return None
+    import numpy as np
+    return Mesh(np.asarray(devices), (axis,))
+
+
+def fleet_rules(mesh: Mesh, axis: str = "fleet") -> ShardingRules:
+    """Rules mapping the logical fleet axis onto the 1-D device mesh."""
+    return ShardingRules(mapping={axis: axis}, mesh=mesh)
+
+
+def shard_fleet(tree: Any, rules: ShardingRules,
+                axis: str = "fleet") -> Any:
+    """Place every leaf's leading axis on the fleet mesh axis.
+
+    Leaves whose leading dim doesn't divide the device count are
+    replicated (the rules drop non-divisible entries); scalars pass
+    through untouched.
+    """
+    if rules.mesh is None:
+        return tree
+
+    def place(x):
+        if getattr(x, "ndim", 0) == 0:
+            return x
+        spec = rules.resolve((axis,) + (None,) * (x.ndim - 1), x.shape)
+        return jax.device_put(x, NamedSharding(rules.mesh, spec))
+
+    return jax.tree.map(place, tree)

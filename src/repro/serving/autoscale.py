@@ -89,9 +89,17 @@ class DvfsServingSimulator:
         open-loop behavior (batcher always at nominal throughput) while
         still integrating modeled power.
 
+        When the arrival trace ends, the batcher is *drained* at the
+        final operating point (bounded by the remaining tokens at that
+        ``f_now``), so every submitted request finishes and
+        completed/latency/served_fraction are unbiased; the trailing
+        partial τ interval is folded into the counters at fractional
+        weight rather than discarded.
+
         Returns the :class:`~repro.core.controller.Summary` (including
         measured latency p50/p99 in decode steps) plus per-interval
-        occupancy/frequency/power arrays.
+        occupancy/frequency/power arrays, τ weights, and token/drain
+        accounting.
         """
         rng = np.random.default_rng(seed)
         batcher = ContinuousBatcher(batch_size=batch_size)
@@ -106,7 +114,45 @@ class DvfsServingSimulator:
         predicted = int(pred_mod.predict(pcfg, mstate))
         f_now = float(throughput[predicted]) if closed_loop else 1.0
         occ_tau, f_tau, thr_tau, power_tau, viol_tau = [], [], [], [], []
-        queued, interval_occ = [], []
+        tau_weights = []  # 1.0 per full τ; < 1 for the trailing partial
+        queued, interval_occ, interval_queue = [], [], []
+        n_ctrl_tau = 0    # τ intervals where the controller re-selected
+
+        def step_once():
+            stats = batcher.step(throughput=f_now)
+            interval_occ.append(stats["occupancy"])
+            interval_queue.append(stats["queued"])
+            queued.append(stats["queued"])
+
+        def close_interval(update_controller: bool) -> None:
+            """τ boundary: fold the interval (full *or* partial) into the
+            counters; optionally train the predictor and re-select the
+            operating point for the next τ."""
+            nonlocal mstate, predicted, f_now, n_ctrl_tau
+            occ = float(np.mean(interval_occ))
+            # QoS mirrors the controller's backlog-aware semantics: demand
+            # is busy slots plus queued requests per slot, not occupancy
+            # alone (a saturated batch with a deep queue is a miss).
+            backlog_slots = float(np.mean(interval_queue)) / batch_size
+            occ_tau.append(occ)
+            f_tau.append(float(f_rel[predicted]) if closed_loop else 1.0)
+            thr_tau.append(f_now)
+            power_tau.append(float(power[predicted]))
+            viol_tau.append(occ + backlog_slots
+                            > float(cap[predicted]) + 1e-9)
+            tau_weights.append(len(interval_occ) / self.steps_per_tau)
+            interval_occ.clear()
+            interval_queue.clear()
+            if update_controller:
+                n_ctrl_tau += 1
+                actual = int(pred_mod.workload_to_bin(jnp.asarray(occ),
+                                                      pcfg.n_bins))
+                mstate = pred_mod.observe(pcfg, mstate, jnp.asarray(actual),
+                                          jnp.asarray(predicted))
+                predicted = int(pred_mod.predict(pcfg, mstate))
+                f_now = (float(throughput[predicted]) if closed_loop
+                         else 1.0)
+
         rid = 0
         offered_tokens = 0
         for lam in arrival_rate_per_step:
@@ -116,26 +162,31 @@ class DvfsServingSimulator:
                                        max_new_tokens=n_tok))
                 offered_tokens += n_tok
                 rid += 1
-            stats = batcher.step(throughput=f_now)
-            interval_occ.append(stats["occupancy"])
-            queued.append(stats["queued"])
+            step_once()
             if len(interval_occ) == self.steps_per_tau:
-                # τ boundary: count the interval's workload, train the
-                # predictor, and set the operating point for the next τ.
-                occ = float(np.mean(interval_occ))
-                interval_occ = []
-                occ_tau.append(occ)
-                f_tau.append(float(f_rel[predicted]) if closed_loop else 1.0)
-                thr_tau.append(f_now)
-                power_tau.append(float(power[predicted]))
-                viol_tau.append(occ > float(cap[predicted]) + 1e-9)
-                actual = int(pred_mod.workload_to_bin(jnp.asarray(occ),
-                                                      pcfg.n_bins))
-                mstate = pred_mod.observe(pcfg, mstate, jnp.asarray(actual),
-                                          jnp.asarray(predicted))
-                predicted = int(pred_mod.predict(pcfg, mstate))
-                f_now = (float(throughput[predicted]) if closed_loop
-                         else 1.0)
+                close_interval(update_controller=True)
+
+        # Drain: requests still queued/in flight when the arrival trace
+        # ends must finish, or completed/latency/served_fraction are
+        # biased toward short requests.  The operating point freezes at
+        # the final f_now, which bounds the drain by the remaining tokens
+        # at that throughput (each step at least one active slot decodes
+        # f_now tokens).
+        pending = (sum(r.max_new_tokens - min(r.decoded, r.max_new_tokens)
+                       for r in batcher.slots if r is not None)
+                   + sum(r.max_new_tokens for r in batcher.queue))
+        max_drain = (int(np.ceil(pending / max(f_now, 1e-6)))
+                     + len(batcher.queue) + batch_size + 1)
+        drain_steps = 0
+        while not batcher.drained() and drain_steps < max_drain:
+            step_once()
+            drain_steps += 1
+            if len(interval_occ) == self.steps_per_tau:
+                close_interval(update_controller=False)
+        if interval_occ:
+            # Trailing partial τ: fold its occupancy/power/QoS into the
+            # counters at fractional weight instead of discarding it.
+            close_interval(update_controller=False)
 
         lat = np.asarray([r.finished_step - r.arrived_step
                           for r in batcher.finished], np.float64)
@@ -145,19 +196,21 @@ class DvfsServingSimulator:
                              for r in batcher.finished)
                          + sum(min(s.decoded, s.max_new_tokens)
                                for s in batcher.slots if s is not None))
-        n_tau = max(len(occ_tau), 1)
         nominal_w = ((ctl.nominal_node_watts(self.platform)
                       + ctl.pll_standing_watts(self.cfg)) * self.cfg.n_nodes)
-        mean_w = float(np.mean(power_tau)) if power_tau else nominal_w
+        wts = np.asarray(tau_weights)
+        mean_w = (float(np.average(power_tau, weights=wts)) if power_tau
+                  else nominal_w)
         summary = ctl.Summary(
             technique=self.cfg.technique,
             mean_power_w=mean_w,
             nominal_power_w=nominal_w,
             power_gain=nominal_w / mean_w,
-            qos_violation_rate=float(np.mean(viol_tau)) if viol_tau else 0.0,
+            qos_violation_rate=(float(np.average(viol_tau, weights=wts))
+                                if viol_tau else 0.0),
             served_fraction=served_tokens / max(offered_tokens, 1),
             misprediction_rate=(int(mstate.mispredictions)
-                                / max(n_tau - pcfg.warmup_steps, 1)),
+                                / max(n_ctrl_tau - pcfg.warmup_steps, 1)),
             mean_backlog=float(np.mean(queued)) / batch_size,
             latency_p50=p50,
             latency_p99=p99,
@@ -167,8 +220,13 @@ class DvfsServingSimulator:
                 "f_rel_tau": np.asarray(f_tau),
                 "throughput_tau": np.asarray(thr_tau),
                 "power_tau": np.asarray(power_tau),
+                "tau_weights": wts,
                 "latency_p50": p50, "latency_p99": p99,
-                "completed": len(batcher.finished)}
+                "completed": len(batcher.finished),
+                "submitted": rid,
+                "offered_tokens": offered_tokens,
+                "served_tokens": served_tokens,
+                "drain_steps": drain_steps}
 
 
 def compare_techniques(terms: RooflineTerms, trace: np.ndarray,

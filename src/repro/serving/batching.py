@@ -72,6 +72,10 @@ class ContinuousBatcher:
                 req.finished_step = self.step_idx
                 self.finished.append(req)
                 self.slots[i] = None
+        # Slots freed by retirements are claimed immediately (continuous
+        # batching): the queued request holds the slot from this step on
+        # instead of idling until the next step's admission pass.
+        self._admit()
         self.step_idx += 1
         return {
             "occupancy": active / self.batch_size,

@@ -147,6 +147,30 @@ def test_hybrid_gates_nodes_at_low_load():
     assert hyb.mean_power_w <= min(pg.mean_power_w, prop.mean_power_w) + 1e-6
 
 
+def test_violations_count_backlogged_demand():
+    """Regression: a step whose backlog-inflated demand exceeds capacity
+    is a QoS miss even when w_t alone fits (served-within-τ semantics)."""
+    import repro.core.predictor as pred_mod
+    plat = ctl.fpga_platform(ACCELERATORS["tabla"])
+    cfg = ctl.ControllerConfig(
+        predictor=pred_mod.PredictorConfig(warmup_steps=0))
+    # low plateau trains the predictor low, then a sustained jump: the
+    # first high step under-provisions and piles up backlog that takes
+    # many in-capacity steps to drain.
+    trace = np.concatenate([np.full(8, 0.08), np.full(24, 0.9)])
+    res = ctl.simulate(plat, cfg, trace)
+    viol = np.asarray(res.violations)
+    backlog = np.asarray(res.backlog)
+    cap = np.asarray(res.capacity)
+    prev = np.concatenate([[0.0], backlog[:-1]])
+    np.testing.assert_array_equal(viol, trace + prev > cap + 1e-9)
+    # the miss chain: steps where w_t fits but carried backlog doesn't
+    assert np.any((trace <= cap + 1e-9) & viol)
+    # and no backlog ⇒ the old per-step semantics are unchanged
+    ok = prev == 0.0
+    np.testing.assert_array_equal(viol[ok], trace[ok] > cap[ok] + 1e-9)
+
+
 def test_tpu_platform_controller_runs(trace):
     """The TPU adaptation: controller on roofline-derived terms."""
     plat = ctl.tpu_platform(t_compute=0.002, t_memory=0.012,

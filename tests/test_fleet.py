@@ -195,6 +195,90 @@ def test_evaluate_trace_matches_host_loop():
     assert int(out.final_state.mispredictions) == int(state.mispredictions)
 
 
+def test_streaming_matches_materialized(trace):
+    """Streamed in-carry reductions == materialized [K, S] reductions to
+    ≤1e-5, with a chunk size that doesn't divide the trace length."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"]),
+                 ctl.fpga_platform(ACCELERATORS["stripes"])]
+    params = char.stack_platform_params([p.params for p in platforms])
+    cfg = ctl.ControllerConfig()
+    techniques = ("proposed", "power_gating", "hybrid")
+    tables = ctl.fleet_bin_tables(params, cfg, techniques)
+    res = ctl.simulate_fleet(tables, trace, cfg)
+    fs = ctl.simulate_fleet_stream(tables, trace, cfg, chunk_size=100,
+                                   emit=("power", "f_rel", "violations"))
+    np.testing.assert_allclose(fs.mean_power_w,
+                               np.asarray(res.power).mean(-1), rtol=1e-5)
+    np.testing.assert_allclose(fs.qos_violation_rate,
+                               np.asarray(res.violations).mean(-1),
+                               atol=1e-7)
+    np.testing.assert_allclose(fs.mean_backlog,
+                               np.asarray(res.backlog).mean(-1), atol=1e-5)
+    np.testing.assert_allclose(fs.final_backlog,
+                               np.asarray(res.backlog)[..., -1], atol=1e-6)
+    np.testing.assert_array_equal(fs.mispredictions,
+                                  np.asarray(res.mispredictions))
+    np.testing.assert_allclose(
+        np.asarray(fs.final_predictor.counts),
+        np.asarray(res.final_predictor.counts), rtol=1e-6)
+    # offered/served bookkeeping
+    np.testing.assert_allclose(fs.offered, float(np.sum(trace)), rtol=1e-5)
+    served = fs.offered - fs.final_backlog
+    np.testing.assert_allclose(fs.served_fraction, served / fs.offered,
+                               rtol=1e-6)
+    # emitted per-step fields are exact, everything else is trace-free
+    np.testing.assert_allclose(fs.emitted["power"], np.asarray(res.power),
+                               atol=1e-5)
+    np.testing.assert_array_equal(fs.emitted["f_rel"],
+                                  np.asarray(res.f_rel))
+    # TraceResult field names are accepted verbatim (incl. "violations")
+    np.testing.assert_array_equal(fs.emitted["violations"],
+                                  np.asarray(res.violations))
+    assert fs.mean_power_w.shape == (2, 3)
+    assert fs.n_steps == len(trace)
+    with pytest.raises(ValueError, match="unknown emit"):
+        ctl.simulate_fleet_stream(tables, trace, cfg, emit=("watts",))
+
+
+def test_streaming_zero_retrace_across_same_shaped_sweeps(trace):
+    """New platforms + new trace values with the same shapes reuse the
+    compiled chunk program (trace-length-independent compile)."""
+    cfg = ctl.ControllerConfig()
+    first = char.stack_platform_params(
+        [ctl.fpga_platform(ACCELERATORS["tabla"]).params])
+    tables = ctl.fleet_bin_tables(first, cfg, ("proposed", "hybrid"))
+    ctl.simulate_fleet_stream(tables, trace, cfg, chunk_size=64)
+    before = ctl.fleet_trace_counts()
+    second = char.stack_platform_params(
+        [ctl.fpga_platform(ACCELERATORS["proteus"]).params])
+    tables2 = ctl.fleet_bin_tables(second, cfg, ("proposed", "hybrid"))
+    trace2 = wl.generate_trace(wl.WorkloadConfig(n_steps=256, seed=11))
+    ctl.simulate_fleet_stream(tables2, trace2, cfg, chunk_size=64)
+    # a *longer* same-chunk trace must also reuse the chunk program
+    trace3 = wl.generate_trace(wl.WorkloadConfig(n_steps=512, seed=12))
+    ctl.simulate_fleet_stream(tables2, trace3, cfg, chunk_size=64)
+    assert ctl.fleet_trace_counts() == before
+
+
+def test_streaming_long_trace_constant_memory():
+    """A ≥100k-step trace runs through the chunked path — the [K, S]
+    per-step fields are never materialized (only requested emits are)."""
+    cfg = ctl.ControllerConfig()
+    params = char.stack_platform_params(
+        [ctl.fpga_platform(ACCELERATORS["tabla"]).params])
+    tables = ctl.fleet_bin_tables(params, cfg, ("proposed", "hybrid"))
+    n = 120_000
+    trace = wl.generate_trace(wl.WorkloadConfig(n_steps=n, seed=0))
+    fs = ctl.simulate_fleet_stream(tables, trace, cfg, chunk_size=8192)
+    assert fs.n_steps == n
+    assert fs.mean_power_w.shape == (1, 2)
+    assert fs.emitted == {}
+    assert np.isfinite(fs.mean_power_w).all()
+    # essentially all offered work is served over a long trace
+    assert (fs.served_fraction > 0.999).all()
+    assert (fs.mean_power_w > 0).all()
+
+
 def test_stack_platform_params_shapes():
     ps = [ctl.fpga_platform(ACCELERATORS[n]).params
           for n in ("tabla", "diannao", "proteus")]

@@ -1,0 +1,149 @@
+"""Scenario library + streaming campaign tests (scenarios.py tentpole)."""
+
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import characterization as char
+from repro.core import controller as ctl
+from repro.core import scenarios as scn
+from repro.core.accelerators import ACCELERATORS
+from repro.runtime import elastic
+
+
+def test_every_scenario_in_range_and_deterministic():
+    for name, sc in scn.SCENARIOS.items():
+        t = sc.trace(512, seed=1)
+        assert t.shape == (512,), name
+        assert (t >= 0.0).all() and (t <= 1.0).all(), name
+        np.testing.assert_array_equal(t, sc.trace(512, seed=1))
+        assert not np.array_equal(t, sc.trace(512, seed=2)), name
+        # every scenario carries real load, none is degenerate-flat
+        assert 0.01 < t.mean() < 0.99, name
+        assert t.std() > 1e-3, name
+
+
+def test_scenarios_are_seed_salted_per_name():
+    """Same seed, different scenarios → different traces (the name salts
+    the generator, so suites don't accidentally correlate)."""
+    a = scn.get_scenario("burse").trace(256, seed=0)
+    b = scn.get_scenario("node_failure").trace(256, seed=0)
+    assert not np.array_equal(a, b)
+
+
+def test_node_failure_schedule_quantized_by_elastic_plan():
+    sc = scn.get_scenario("node_failure")
+    alive = sc.node_schedule(512, n_nodes=8, seed=0)
+    assert alive.shape == (512,)
+    assert (alive >= 1).all() and (alive <= 8).all()
+    assert alive.min() < 8          # failures actually happen
+    # every count is a usable (data × model) grid from the elastic plan
+    for a in np.unique(alive):
+        d, m = elastic.shrink_mesh_plan(int(a), prefer_model=8)
+        assert d * m == a, a
+    # failures concentrate demand on survivors
+    base = sc.trace(512, seed=0)
+    eff = sc.effective_trace(512, n_nodes=8, seed=0)
+    failed = alive < 8
+    assert failed.any()
+    assert (eff[failed] >= base[failed] - 1e-7).all()
+    assert eff[failed].mean() > base[failed].mean()
+    np.testing.assert_allclose(eff[~failed], base[~failed], atol=1e-6)
+
+
+def test_build_suite_stacks_all_scenarios():
+    names, traces = scn.build_suite(n_steps=128, n_nodes=8, seed=3)
+    assert names == tuple(scn.SCENARIOS)
+    assert traces.shape == (len(names), 128)
+    assert (traces >= 0.0).all() and (traces <= 1.0).all()
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scn.build_suite(["no_such_scenario"], n_steps=64)
+
+
+def test_campaign_streaming_matches_materialized_path():
+    """Per-scenario streamed summaries == the materialized simulate_fleet
+    reductions to ≤1e-5 on a shared scenario suite."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    techniques = ("proposed", "power_gating")
+    names, traces = scn.build_suite(("burse", "flash_crowd"), n_steps=192)
+    cfg = ctl.ControllerConfig()
+    params = char.stack_platform_params([p.params for p in platforms])
+    tables = ctl.fleet_bin_tables(params, cfg, techniques)
+    tab_n = ctl.BinTables(*[jnp.broadcast_to(
+        x[:, :, None], x.shape[:2] + (len(names),) + x.shape[2:])
+        for x in tables])
+    res = ctl.simulate_fleet(tab_n, traces[None, None], cfg)  # [P,T,N,S]
+
+    out = scn.run_campaign(platforms, scenario_names=names,
+                           techniques=techniques, n_steps=192,
+                           chunk_size=50)
+    nominal = ctl.fleet_nominal_watts(params, cfg)
+    for j, tech in enumerate(techniques):
+        for k, scen in enumerate(names):
+            cell = out["table"][platforms[0].name][tech][scen]
+            power = np.asarray(res.power)[0, j, k]
+            np.testing.assert_allclose(cell["mean_power_w"], power.mean(),
+                                       rtol=1e-5, err_msg=(tech, scen))
+            np.testing.assert_allclose(
+                cell["power_gain"], nominal[0] / power.mean(), rtol=1e-5)
+            np.testing.assert_allclose(
+                cell["qos_violation_rate"],
+                np.asarray(res.violations)[0, j, k].mean(), atol=1e-7)
+            offered = traces[k].sum()
+            served = offered - np.asarray(res.backlog)[0, j, k, -1]
+            np.testing.assert_allclose(cell["served_fraction"],
+                                       served / offered, rtol=1e-5)
+
+
+def test_campaign_zero_retrace_across_scenario_sweeps():
+    """Same-shaped scenario sweeps (new seeds, new scenario subsets of the
+    same size) reuse all three compiled fleet programs."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    kw = dict(techniques=("proposed", "power_gating"), n_steps=128,
+              chunk_size=64)
+    scn.run_campaign(platforms, scenario_names=("burse", "diurnal"), **kw)
+    before = ctl.fleet_trace_counts()
+    scn.run_campaign(platforms, scenario_names=("ramp", "decay"), seed=5,
+                     **kw)
+    assert ctl.fleet_trace_counts() == before
+
+
+def test_streaming_shards_fleet_axis_across_devices():
+    """With >1 local device the streaming path shards K and still matches
+    the single-device result (forced 2-CPU-device subprocess)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=2")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax
+import numpy as np
+from repro.core import characterization as char
+from repro.core import controller as ctl
+from repro.core import scenarios as scn
+from repro.core.accelerators import ACCELERATORS
+from repro.parallel import sharding as shd
+
+assert jax.local_device_count() == 2
+assert shd.fleet_mesh() is not None
+cfg = ctl.ControllerConfig()
+params = char.stack_platform_params(
+    [ctl.fpga_platform(ACCELERATORS["tabla"]).params])
+# 3 techniques -> K = 3: not divisible by 2 devices, exercises padding
+tables = ctl.fleet_bin_tables(params, cfg,
+                              ("proposed", "core_only", "power_gating"))
+trace = scn.get_scenario("burse").trace(200, seed=0)
+a = ctl.simulate_fleet_stream(tables, trace, cfg, chunk_size=64, shard=True)
+b = ctl.simulate_fleet_stream(tables, trace, cfg, chunk_size=64, shard=False)
+np.testing.assert_allclose(a.mean_power_w, b.mean_power_w, rtol=1e-6)
+np.testing.assert_allclose(a.qos_violation_rate, b.qos_violation_rate)
+np.testing.assert_array_equal(a.mispredictions, b.mispredictions)
+print("SHARDED_OK")
+"""
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SHARDED_OK" in proc.stdout

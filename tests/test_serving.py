@@ -116,6 +116,42 @@ def test_batcher_respects_throughput_scaling():
     assert steps >= 8  # half speed ⇒ at least 2× the steps
 
 
+def test_batcher_admits_into_freed_slots_same_step():
+    """Regression: a slot freed by a retirement used to idle until the
+    next step's admission pass; continuous batching claims it at once."""
+    b = ContinuousBatcher(batch_size=1)
+    b.submit(Request(rid=0, prompt_len=1, max_new_tokens=1))
+    b.submit(Request(rid=1, prompt_len=1, max_new_tokens=1))
+    stats = b.step()
+    assert len(b.finished) == 1
+    assert stats["queued"] == 0.0          # freed slot claimed this step
+    assert b.slots[0] is not None and b.slots[0].rid == 1
+    assert b.slots[0].started_step == 0
+
+
+def test_drained_serving_totals_conserve_tokens():
+    """Regression: requests in flight when the arrival trace ended never
+    finished, biasing completed/latency/served_fraction; the drained loop
+    conserves every offered token and folds the trailing partial τ."""
+    sim = _closed_loop_sim("proposed")
+    lam = np.full(100, 2.0)                # 100 % steps_per_tau=16 ≠ 0
+    out = sim.run_request_load(lam, batch_size=8, mean_new_tokens=16)
+    assert out["submitted"] > 0
+    assert out["completed"] == out["submitted"]
+    assert out["served_tokens"] == out["offered_tokens"]
+    assert out["summary"].served_fraction == pytest.approx(1.0)
+    assert out["drain_steps"] > 0
+    # every decode step (arrivals + drain) lands in exactly one τ entry
+    wts = out["tau_weights"]
+    assert (wts <= 1.0 + 1e-9).all() and (wts > 0).all()
+    total_steps = len(lam) + out["drain_steps"]
+    assert wts.sum() * sim.steps_per_tau == pytest.approx(total_steps)
+    assert len(out["occupancy_tau"]) == len(wts)
+    # latency percentiles now cover *all* requests, including long ones
+    assert np.isfinite(out["summary"].latency_p99)
+    assert out["summary"].latency_p99 >= out["summary"].latency_p50
+
+
 def test_split_kv_selection():
     assert split_kv_needed(get_config("llama3-405b"), 16)       # kv=8
     assert not split_kv_needed(get_config("gemma3-27b"), 16)    # kv=16

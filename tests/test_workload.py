@@ -38,6 +38,36 @@ def test_fgn_white_noise_limit():
     assert h < 0.62  # ≈ 0.5 for (nearly) independent increments
 
 
+def test_fgn_accepts_white_noise_boundary():
+    """Regression: H=0.5 (valid iid-Gaussian boundary) used to be
+    rejected; the circulant embedding degenerates to white noise."""
+    rng = np.random.default_rng(0)
+    x = wl.fgn(1 << 13, 0.5, rng)
+    assert abs(x.mean()) < 0.05 and abs(x.std() - 1.0) < 1e-6
+    h = wl.estimate_hurst(x)
+    assert 0.4 < h < 0.6
+    # lag-1 autocorrelation ≈ 0 for white noise
+    assert abs(np.corrcoef(x[:-1], x[1:])[0, 1]) < 0.05
+    t = wl.generate_trace(wl.WorkloadConfig(n_steps=512, hurst=0.5, seed=0))
+    assert (t >= 0).all() and (t <= 1).all()
+    with pytest.raises(ValueError, match="Hurst"):
+        wl.fgn(64, 0.49, rng)
+    with pytest.raises(ValueError, match="Hurst"):
+        wl.fgn(64, 1.01, rng)
+
+
+def test_estimate_hurst_short_trace_is_nan_not_crash():
+    """Regression: fewer than two surviving block sizes crashed
+    np.polyfit; now the estimator reports no-estimate (NaN)."""
+    assert np.isnan(wl.estimate_hurst(np.random.default_rng(0)
+                                      .standard_normal(16)))
+    # degenerate (constant) traces have zero block variance at every size
+    assert np.isnan(wl.estimate_hurst(np.ones(4096)))
+    # and a healthy length still estimates
+    x = wl.fgn(1 << 12, 0.76, np.random.default_rng(1))
+    assert np.isfinite(wl.estimate_hurst(x))
+
+
 def test_aggregation_smooths():
     fine = wl.generate_trace(wl.WorkloadConfig(n_steps=1024, aggregate=1,
                                                seed=0))
