@@ -287,6 +287,49 @@ def bench_campaign():
     return rows
 
 
+def bench_replay():
+    """Bundled-trace replay through the streaming campaign path.
+
+    Replays the vendored Azure/Google-style samples (and the composed
+    ``cloud_mix``) as campaign scenarios and asserts the zero-retrace
+    contract end-to-end: after a same-shaped *synthetic* warm-up sweep,
+    the replay sweep must add no compiled chunk programs
+    (``replay/stream_reuse`` reports the retrace delta — it should be 0).
+    """
+    from repro.core import scenarios as scn
+    from repro.core import traces as tr
+    replays = ("replay_azure_vm_cpu", "replay_google_cluster", "cloud_mix")
+    missing = [n for n in replays if n not in scn.SCENARIOS]
+    if missing:
+        return [("replay/skipped", 0.0, f"no bundled traces: {missing}")]
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    techniques = ("proposed", "power_gating", "hybrid")
+    chunk = max(min(N_STEPS, 512), 1)
+    kw = dict(techniques=techniques, n_steps=N_STEPS, chunk_size=chunk)
+    scn.run_campaign(platforms, scenario_names=("burse", "diurnal", "ramp"),
+                     **kw)
+    before = ctl.fleet_trace_counts()["stream"]
+    t0 = time.perf_counter()
+    out = scn.run_campaign(platforms, scenario_names=replays, **kw)
+    dt = time.perf_counter() - t0
+    delta = ctl.fleet_trace_counts()["stream"] - before
+    cells = len(platforms) * len(techniques) * len(replays)
+    rows = []
+    for scen in replays:
+        row = out["table"][platforms[0].name]
+        rows.append((f"replay/{scen}", dt / cells / N_STEPS * 1e6,
+                     f"prop={row['proposed'][scen]['power_gain']:.2f}x"
+                     f";hyb={row['hybrid'][scen]['power_gain']:.2f}x"
+                     f";qos={row['proposed'][scen]['qos_violation_rate']:.3f}"))
+    rows.append(("replay/stream_reuse", 0.0,
+                 f"retraces={delta};chunk={chunk}"))
+    for n, s in sorted(tr.bundled_sources().items()):
+        rows.append((f"replay/source/{n}", 0.0,
+                     f"samples={s.n_samples};interval_s={s.interval_s:g}"
+                     f";mean={s.utilization.mean():.3f}"))
+    return rows
+
+
 def bench_voltage_optimizer():
     """Runtime cost of the §V voltage selection (table build + lookup)."""
     plat = ctl.fpga_platform(ACCELERATORS["tabla"])
@@ -343,8 +386,8 @@ def bench_tpu_serving():
 BENCHES = [bench_fleet, bench_table2, bench_fig4_workload_sweep,
            bench_fig5_alpha_sweep, bench_fig6_beta_sweep, bench_fig10_trace,
            bench_fig12_per_accelerator_traces, bench_predictor,
-           bench_hybrid, bench_campaign, bench_voltage_optimizer,
-           bench_tpu_serving]
+           bench_hybrid, bench_campaign, bench_replay,
+           bench_voltage_optimizer, bench_tpu_serving]
 
 
 def main(argv=None) -> None:

@@ -1,0 +1,76 @@
+"""Regenerate the bundled miniature sample traces (deterministic).
+
+The repo cannot ship real Azure/Google cluster traces (size + licensing),
+so these are *style-faithful* miniatures synthesized with the shapes those
+datasets are known for — see README.md in this directory.  Regenerating is
+bit-reproducible:
+
+  python data/traces/make_samples.py
+
+Writes ``azure_vm_cpu.csv`` and ``google_cluster.npz`` next to this file.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def azure_vm_cpu() -> np.ndarray:
+    """Azure-VM-style CPU utilization in percent: one day at 5-min
+    readings (288 samples) — strong diurnal cycle, a lunch-hour dip, an
+    evening batch window, and correlated noise."""
+    rng = np.random.default_rng(2019)
+    n = 288                                   # 24 h at 300 s
+    t = np.arange(n) / n                      # day fraction
+    day = 38.0 * np.clip(np.sin(np.pi * (t * 24.0 - 7.0) / 14.0), 0.0, None)
+    lunch = -9.0 * np.exp(-0.5 * ((t * 24.0 - 12.5) / 0.7) ** 2)
+    batch = 22.0 * np.exp(-0.5 * ((t * 24.0 - 21.5) / 1.1) ** 2)
+    noise = np.convolve(rng.standard_normal(n + 8), np.full(8, 1 / 8.0),
+                        "valid")[:n] * 6.0
+    util = 14.0 + day + lunch + batch + noise
+    return np.clip(util, 0.5, 100.0)
+
+
+def google_cluster() -> np.ndarray:
+    """Google-cluster-style machine utilization as a fraction of capacity:
+    one day at 150 s readings (576 samples) — flatter baseline than the VM
+    trace, heavy-tailed task-arrival bursts, and a rolling-upgrade trough."""
+    rng = np.random.default_rng(2011)
+    n = 576
+    base = 0.34 + 0.05 * np.sin(2 * np.pi * (np.arange(n) / n - 0.25))
+    util = base + 0.03 * np.convolve(rng.standard_normal(n + 12),
+                                     np.full(12, 1 / 12.0), "valid")[:n]
+    for _ in range(9):                        # bursty task waves
+        t0 = int(rng.integers(0, n))
+        amp = float(rng.pareto(3.0) * 0.18)
+        dur = int(rng.integers(6, 40))
+        util[t0:t0 + dur] += min(amp, 0.55) * np.exp(
+            -np.arange(min(dur, n - t0)) / max(dur / 3.0, 1.0))
+    trough0 = int(0.62 * n)
+    util[trough0:trough0 + 30] *= 0.55        # rolling upgrade drains
+    return np.clip(util, 0.02, 1.0)
+
+
+def main() -> int:
+    az = azure_vm_cpu()
+    rows = np.stack([np.arange(az.size) * 300.0, az], axis=1)
+    np.savetxt(os.path.join(HERE, "azure_vm_cpu.csv"), rows,
+               fmt=("%.0f", "%.3f"), delimiter=",",
+               header="timestamp_s,cpu_util_pct", comments="")
+    gg = google_cluster()
+    np.savez(os.path.join(HERE, "google_cluster.npz"),
+             utilization=gg.astype(np.float32),
+             interval_s=np.float64(150.0))
+    print(f"azure_vm_cpu.csv: {az.size} samples @300s "
+          f"mean={az.mean():.1f}% peak={az.max():.1f}%")
+    print(f"google_cluster.npz: {gg.size} samples @150s "
+          f"mean={gg.mean():.3f} peak={gg.max():.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,11 +4,20 @@ Sweeps the whole campaign through the fused fleet path — one masked grid
 sweep for every operating table, one chunked streaming scan for every
 (platform × technique × scenario) cell — so arbitrarily long traces run
 in O(K) memory and the compiled programs are reused across scenarios.
+Replayed traces (the bundled ``replay_*`` scenarios, or any CSV/NPZ
+utilization file via ``--trace``) sweep through the same programs.
 
   PYTHONPATH=src python scripts/campaign.py
   PYTHONPATH=src python scripts/campaign.py --steps 100000 --chunk 8192 \
       --scenarios burse,flash_crowd,node_failure --json campaign.json
   PYTHONPATH=src python scripts/campaign.py --platforms tabla,stripes,tpu
+  PYTHONPATH=src python scripts/campaign.py --list-scenarios
+  PYTHONPATH=src python scripts/campaign.py \
+      --trace data/traces/azure_vm_cpu.csv --trace-tau 60 \
+      --scenarios burse --platforms tabla --steps 4096
+
+See the README "Campaign CLI" section for the full flag table and
+expected output.
 """
 
 from __future__ import annotations
@@ -19,6 +28,7 @@ import time
 
 from repro.core import controller as ctl
 from repro.core import scenarios as scn
+from repro.core import traces
 from repro.core.accelerators import ACCELERATORS
 
 
@@ -56,11 +66,40 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", type=str, default="",
                     help="write the campaign table to this path")
+    ap.add_argument("--trace", type=str, default="",
+                    help="CSV/NPZ utilization trace to replay as an extra "
+                    "scenario (registered as replay_<stem>)")
+    ap.add_argument("--trace-interval", type=float, default=None,
+                    help="sampling interval of --trace in seconds "
+                    "(default: inferred from the file)")
+    ap.add_argument("--trace-tau", type=float, default=None,
+                    help="resample the --trace replay to this many seconds "
+                    "per control step (default: one sample per step)")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print the registered scenario library and exit")
     args = ap.parse_args(argv)
+
+    # Register --trace before --list-scenarios so the listing shows (and
+    # validates) the trace the user just pointed at.
+    registered = None
+    if args.trace:
+        kwargs = ({"interval_s": args.trace_interval}
+                  if args.trace_interval is not None else {})
+        registered = scn.register_replay(traces.load(args.trace, **kwargs),
+                                         tau_s=args.trace_tau,
+                                         overwrite=True)
+        print(f"# registered {registered.name}: {registered.description}")
+
+    if args.list_scenarios:
+        for name, sc in sorted(scn.SCENARIOS.items()):
+            print(f"{name:22s} {sc.description}")
+        return 0
 
     platforms = build_platforms(args.platforms)
     names = tuple(s for s in args.scenarios.split(",") if s) or None
     techniques = tuple(t for t in args.techniques.split(",") if t)
+    if registered is not None and names is not None:
+        names += (registered.name,)
 
     t0 = time.perf_counter()
     out = scn.run_campaign(platforms, scenario_names=names,

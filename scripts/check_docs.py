@@ -1,0 +1,147 @@
+"""Docs CI checker: keep markdown code blocks runnable and links unbroken.
+
+For every tracked markdown file this script
+
+1. **link-checks** intra-repo references: each relative markdown link
+   ``[text](path)`` must resolve to an existing file/directory (external
+   ``http(s)``/``mailto`` links and pure ``#anchors`` are skipped);
+2. **smoke-runs** the fenced ```python blocks: all blocks of one file are
+   concatenated *in order* (doc examples build on earlier ones, exactly
+   as a reader would type them) and executed once via ``python -c`` with
+   ``PYTHONPATH=src``.  Docs therefore cannot drift from the API.
+
+Exit status is non-zero on any failure, with a per-file report.
+
+  PYTHONPATH=src python scripts/check_docs.py            # all tracked docs
+  PYTHONPATH=src python scripts/check_docs.py README.md  # just one file
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def tracked_docs() -> list:
+    """Markdown files the docs job guards: the top-level README plus
+    every ``.md`` under ``docs/`` and ``data/`` — new docs are covered
+    automatically, without editing this script."""
+    found = ["README.md"]
+    for root in ("docs", "data"):
+        top = os.path.join(REPO, root)
+        for dirpath, _, files in os.walk(top):
+            for fn in sorted(files):
+                if fn.endswith(".md"):
+                    found.append(os.path.relpath(
+                        os.path.join(dirpath, fn), REPO))
+    return found
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract(md_text: str):
+    """Return (python_blocks, links) from one markdown document."""
+    blocks, links = [], []
+    in_fence, lang, buf = False, "", []
+    for line in md_text.splitlines():
+        m = _FENCE_RE.match(line.strip())
+        if m and not in_fence:
+            in_fence, lang, buf = True, m.group(1).lower(), []
+            continue
+        if line.strip() == "```" and in_fence:
+            if lang == "python":
+                blocks.append("\n".join(buf))
+            in_fence = False
+            continue
+        if in_fence:
+            buf.append(line)
+        else:
+            links.extend(_LINK_RE.findall(line))
+    return blocks, links
+
+
+def check_links(md_path: str, links) -> list:
+    """Broken intra-repo link targets (relative to the md file's dir)."""
+    errors = []
+    base = os.path.dirname(os.path.abspath(md_path))
+    for link in links:
+        if link.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = link.split("#", 1)[0]
+        if not target:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+            errors.append(f"broken link: ({link})")
+    return errors
+
+
+def run_blocks(md_path: str, blocks, timeout: float) -> list:
+    """Execute a file's concatenated python blocks; return failures."""
+    if not blocks:
+        return []
+    code = "\n\n".join(blocks)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    t0 = time.perf_counter()
+    try:
+        proc = subprocess.run([sys.executable, "-c", code], cwd=REPO,
+                              env=env, capture_output=True, text=True,
+                              timeout=timeout)
+    except subprocess.TimeoutExpired:
+        return [f"code blocks timed out after {timeout:.0f}s"]
+    dt = time.perf_counter() - t0
+    if proc.returncode != 0:
+        tail = (proc.stderr or proc.stdout).strip().splitlines()[-12:]
+        return [f"code blocks failed (rc={proc.returncode}, {dt:.1f}s):\n"
+                + "\n".join("    " + l for l in tail)]
+    print(f"  {len(blocks)} python block(s) ran clean in {dt:.1f}s")
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*", default=tracked_docs(),
+                    help="markdown files to check (default: README.md + "
+                    "every .md under docs/ and data/)")
+    ap.add_argument("--timeout", type=float, default=600.0,
+                    help="per-file code-block execution timeout (s)")
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip code-block execution (fast link sweep)")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    for rel in args.files:
+        path = os.path.join(REPO, rel)
+        if not os.path.exists(path):
+            print(f"{rel}: MISSING")
+            failures += 1
+            continue
+        print(f"{rel}:")
+        with open(path) as f:
+            blocks, links = extract(f.read())
+        errors = check_links(path, links)
+        if not args.links_only:
+            errors += run_blocks(path, blocks, args.timeout)
+        for e in errors:
+            print(f"  FAIL: {e}")
+        if not errors:
+            print(f"  ok ({len(links)} links)")
+        failures += len(errors)
+    if failures:
+        print(f"\n{failures} docs failure(s)")
+        return 1
+    print("\nall docs checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

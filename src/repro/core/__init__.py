@@ -6,6 +6,7 @@ Layers:
   voltage          — joint (V_core, V_bram) constrained optimization + §V tables
   predictor        — online Markov-chain workload prediction
   workload         — bursty self-similar trace synthesis (BURSE-like)
+  traces           — trace-replay sources (CSV/NPZ loaders, resampling, mixtures)
   controller       — the §V runtime loop (predict → frequency → voltages → PLL)
   scenarios        — named workload scenario library + campaign sweeps
   pll              — PLL lock/energy overhead model (Eqs. 4-5)
@@ -13,7 +14,7 @@ Layers:
 """
 
 from repro.core import accelerators, characterization, controller, pll, \
-    predictor, scenarios, voltage, workload  # noqa: F401
+    predictor, scenarios, traces, voltage, workload  # noqa: F401
 
 __all__ = ["accelerators", "characterization", "controller", "pll",
-           "predictor", "scenarios", "voltage", "workload"]
+           "predictor", "scenarios", "traces", "voltage", "workload"]

@@ -483,7 +483,22 @@ _TRACE_COUNTS = {"tables": 0, "simulate": 0, "stream": 0}
 
 
 def fleet_trace_counts() -> Dict[str, int]:
-    """Times each fleet program has been (re)traced (for retrace tests)."""
+    """Process-lifetime (re)trace counters for the three fleet programs.
+
+    Returns ``{"tables", "simulate", "stream"}`` — how many times the
+    grid-sweep program (:func:`fleet_bin_tables`), the materializing scan
+    (:func:`simulate_fleet`), and the streaming chunk program
+    (:func:`simulate_fleet_stream`) have been traced by XLA.  The
+    **zero-retrace contract**: these programs are jit-keyed only on array
+    *shapes* plus the static ``ControllerConfig`` (normalized to be
+    technique-independent), never on platform constants or trace
+    contents.  Sweeping new accelerators, new seeds, new scenarios, or
+    *replayed* instead of synthetic traces must leave the counters
+    unchanged as long as the fleet shape ``[K]``, chunk size ``C``, and
+    config stay the same — tests and benchmarks snapshot this dict
+    before/after a sweep to catch accidental retraces (e.g.
+    ``tests/test_fleet.py::test_simulate_fleet_zero_retrace``).
+    """
     return dict(_TRACE_COUNTS)
 
 
@@ -760,15 +775,38 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
                           shard: bool = True) -> FleetSummary:
     """Streaming :func:`simulate_fleet`: O(K) memory, any trace length.
 
-    The trace is consumed in fixed ``[K, chunk_size]`` chunks, so the
-    compiled program is independent of the trace length — a million-step
-    campaign runs through the same jit cache entry as a 2k-step one — and
-    the Summary reductions ride the scan carry instead of ``[K, S]``
-    per-step arrays.  ``emit`` optionally names :class:`TraceResult`
-    per-step fields (e.g. ``("power", "f_rel")``) to materialize on the
-    host.  With more than one local device and ``shard=True`` the
-    flattened fleet axis is sharded across devices (cells are
-    independent, so the chunk program partitions with no collectives).
+    **Shape conventions.**  ``tables`` fields carry arbitrary leading
+    axes ``[..., M]`` (e.g. ``[P, T, M]`` from :func:`fleet_bin_tables`,
+    or ``[P, T, N, M]`` with a scenario axis); those leading axes flatten
+    into one fleet axis ``K`` — every (platform × technique × trace)
+    cell is an independent §V control loop.  ``traces`` is one shared
+    trace ``[S]`` or per-cell traces broadcastable to ``[..., S]``
+    (stride-0 numpy broadcasting: a shared million-step trace never
+    materializes ``K·S`` floats).  The device program, however, never
+    sees ``[K, S]``: the host loop feeds fixed ``[K, C]`` chunks
+    (``C = chunk_size``; the tail chunk is zero-padded under a validity
+    mask), so compiled shapes — and therefore the jit cache key — are
+    ``(K, C)`` + the static config, *independent of S*.  Replayed,
+    synthetic, short, and million-step traces of the same fleet shape
+    all reuse one cache entry (the zero-retrace contract;
+    :func:`fleet_trace_counts`\\ ``()["stream"]`` is the witness).
+
+    **Reductions and ``emit=``.**  The ``Summary`` reductions
+    (power/violation/backlog sums, offered work, predictor state) ride
+    the scan carry; per-chunk partial sums are accumulated on the host in
+    float64, so long-trace sums stay out of float32 range.  By default no
+    per-step field is materialized; ``emit`` names :class:`TraceResult`
+    per-step fields (e.g. ``emit=("power", "f_rel")``) to collect as
+    ``[..., S]`` host arrays in ``FleetSummary.emitted`` — opting back
+    into O(S) memory for exactly the requested fields.  Changing ``emit``
+    changes the compiled program (it is a static jit argument).
+
+    **Sharding.**  With more than one local device and ``shard=True`` the
+    flattened fleet axis ``K`` is sharded across devices via the
+    ``parallel.sharding`` fleet helpers (cells are independent, so the
+    chunk program partitions with no collectives); ``K`` is padded up to
+    a device-count multiple with replayed rows that are dropped from
+    every result.
 
     Matches the materialized path to float32 reduction accuracy (≤1e-5
     relative — see tests/test_fleet.py).

@@ -11,6 +11,16 @@ additionally carry an alive-node schedule that drives ``n_nodes``
 reductions through :func:`repro.runtime.elastic.shrink_mesh_plan`
 (failed nodes concentrate demand on the surviving usable grid).
 
+Beyond the synthetic shapes, **replayed traces** are first-class
+scenarios: :func:`register_replay` wraps any
+:class:`repro.core.traces.TraceSource` (CSV/NPZ cluster traces, the
+bundled ``data/traces`` samples, serving-measured workloads) as a named
+scenario, and the bundled Azure/Google-style samples auto-register as
+``replay_azure_vm_cpu`` / ``replay_google_cluster`` plus the composed
+``cloud_mix`` / ``cloud_splice`` shapes (replay blended/spliced with
+synthetic generators via :func:`repro.core.traces.mix` /
+:func:`~repro.core.traces.splice`).
+
 ``build_suite`` stacks any subset into one ``[N, S]`` array for the
 streaming fleet path, and :func:`run_campaign` sweeps
 platforms × techniques × scenarios in one compiled chunk program
@@ -29,6 +39,7 @@ import numpy as np
 
 from repro.core import characterization as char
 from repro.core import controller as ctl
+from repro.core import traces
 from repro.core import workload as wl
 from repro.runtime import elastic
 
@@ -186,10 +197,90 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
 
 
 def get_scenario(name: str) -> Scenario:
+    """Look up a registered scenario by name (KeyError lists what exists)."""
     if name not in SCENARIOS:
         raise KeyError(f"unknown scenario {name!r}; "
                        f"available: {sorted(SCENARIOS)}")
     return SCENARIOS[name]
+
+
+def register_scenario(scenario: Scenario,
+                      overwrite: bool = False) -> Scenario:
+    """Add a scenario to the named library.
+
+    Registered scenarios are swept by every campaign entry point
+    (:func:`build_suite` / :func:`run_campaign` / ``scripts/campaign.py``)
+    exactly like the built-in shapes.  Re-registering an existing name
+    raises unless ``overwrite=True``.
+    """
+    if scenario.name in SCENARIOS and not overwrite:
+        raise ValueError(f"scenario {scenario.name!r} already registered "
+                         "(pass overwrite=True to replace it)")
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def register_replay(source: traces.TraceSource, name: Optional[str] = None,
+                    tau_s: Optional[float] = None, method: str = "auto",
+                    jitter: str = "phase",
+                    description: Optional[str] = None,
+                    overwrite: bool = False) -> Scenario:
+    """Register a replayed :class:`~repro.core.traces.TraceSource` as a
+    first-class named scenario (default name ``replay_<source.name>``).
+
+    ``tau_s`` resamples the recording to that many seconds per control
+    step (``None`` replays one source sample per step); ``jitter="phase"``
+    starts each seeded build at a random offset into the looped series so
+    suites stay seed-diverse.  The builder tiles/pads to any requested
+    step count, so replays run through the same fixed-shape streaming
+    chunk program as synthetic scenarios — zero retraces.
+    """
+    name = name or f"replay_{source.name}"
+    if description is None:
+        description = (f"replayed {source.provenance or source.name} "
+                       f"({source.n_samples} samples @ "
+                       f"{source.interval_s:g}s"
+                       + (f", resampled to {tau_s:g}s/step"
+                          if tau_s is not None else "") + ")")
+    return register_scenario(
+        Scenario(name, description, source.builder(tau_s, method, jitter)),
+        overwrite=overwrite)
+
+
+def _register_bundled_replays() -> None:
+    """Auto-register the vendored ``data/traces`` samples (and two
+    composed replay × synthetic shapes) at import time.  A checkout
+    without the data directory simply gets the synthetic library, and a
+    file that fails to load (e.g. a user-dropped CSV without a
+    ``timestamp_s`` column) is warned about and skipped — importing
+    ``repro.core`` must never break on trace data."""
+    srcs: Dict[str, traces.TraceSource] = {}
+    for name, path in traces.list_bundled().items():
+        try:
+            srcs[name] = traces.load(path)
+        except Exception as e:  # noqa: BLE001 — skip, never break import
+            import warnings
+            warnings.warn(f"skipping unloadable bundled trace {path!r}: "
+                          f"{type(e).__name__}: {e}")
+    for src in srcs.values():
+        register_replay(src, overwrite=True)
+    azure = srcs.get("azure_vm_cpu")
+    if azure is not None:
+        register_scenario(Scenario(
+            "cloud_mix",
+            "replayed Azure-style day blended 60/40 with synthetic "
+            "flash crowds (traces.mix)",
+            traces.mix([azure, "flash_crowd"], [0.6, 0.4])),
+            overwrite=True)
+        register_scenario(Scenario(
+            "cloud_splice",
+            "replayed Azure-style day handing off to the paper's "
+            "bursty BURSE tail (traces.splice)",
+            traces.splice([azure, "burse"], [0.6, 0.4])),
+            overwrite=True)
+
+
+_register_bundled_replays()
 
 
 def build_suite(names: Optional[Sequence[str]] = None, n_steps: int = 2048,
@@ -216,9 +307,25 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
                  shard: bool = True,
                  **cfg_kwargs) -> Dict[str, object]:
     """Sweep platforms × techniques × scenarios through the streaming
-    fleet path: one masked grid sweep builds every table, one chunked
-    scan program runs every cell, and memory never scales with the trace
-    length.
+    fleet path in two compiled programs.
+
+    One masked grid sweep (``fleet_bin_tables``) builds every
+    (platform × technique) §V operating table as ``[P, T, M]`` arrays;
+    the scenario axis is then broadcast onto the tables (free — stride-0)
+    and the whole ``[P, T, N]`` fleet runs through
+    :func:`controller.simulate_fleet_stream` as one flattened ``[K, C]``
+    chunk program (``K = P·T·N``, ``C = chunk_size``).  Memory never
+    scales with ``n_steps``, and because the chunk program is keyed only
+    on ``(K, C)`` + the static config, a second same-shaped campaign —
+    new seeds, different scenario subset of the same size, *replayed*
+    instead of synthetic traces — reuses every jit cache entry
+    (``controller.fleet_trace_counts()`` is the retrace witness).
+
+    ``scenario_names`` may name any registered scenario, including
+    replays added via :func:`register_replay`; ``None`` sweeps the whole
+    library.  Each platform needs array ``params`` (every factory helper
+    attaches them); ``**cfg_kwargs`` feed ``ControllerConfig`` (e.g.
+    ``n_nodes=16``).
 
     Returns ``{"scenarios", "techniques", "n_steps", "table"}`` where
     ``table[platform][technique][scenario]`` holds power_gain /

@@ -104,7 +104,22 @@ def generate_periodic_trace(n_steps: int, period: int = 96,
 def estimate_hurst(x: np.ndarray, min_block: int = 8) -> float:
     """Variance-of-aggregates Hurst estimator (for tests).
 
-    For self-similar increments, Var[mean of blocks of size m] ~ m^(2H-2).
+    For self-similar increments, Var[mean of blocks of size m] ~ m^(2H-2):
+    the estimate is the log-log regression slope over block sizes
+    ``min_block, 2·min_block, 4·min_block, …`` up to ``len(x) // 8``.
+
+    Returns ``NaN`` — *no estimate*, rather than raising — when fewer
+    than two block sizes survive, which happens for
+
+    - **short traces**: the regression needs block sizes ``min_block``
+      and ``2·min_block`` to both fit ``len(x) // 8``, so any trace
+      shorter than ``16 * min_block`` samples (128 with the default
+      ``min_block=8``) yields NaN;
+    - **degenerate traces** (e.g. constant): zero block variance at
+      every size, so no point survives the log.
+
+    Callers must NaN-check before comparing against a target H (see
+    ``tests/test_workload.py::test_estimate_hurst_threshold_length``).
     """
     x = np.asarray(x, dtype=np.float64)
     n = x.size

@@ -197,9 +197,19 @@ def shard_fleet(tree: Any, rules: ShardingRules,
                 axis: str = "fleet") -> Any:
     """Place every leaf's leading axis on the fleet mesh axis.
 
+    ``tree`` is any pytree whose array leaves lead with the flattened
+    fleet axis ``K`` — the controller's ``BinTables`` (``[K, M]``
+    fields), predictor state, backlog vectors, and ``[K, C]`` trace
+    chunks all shard through this one helper, so every input to the
+    streaming chunk program lands on devices with a *consistent* layout
+    and GSPMD partitions the program without resharding or collectives
+    (fleet cells are independent).
+
     Leaves whose leading dim doesn't divide the device count are
-    replicated (the rules drop non-divisible entries); scalars pass
-    through untouched.
+    replicated (the rules drop non-divisible entries — callers that want
+    real sharding pad ``K`` first, as ``simulate_fleet_stream`` does);
+    scalars pass through untouched.  With a mesh-less ``rules`` the call
+    is the identity, so single-device code paths need no branching.
     """
     if rules.mesh is None:
         return tree

@@ -73,13 +73,15 @@ class DvfsServingSimulator:
                          batch_size: int = 64,
                          mean_new_tokens: int = 64,
                          seed: int = 0,
-                         closed_loop: bool = True) -> Dict[str, object]:
+                         closed_loop: bool = True,
+                         workload_signal: str = "occupancy"
+                         ) -> Dict[str, object]:
         """Drive a ContinuousBatcher from a Poisson request process with
         the §V controller *in the loop*.
 
         Each control interval τ (``steps_per_tau`` decode steps) the
-        measured occupancy feeds the Markov predictor, and the selected
-        operating point's delivered relative throughput —
+        measured workload signal feeds the Markov predictor, and the
+        selected operating point's delivered relative throughput —
         ``f_rel · n_active/n_nodes``, so node-gating techniques
         (power_gating, hybrid) are throttled by their powered-off chips
         too — is fed **back** into
@@ -88,6 +90,27 @@ class DvfsServingSimulator:
         the DVFS decision.  ``closed_loop=False`` reproduces the old
         open-loop behavior (batcher always at nominal throughput) while
         still integrating modeled power.
+
+        ``workload_signal`` selects what the controller bins each τ —
+        the request-driven alternative to feeding it synthetic fractions:
+
+          ``"occupancy"`` — mean busy-slot fraction (the default, and the
+              paper's workload-counter reading);
+          ``"demand"``    — occupancy **plus queued requests per slot**
+              (clipped to 1): the batcher-derived demand signal, which
+              keeps provisioning up while a burst's backlog drains even
+              after arrivals subside;
+          ``"arrival"``   — the synthetic offered fraction (tokens
+              submitted this τ / peak decode tokens), i.e. the open-loop
+              signal the ROADMAP asks to retire — kept as the baseline
+              mixtures are compared against.
+
+        The per-τ signal is returned as ``workload_tau`` (alongside
+        ``arrival_fraction_tau`` for comparison) and can be wrapped into
+        a replayable workload source with
+        :meth:`workload_trace_source` /
+        :func:`repro.core.traces.from_serving`, so measured serving
+        behavior can drive fleet campaigns.
 
         When the arrival trace ends, the batcher is *drained* at the
         final operating point (bounded by the remaining tokens at that
@@ -98,9 +121,12 @@ class DvfsServingSimulator:
 
         Returns the :class:`~repro.core.controller.Summary` (including
         measured latency p50/p99 in decode steps) plus per-interval
-        occupancy/frequency/power arrays, τ weights, and token/drain
-        accounting.
+        occupancy/frequency/power/workload arrays, τ weights, and
+        token/drain accounting.
         """
+        if workload_signal not in ("occupancy", "demand", "arrival"):
+            raise ValueError(f"unknown workload_signal {workload_signal!r};"
+                             " choose 'occupancy', 'demand', or 'arrival'")
         rng = np.random.default_rng(seed)
         batcher = ContinuousBatcher(batch_size=batch_size)
         tables = ctl.build_bin_tables(self.platform, self.cfg)
@@ -114,8 +140,10 @@ class DvfsServingSimulator:
         predicted = int(pred_mod.predict(pcfg, mstate))
         f_now = float(throughput[predicted]) if closed_loop else 1.0
         occ_tau, f_tau, thr_tau, power_tau, viol_tau = [], [], [], [], []
+        workload_tau, arrival_tau = [], []
         tau_weights = []  # 1.0 per full τ; < 1 for the trailing partial
         queued, interval_occ, interval_queue = [], [], []
+        interval_tokens = [0]  # tokens submitted during the current τ
         n_ctrl_tau = 0    # τ intervals where the controller re-selected
 
         def step_once():
@@ -134,7 +162,14 @@ class DvfsServingSimulator:
             # is busy slots plus queued requests per slot, not occupancy
             # alone (a saturated batch with a deep queue is a miss).
             backlog_slots = float(np.mean(interval_queue)) / batch_size
+            arrival_frac = min(interval_tokens[0]
+                               / (len(interval_occ) * batch_size), 1.0)
+            signal = {"occupancy": occ,
+                      "demand": min(occ + backlog_slots, 1.0),
+                      "arrival": arrival_frac}[workload_signal]
             occ_tau.append(occ)
+            workload_tau.append(signal)
+            arrival_tau.append(arrival_frac)
             f_tau.append(float(f_rel[predicted]) if closed_loop else 1.0)
             thr_tau.append(f_now)
             power_tau.append(float(power[predicted]))
@@ -143,9 +178,10 @@ class DvfsServingSimulator:
             tau_weights.append(len(interval_occ) / self.steps_per_tau)
             interval_occ.clear()
             interval_queue.clear()
+            interval_tokens[0] = 0
             if update_controller:
                 n_ctrl_tau += 1
-                actual = int(pred_mod.workload_to_bin(jnp.asarray(occ),
+                actual = int(pred_mod.workload_to_bin(jnp.asarray(signal),
                                                       pcfg.n_bins))
                 mstate = pred_mod.observe(pcfg, mstate, jnp.asarray(actual),
                                           jnp.asarray(predicted))
@@ -161,6 +197,7 @@ class DvfsServingSimulator:
                 batcher.submit(Request(rid=rid, prompt_len=128,
                                        max_new_tokens=n_tok))
                 offered_tokens += n_tok
+                interval_tokens[0] += n_tok
                 rid += 1
             step_once()
             if len(interval_occ) == self.steps_per_tau:
@@ -217,6 +254,9 @@ class DvfsServingSimulator:
         )
         return {"summary": summary,
                 "occupancy_tau": np.asarray(occ_tau),
+                "workload_tau": np.asarray(workload_tau),
+                "arrival_fraction_tau": np.asarray(arrival_tau),
+                "workload_signal": workload_signal,
                 "f_rel_tau": np.asarray(f_tau),
                 "throughput_tau": np.asarray(thr_tau),
                 "power_tau": np.asarray(power_tau),
@@ -227,6 +267,23 @@ class DvfsServingSimulator:
                 "offered_tokens": offered_tokens,
                 "served_tokens": served_tokens,
                 "drain_steps": drain_steps}
+
+    def workload_trace_source(self, result: Dict[str, object],
+                              name: str = "request_driven"):
+        """Wrap a :meth:`run_request_load` result's measured per-τ
+        workload as a replayable :class:`repro.core.traces.TraceSource`.
+
+        The source's sampling interval is the controller's τ
+        (``cfg.tau`` seconds), so it resamples/replays/mixes like any
+        recorded cluster trace — e.g. register it with
+        ``scenarios.register_replay`` or blend it into a campaign with
+        ``traces.mix([source, "diurnal"], [0.5, 0.5])``.  This is the
+        request-driven mixture path: fleet campaigns driven by measured
+        batcher behavior instead of synthetic fractions.
+        """
+        from repro.core import traces
+        return traces.from_serving(result, name=name,
+                                   interval_s=self.cfg.tau)
 
 
 def compare_techniques(terms: RooflineTerms, trace: np.ndarray,

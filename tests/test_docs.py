@@ -1,0 +1,62 @@
+"""Docs stay true: ARCHITECTURE exists, links resolve, code blocks run.
+
+Mirrors the CI ``docs`` job (scripts/check_docs.py) so doc drift fails
+tier-1 locally, not just on GitHub.
+"""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECKER = os.path.join(REPO, "scripts", "check_docs.py")
+
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+import check_docs  # noqa: E402
+
+
+def test_architecture_doc_exists_with_module_map():
+    path = os.path.join(REPO, "docs", "ARCHITECTURE.md")
+    assert os.path.exists(path)
+    text = open(path).read()
+    # the module map and the four design layers are present
+    for needle in ("Module map", "PlatformParams", "simulate_fleet_stream",
+                   "zero-retrace", "traces.py", "request-driven"):
+        assert needle in text, needle
+
+
+def test_extract_blocks_and_links():
+    md = ("intro [ok](README.md) and [ext](https://x.y)\n"
+          "```python\nx = 1\n```\ntext\n```bash\nls\n```\n"
+          "```python\nassert x == 1\n```\n")
+    blocks, links = check_docs.extract(md)
+    assert blocks == ["x = 1", "assert x == 1"]
+    assert links == ["README.md", "https://x.y"]
+
+
+def test_link_checker_flags_missing_targets(tmp_path):
+    md = tmp_path / "doc.md"
+    md.write_text("[good](real.md) [bad](missing.md) [anchor](#sec)")
+    (tmp_path / "real.md").write_text("x")
+    errors = check_docs.check_links(str(md), ["real.md", "missing.md",
+                                              "#sec", "https://ok"])
+    assert len(errors) == 1 and "missing.md" in errors[0]
+
+
+def test_tracked_docs_pass_link_check():
+    proc = subprocess.run([sys.executable, CHECKER, "--links-only"],
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_tracked_docs_code_blocks_run():
+    """Execute every python code block in README/docs.
+
+    Deliberately mirrors the CI ``docs`` job: environments that only run
+    the tier-1 suite (local dev, downstream forks) still enforce
+    runnable docs; the standalone job exists so docs failures stay
+    legible in CI.  Cost is a few seconds — doc examples are written to
+    be cheap (small n_steps / chunk sizes)."""
+    proc = subprocess.run([sys.executable, CHECKER], capture_output=True,
+                          text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-2000:]

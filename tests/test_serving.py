@@ -251,3 +251,67 @@ def test_closed_loop_occupancy_responds_to_throttle():
         lam, batch_size=32, mean_new_tokens=8, closed_loop=False)
     np.testing.assert_allclose(open_loop["occupancy_tau"],
                                nom["occupancy_tau"])
+
+
+def test_request_driven_workload_diverges_from_synthetic_under_bursts():
+    """The occupancy-derived workload mixture (workload_signal='demand')
+    measurably diverges from the synthetic arrival fraction when arrivals
+    are bursty: the batcher's queue carries the burst long after arrivals
+    subside, while the synthetic fraction drops immediately."""
+    bursty = np.concatenate([np.full(160, 0.3), np.full(160, 6.0),
+                             np.full(160, 0.3)])
+    out = _closed_loop_sim("proposed").run_request_load(
+        bursty, batch_size=16, mean_new_tokens=16,
+        workload_signal="demand")
+    w = out["workload_tau"]
+    a = out["arrival_fraction_tau"]
+    assert out["workload_signal"] == "demand"
+    assert w.shape == a.shape == out["occupancy_tau"].shape
+    assert (w >= 0).all() and (w <= 1).all()
+    assert np.abs(w - a).mean() > 0.1       # request-driven ≠ synthetic
+    # after the burst window, arrivals are light but the measured demand
+    # stays elevated while the backlog drains
+    assert w[-5:].mean() > a[-5:].mean()
+
+    # 'arrival' reproduces the synthetic fraction exactly (the open-loop
+    # baseline the mixtures are compared against)...
+    arr = _closed_loop_sim("proposed").run_request_load(
+        bursty, batch_size=16, mean_new_tokens=16,
+        workload_signal="arrival")
+    np.testing.assert_array_equal(arr["workload_tau"],
+                                  arr["arrival_fraction_tau"])
+    # ...and the default signal is the plain occupancy reading (old
+    # behavior unchanged)
+    occ = _closed_loop_sim("proposed").run_request_load(
+        bursty, batch_size=16, mean_new_tokens=16)
+    np.testing.assert_array_equal(occ["workload_tau"],
+                                  occ["occupancy_tau"])
+    with pytest.raises(ValueError, match="workload_signal"):
+        _closed_loop_sim("proposed").run_request_load(
+            bursty, workload_signal="tokens")
+
+
+def test_workload_trace_source_closes_the_loop():
+    """Measured serving workload wraps into a replayable TraceSource that
+    registers and sweeps like any recorded trace (request-driven mixture
+    path)."""
+    from repro.core import scenarios as scn
+    from repro.core import traces
+    sim = _closed_loop_sim("proposed")
+    lam = np.concatenate([np.full(96, 0.5), np.full(96, 4.0)])
+    out = sim.run_request_load(lam, batch_size=16, mean_new_tokens=8,
+                               workload_signal="demand")
+    src = sim.workload_trace_source(out, name="srv")
+    np.testing.assert_allclose(src.utilization, out["workload_tau"],
+                               atol=1e-7)
+    assert src.interval_s == sim.cfg.tau
+    mixed = traces.mix([src, "diurnal"], [0.5, 0.5])
+    t = mixed(256, np.random.default_rng(0))
+    assert t.shape == (256,) and np.isfinite(t).all()
+    sc = scn.register_replay(src, name="replay_srv_test", overwrite=True)
+    try:
+        got = sc.trace(64, seed=0)
+        assert got.shape == (64,)
+        assert (got >= 0).all() and (got <= 1).all()
+    finally:
+        del scn.SCENARIOS["replay_srv_test"]

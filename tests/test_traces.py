@@ -1,0 +1,258 @@
+"""Trace-replay subsystem tests (core/traces.py tentpole)."""
+
+import numpy as np
+import pytest
+
+from repro.core import controller as ctl
+from repro.core import scenarios as scn
+from repro.core import traces as tr
+from repro.core import workload as wl
+from repro.core.accelerators import ACCELERATORS
+
+
+# ---------------------------------------------------------------------------
+# Loaders + normalization
+# ---------------------------------------------------------------------------
+
+
+def test_bundled_traces_load_and_normalize():
+    srcs = tr.bundled_sources()
+    assert {"azure_vm_cpu", "google_cluster"} <= set(srcs)
+    az = srcs["azure_vm_cpu"]
+    assert az.interval_s == 300.0           # inferred from timestamp_s
+    assert az.n_samples == 288
+    assert (az.utilization >= 0).all() and (az.utilization <= 1).all()
+    assert az.utilization.max() < 0.9       # percent → fraction, not /peak
+    gg = srcs["google_cluster"]
+    assert gg.interval_s == 150.0           # stored scalar in the npz
+    assert 0.01 < gg.utilization.mean() < 0.99
+
+
+def test_loader_round_trip_is_deterministic(tmp_path):
+    """CSV → TraceSource → NPZ → TraceSource preserves the normalized
+    series and interval exactly, and reloads bit-identically."""
+    az = tr.load_bundled("azure_vm_cpu")
+    out = tmp_path / "rt.npz"
+    tr.save_npz(az, str(out))
+    back = tr.load_npz(str(out), name=az.name)
+    np.testing.assert_array_equal(back.utilization, az.utilization)
+    assert back.interval_s == az.interval_s
+    again = tr.load(str(out))
+    np.testing.assert_array_equal(again.utilization, back.utilization)
+
+
+def test_loader_errors():
+    with pytest.raises(KeyError, match="no bundled trace"):
+        tr.load_bundled("nope")
+    with pytest.raises(ValueError, match="unsupported trace file"):
+        tr.load("trace.parquet")
+    paths = tr.list_bundled()
+    with pytest.raises(ValueError, match="no column"):
+        tr.load_csv(paths["azure_vm_cpu"], column="nope")
+    with pytest.raises(ValueError, match="no array"):
+        tr.load_npz(paths["google_cluster"], key="nope")
+
+
+def test_normalize_modes():
+    pct = np.asarray([0.0, 50.0, 100.0])
+    s = tr.TraceSource("x", pct, 1.0, normalize="percent")
+    np.testing.assert_allclose(s.utilization, [0.0, 0.5, 1.0])
+    s = tr.TraceSource("x", np.asarray([1.0, 2.0, 400.0]), 1.0,
+                       normalize="auto")   # >100 → peak-relative
+    np.testing.assert_allclose(s.utilization, [1 / 400, 2 / 400, 1.0])
+    with pytest.raises(ValueError, match="non-finite"):
+        tr.TraceSource("x", np.asarray([0.1, np.nan]), 1.0)
+    with pytest.raises(ValueError, match="interval_s"):
+        tr.TraceSource("x", pct, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Resampling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dst", [45.0, 150.0, 300.0, 599.0, 1800.0])
+def test_mean_resampling_conserves_total_demand(dst):
+    """Σ w·τ is invariant under 'mean' resampling for any interval ratio
+    (exact window integrals of the piecewise-constant source)."""
+    w = tr.load_bundled("azure_vm_cpu").utilization
+    rs = tr.resample(w, 300.0, dst, "mean")
+    tau_eff = w.size * 300.0 / rs.size
+    np.testing.assert_allclose(float(rs.sum() * tau_eff),
+                               float(w.sum() * 300.0), rtol=1e-5)
+
+
+def test_peak_resampling_preserves_bursts():
+    w = np.zeros(256, np.float32)
+    w[100] = 1.0                            # a single one-sample burst
+    pk = tr.resample(w, 1.0, 32.0, "peak")
+    mn = tr.resample(w, 1.0, 32.0, "mean")
+    assert pk.max() == 1.0                  # burst survives coarsening
+    assert mn.max() < 0.1                   # window-average dilutes it
+    assert (pk >= mn - 1e-6).all()
+
+
+def test_interp_upsampling_smooth_and_in_range():
+    w = tr.load_bundled("google_cluster").utilization
+    up = tr.resample(w, 150.0, 30.0, "interp")
+    assert up.size == w.size * 5
+    assert (up >= 0).all() and (up <= 1).all()
+    # midpoint samples agree with the source at matching times
+    np.testing.assert_allclose(up[2::5], w, atol=1e-6)
+
+
+def test_resample_validation():
+    w = np.ones(8, np.float32)
+    with pytest.raises(ValueError, match="method"):
+        tr.resample(w, 1.0, 2.0, "cubic")
+    with pytest.raises(ValueError, match="positive"):
+        tr.resample(w, 0.0, 2.0)
+    np.testing.assert_array_equal(tr.resample(w, 1.0, 1.0), w)
+
+
+# ---------------------------------------------------------------------------
+# Replay (pad/tile) + seeded builders
+# ---------------------------------------------------------------------------
+
+
+def test_replay_tiles_and_holds():
+    az = tr.load_bundled("azure_vm_cpu")
+    n = az.n_samples
+    looped = az.replay(2 * n + 10, offset=3)
+    np.testing.assert_array_equal(looped[: n - 3], az.utilization[3:])
+    np.testing.assert_array_equal(looped[n - 3: 2 * n - 3], az.utilization)
+    held = az.replay(n + 50, loop=False)
+    np.testing.assert_array_equal(held[:n], az.utilization)
+    assert (held[n:] == az.utilization[-1]).all()
+    with pytest.raises(ValueError, match="n_steps"):
+        az.replay(0)
+
+
+def test_builder_phase_jitter_is_seed_deterministic():
+    az = tr.load_bundled("azure_vm_cpu")
+    fn = az.builder()
+    a1 = fn(512, np.random.default_rng(1))
+    a2 = fn(512, np.random.default_rng(1))
+    b = fn(512, np.random.default_rng(2))
+    np.testing.assert_array_equal(a1, a2)
+    assert not np.array_equal(a1, b)        # different phase offsets
+    fixed = az.builder(jitter="none")
+    np.testing.assert_array_equal(fixed(64, np.random.default_rng(5)),
+                                  az.utilization[:64])
+    with pytest.raises(ValueError, match="jitter"):
+        az.builder(jitter="amplitude")
+
+
+# ---------------------------------------------------------------------------
+# Composition: mix / splice
+# ---------------------------------------------------------------------------
+
+
+def test_mix_blends_weighted_components():
+    lo = lambda n, rng: np.full(n, 0.2, np.float32)
+    hi = lambda n, rng: np.full(n, 0.8, np.float32)
+    out = tr.mix([lo, hi], [1.0, 3.0])(128, np.random.default_rng(0))
+    np.testing.assert_allclose(out, 0.25 * 0.2 + 0.75 * 0.8, atol=1e-6)
+    # component kinds: TraceSource + scenario name + callable; the blend
+    # stays a valid fraction trace even though some synthetic builders
+    # overshoot [0, 1] before Scenario.trace's clip (regression: the
+    # name branch used to resolve to the raw unclipped builder)
+    az = tr.load_bundled("azure_vm_cpu")
+    blend = tr.mix([az, "flash_crowd", lo])(256, np.random.default_rng(3))
+    assert blend.shape == (256,)
+    assert np.isfinite(blend).all()
+    assert (blend >= 0.0).all() and (blend <= 1.0).all()
+    spliced = tr.splice(["ramp", "decay"])(256, np.random.default_rng(3))
+    assert (spliced >= 0.0).all() and (spliced <= 1.0).all()
+    with pytest.raises(ValueError, match="at least one"):
+        tr.mix([])
+    with pytest.raises(ValueError, match="weights"):
+        tr.mix([lo, hi], [1.0])
+    with pytest.raises(TypeError, match="component"):
+        tr.as_trace_fn(42)
+
+
+def test_splice_concatenates_segments():
+    lo = lambda n, rng: np.full(n, 0.1, np.float32)
+    hi = lambda n, rng: np.full(n, 0.9, np.float32)
+    out = tr.splice([lo, hi], [0.75, 0.25])(200, np.random.default_rng(0))
+    assert out.shape == (200,)
+    np.testing.assert_allclose(out[:150], 0.1)
+    np.testing.assert_allclose(out[150:], 0.9)
+    # deterministic per seed with stochastic components
+    fn = tr.splice([tr.load_bundled("google_cluster"), "burse"])
+    np.testing.assert_array_equal(fn(128, np.random.default_rng(7)),
+                                  fn(128, np.random.default_rng(7)))
+
+
+# ---------------------------------------------------------------------------
+# Replay ≡ synthetic through the streaming fleet path
+# ---------------------------------------------------------------------------
+
+
+def _single_cell_tables(cfg):
+    from repro.core import characterization as char
+    params = char.stack_platform_params(
+        [ctl.fpga_platform(ACCELERATORS["tabla"]).params])
+    return params, ctl.fleet_bin_tables(params, cfg, ("proposed",))
+
+
+def test_replay_matches_synthetic_through_fleet_stream():
+    """A synthetic trace wrapped as a TraceSource and replayed at the
+    native interval is bit-identical, so the streamed summaries match the
+    direct synthetic run exactly."""
+    cfg = ctl.ControllerConfig()
+    _, tables = _single_cell_tables(cfg)
+    synth = wl.generate_trace(wl.WorkloadConfig(n_steps=400, seed=11))
+    src = tr.TraceSource("synth", synth, interval_s=cfg.tau,
+                         normalize="unit")
+    replayed = src.replay(400)
+    np.testing.assert_array_equal(replayed, synth.astype(np.float32))
+    a = ctl.simulate_fleet_stream(tables, synth, cfg, chunk_size=128)
+    b = ctl.simulate_fleet_stream(tables, replayed, cfg, chunk_size=128)
+    np.testing.assert_allclose(a.mean_power_w, b.mean_power_w, rtol=1e-7)
+    np.testing.assert_array_equal(a.qos_violation_rate,
+                                  b.qos_violation_rate)
+    np.testing.assert_array_equal(a.mispredictions, b.mispredictions)
+
+
+def test_bundled_replay_through_campaign_zero_retrace():
+    """Acceptance: bundled sample traces replay end-to-end through
+    run_campaign's streaming path reusing the compiled programs of a
+    same-shaped synthetic sweep — fleet_trace_counts()['stream'] (and the
+    other counters) unchanged across the whole replay sweep."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    kw = dict(techniques=("proposed", "hybrid"), n_steps=160,
+              chunk_size=64)
+    scn.run_campaign(platforms, scenario_names=("burse", "diurnal"), **kw)
+    before = ctl.fleet_trace_counts()
+    out = scn.run_campaign(
+        platforms,
+        scenario_names=("replay_azure_vm_cpu", "replay_google_cluster"),
+        **kw)
+    assert ctl.fleet_trace_counts() == before
+    for scen in ("replay_azure_vm_cpu", "replay_google_cluster"):
+        cell = out["table"][platforms[0].name]["proposed"][scen]
+        assert cell["power_gain"] > 1.0
+        assert 0.0 <= cell["qos_violation_rate"] <= 1.0
+        assert 0.0 < cell["served_fraction"] <= 1.0 + 1e-6
+
+
+def test_composed_scenarios_registered_and_sane():
+    for name in ("replay_azure_vm_cpu", "replay_google_cluster",
+                 "cloud_mix", "cloud_splice"):
+        t = scn.get_scenario(name).trace(384, seed=4)
+        assert t.shape == (384,)
+        assert (t >= 0).all() and (t <= 1).all()
+        assert t.std() > 1e-3, name
+    with pytest.raises(ValueError, match="already registered"):
+        scn.register_scenario(scn.SCENARIOS["cloud_mix"])
+
+
+def test_from_serving_requires_workload_tau():
+    with pytest.raises(ValueError, match="workload_tau"):
+        tr.from_serving({})
+    src = tr.from_serving({"workload_tau": np.asarray([0.1, 0.5, 0.9])},
+                          interval_s=2.0)
+    assert src.n_samples == 3 and src.interval_s == 2.0
+    assert src.provenance.startswith("serving:")

@@ -68,6 +68,18 @@ def test_estimate_hurst_short_trace_is_nan_not_crash():
     assert np.isfinite(wl.estimate_hurst(x))
 
 
+@pytest.mark.parametrize("min_block", [4, 8, 16])
+def test_estimate_hurst_threshold_length(min_block):
+    """The documented NaN threshold is exact: the regression needs block
+    sizes min_block and 2·min_block to fit n // 8, so n = 16·min_block is
+    the shortest non-degenerate trace with an estimate and
+    n = 16·min_block − 1 has none."""
+    n = 16 * min_block
+    x = np.random.default_rng(3).standard_normal(n)
+    assert np.isnan(wl.estimate_hurst(x[: n - 1], min_block=min_block))
+    assert np.isfinite(wl.estimate_hurst(x, min_block=min_block))
+
+
 def test_aggregation_smooths():
     fine = wl.generate_trace(wl.WorkloadConfig(n_steps=1024, aggregate=1,
                                                seed=0))
