@@ -287,6 +287,46 @@ def bench_campaign():
     return rows
 
 
+def bench_failure():
+    """Faithful node-failure campaign through the streaming path.
+
+    The node_failure scenario's per-step usable-nodes schedule rides the
+    same [K, C] chunks as the workload: the controller clamps
+    provisioning to the survivors, dead nodes draw 0 W, and the headline
+    ``gain`` is priced against the *available* fleet
+    (``vs_cfg`` keeps the configured-fleet comparison).  After a healthy
+    same-shaped warm-up sweep the availability-bearing sweep must add no
+    compiled chunk programs (``failure/stream_reuse`` should report 0).
+    """
+    from repro.core import scenarios as scn
+    platforms = [ctl.fpga_platform(ACCELERATORS[n])
+                 for n in ("tabla", "stripes")]
+    techniques = ("proposed", "power_gating", "hybrid")
+    chunk = max(min(N_STEPS, 512), 1)
+    kw = dict(techniques=techniques, n_steps=N_STEPS, chunk_size=chunk)
+    scn.run_campaign(platforms, scenario_names=("burse", "diurnal"), **kw)
+    before = ctl.fleet_trace_counts()["stream"]
+    t0 = time.perf_counter()
+    out = scn.run_campaign(platforms,
+                           scenario_names=("burse", "node_failure"), **kw)
+    dt = time.perf_counter() - t0
+    delta = ctl.fleet_trace_counts()["stream"] - before
+    cells = len(platforms) * len(techniques) * 2
+    rows = []
+    for tech in techniques:
+        cell = [out["table"][p.name][tech]["node_failure"]
+                for p in platforms]
+        rows.append((f"failure/node_failure/{tech}",
+                     dt / cells / N_STEPS * 1e6,
+                     f"gain={np.mean([c['power_gain'] for c in cell]):.2f}x"
+                     f";vs_cfg={np.mean([c['power_gain_vs_configured'] for c in cell]):.2f}x"
+                     f";avail={np.mean([c['mean_avail_nodes'] for c in cell]):.2f}"
+                     f";qos_viol={np.mean([c['qos_violation_rate'] for c in cell]):.3f}"))
+    rows.append(("failure/stream_reuse", 0.0,
+                 f"retraces={delta};chunk={chunk}"))
+    return rows
+
+
 def bench_replay():
     """Bundled-trace replay through the streaming campaign path.
 
@@ -386,7 +426,7 @@ def bench_tpu_serving():
 BENCHES = [bench_fleet, bench_table2, bench_fig4_workload_sweep,
            bench_fig5_alpha_sweep, bench_fig6_beta_sweep, bench_fig10_trace,
            bench_fig12_per_accelerator_traces, bench_predictor,
-           bench_hybrid, bench_campaign, bench_replay,
+           bench_hybrid, bench_campaign, bench_failure, bench_replay,
            bench_voltage_optimizer, bench_tpu_serving]
 
 

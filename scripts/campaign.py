@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 from repro.core import controller as ctl
@@ -79,6 +80,17 @@ def main(argv=None) -> int:
                     help="print the registered scenario library and exit")
     args = ap.parse_args(argv)
 
+    # Validate trace flags up front — one-line errors beat the deep
+    # loader/resampler tracebacks they would otherwise become.
+    if args.trace and not os.path.exists(args.trace):
+        raise SystemExit(f"error: --trace file not found: {args.trace}")
+    if args.trace_interval is not None and args.trace_interval <= 0:
+        raise SystemExit("error: --trace-interval must be positive "
+                         f"(got {args.trace_interval:g})")
+    if args.trace_tau is not None and args.trace_tau <= 0:
+        raise SystemExit("error: --trace-tau must be positive "
+                         f"(got {args.trace_tau:g})")
+
     # Register --trace before --list-scenarios so the listing shows (and
     # validates) the trace the user just pointed at.
     registered = None
@@ -113,6 +125,12 @@ def main(argv=None) -> int:
 
     for scen in out["scenarios"]:
         print(f"== scenario: {scen} ==")
+        avail = out["table"][platforms[0].name][techniques[0]][scen][
+            "mean_avail_nodes"]
+        if avail < args.n_nodes - 1e-9:
+            print(f"   (mean usable nodes {avail:.2f}/{args.n_nodes}; "
+                  "power_gain is vs the available fleet — "
+                  "power_gain_vs_configured is in the JSON)")
         print(f"{'platform':16s} " + " ".join(f"{t:>14s}" for t in techniques))
         for plat in platforms:
             row = out["table"][plat.name]

@@ -184,7 +184,17 @@ class ControllerConfig:
 
 
 class BinTables(NamedTuple):
-    """Per-workload-bin operating points — the §V synthesis-time table."""
+    """Per-workload-bin operating points — the §V synthesis-time table.
+
+    ``power`` is the fleet total at the *configured* ``n_nodes`` (the
+    synthesis-time assumption).  The per-node decomposition
+    ``node_power``/``gated_power`` lets the runtime loop re-price a step
+    whose fleet lost nodes: with ``a`` nodes available the step draws
+    ``min(n_active, a)·node_power + max(a - n_active, 0)·gated_power`` —
+    dead nodes contribute nothing, and at full availability the
+    decomposition reproduces ``power`` exactly
+    (``power = n_active·node_power + (n_nodes - n_active)·gated_power``).
+    """
 
     capacity: Array   # [M] relative throughput delivered at this bin's point
     power: Array      # [M] platform power (watts) at this bin's point
@@ -192,6 +202,8 @@ class BinTables(NamedTuple):
     v_bram: Array     # [M]
     f_rel: Array      # [M]
     n_active: Array   # [M] powered-on nodes at this bin's point
+    node_power: Array   # [M] watts per powered-on node (incl. its PLLs)
+    gated_power: Array  # [M] residual watts per gated-but-alive node
 
 
 def _grids_for(technique: str, v_step: float) -> volt_mod.VoltageGrids:
@@ -252,7 +264,9 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
                          v_core=jnp.full(m, char.V_CORE_NOM),
                          v_bram=jnp.full(m, char.V_BRAM_NOM),
                          f_rel=jnp.ones(m),
-                         n_active=jnp.full(m, float(cfg.n_nodes)))
+                         n_active=jnp.full(m, float(cfg.n_nodes)),
+                         node_power=jnp.full(m, node_w + pll_watts),
+                         gated_power=jnp.zeros(m))
 
     if cfg.technique == "power_gating":
         # Conventional baseline (paper §III): scale the number of *active*
@@ -269,7 +283,10 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
                          v_core=jnp.full(m, char.V_CORE_NOM),
                          v_bram=jnp.full(m, char.V_BRAM_NOM),
                          f_rel=jnp.ones(m),
-                         n_active=jnp.asarray(n_active, jnp.float32))
+                         n_active=jnp.asarray(n_active, jnp.float32),
+                         node_power=jnp.full(m, node_w + pll_watts),
+                         gated_power=jnp.full(
+                             m, cfg.gated_power_frac * node_w))
 
     if cfg.technique == "hybrid":
         # Joint node-scaling + DVFS: sweep how many nodes stay powered on
@@ -295,7 +312,9 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
             power=total[gi, cols],
             v_core=pts.v_core.reshape(g_n, m)[gi, cols],
             v_bram=pts.v_bram.reshape(g_n, m)[gi, cols],
-            f_rel=f_sel, n_active=gears[gi])
+            f_rel=f_sel, n_active=gears[gi],
+            node_power=node_w[gi, cols] + pll_watts,
+            gated_power=jnp.full(m, cfg.gated_power_frac * nom_w))
 
     # DVFS techniques: joint / single-rail / frequency-only.
     levels = volt_mod.bin_frequency_levels(m, cfg.margin, cfg.f_floor)
@@ -307,7 +326,9 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
     power = (node_w + pll_watts) * cfg.n_nodes
     return BinTables(capacity=cap, power=power, v_core=pts.v_core,
                      v_bram=pts.v_bram, f_rel=levels,
-                     n_active=jnp.full(m, float(cfg.n_nodes)))
+                     n_active=jnp.full(m, float(cfg.n_nodes)),
+                     node_power=node_w + pll_watts,
+                     gated_power=jnp.zeros(m))
 
 
 # ---------------------------------------------------------------------------
@@ -334,6 +355,9 @@ class TraceResult(NamedTuple):
 class Summary:
     technique: str
     mean_power_w: float
+    #: Nominal baseline of the *available* fleet: mean usable nodes ×
+    #: per-node nominal watts.  Equals the configured-fleet baseline on
+    #: healthy runs; strictly below it once nodes fail.
     nominal_power_w: float
     power_gain: float            # nominal / mean — the paper's headline metric
     qos_violation_rate: float
@@ -344,6 +368,14 @@ class Summary:
     #: open-loop modeled simulations, which have no per-request timeline).
     latency_p50: float = float("nan")
     latency_p99: float = float("nan")
+    #: Configured-fleet baseline (``n_nodes`` × per-node nominal watts)
+    #: and the gain against it.  On an availability-aware run the
+    #: available-fleet ``power_gain`` is the honest efficiency metric —
+    #: dead nodes draw nothing, so crediting the run with their nominal
+    #: watts would overstate gains; ``power_gain_vs_configured`` keeps
+    #: the fleet-as-provisioned comparison for capacity accounting.
+    nominal_power_configured_w: float = float("nan")
+    power_gain_vs_configured: float = float("nan")
 
 
 class _StepOut(NamedTuple):
@@ -361,25 +393,51 @@ class _StepOut(NamedTuple):
     n_active: Array
 
 
+def availability_point(tables: BinTables, selected,
+                       avail_t) -> Tuple[Array, Array, Array]:
+    """Clamp bin ``selected``'s operating point to ``avail_t`` usable
+    nodes: returns ``(n_act, capacity, power)``.
+
+    The single source of the §V availability pricing rule — shared by
+    the scan's :func:`_control_step` (traced values) and the serving
+    co-simulation's per-τ host loop (scalars): provisioned ``n_active``
+    clamps to the survivors, delivered capacity rescales by
+    ``n_act/n_active``, and power is re-priced from the per-node
+    decomposition so dead nodes draw nothing while gated-but-*alive*
+    nodes keep the gating residual.
+    """
+    n_tab = tables.n_active[selected]
+    n_act = jnp.minimum(n_tab, avail_t)
+    cap = tables.capacity[selected] * (n_act / jnp.maximum(n_tab, 1.0))
+    pwr = (n_act * tables.node_power[selected]
+           + jnp.maximum(avail_t - n_act, 0.0)
+           * tables.gated_power[selected])
+    return n_act, cap, pwr
+
+
 def _control_step(tables: BinTables, cfg: ControllerConfig,
                   carry: Tuple[pred_mod.MarkovState, Array],
-                  w_t: Array) -> Tuple[Tuple[pred_mod.MarkovState, Array],
-                                       _StepOut]:
-    """One §V control step: predict → select → serve → observe.
+                  w_t: Array, avail_t: Array
+                  ) -> Tuple[Tuple[pred_mod.MarkovState, Array], _StepOut]:
+    """One §V control step: predict → select → clamp to availability →
+    serve → observe.
 
-    Shared by the materializing scan and the streaming chunk scan.  A step
-    violates QoS when its *demand* — offered work plus carried backlog —
-    exceeds delivered capacity: under the paper's served-within-τ
-    semantics a step that cannot clear its backlog-inflated demand is a
-    miss even when ``w_t`` alone would fit.
+    Shared by the materializing scan and the streaming chunk scan.
+    ``avail_t`` is the step's usable node count (``cfg.n_nodes`` for a
+    healthy fleet); :func:`availability_point` clamps the selected
+    bin's operating point to it, so dead nodes are unpowered and
+    unprovisioned.  A step violates QoS when its *demand* — offered
+    work plus carried backlog — exceeds delivered capacity: under the
+    paper's served-within-τ semantics a step that cannot clear its
+    backlog-inflated demand is a miss even when ``w_t`` alone would
+    fit.
     """
     mstate, backlog = carry
     predicted = pred_mod.predict(cfg.predictor, mstate)
     actual = pred_mod.workload_to_bin(w_t, cfg.n_bins)
     selected = jnp.where(cfg.use_oracle, actual, predicted)
 
-    cap = tables.capacity[selected]
-    pwr = tables.power[selected]
+    n_act, cap, pwr = availability_point(tables, selected, avail_t)
 
     # QoS/backlog dynamics: offered work this step plus carried backlog,
     # served up to delivered capacity.
@@ -393,17 +451,19 @@ def _control_step(tables: BinTables, cfg: ControllerConfig,
                    actual_bin=actual, v_core=tables.v_core[selected],
                    v_bram=tables.v_bram[selected],
                    f_rel=tables.f_rel[selected],
-                   n_active=tables.n_active[selected])
+                   n_active=n_act)
     return (mstate, new_backlog), out
 
 
 def _scan_control_loop(tables: BinTables, cfg: ControllerConfig,
-                       trace: Array) -> TraceResult:
+                       trace: Array, avail: Array) -> TraceResult:
     """The §V runtime loop as one ``lax.scan`` — shared by the
-    per-platform :func:`simulate` and the batched fleet path."""
+    per-platform :func:`simulate` and the batched fleet path.  ``avail``
+    is the per-step usable-node trace (same length as ``trace``)."""
     init = (pred_mod.init_state(cfg.predictor), jnp.asarray(0.0))
     (mstate, _), outs = jax.lax.scan(
-        lambda c, w: _control_step(tables, cfg, c, w), init, trace)
+        lambda c, wa: _control_step(tables, cfg, c, wa[0], wa[1]),
+        init, (trace, avail))
     return TraceResult(power=outs.power, capacity=outs.capacity,
                        violations=outs.violation, backlog=outs.backlog,
                        predicted_bin=outs.predicted_bin,
@@ -415,16 +475,37 @@ def _scan_control_loop(tables: BinTables, cfg: ControllerConfig,
 
 
 def simulate(platform: PlatformSpec, cfg: ControllerConfig,
-             trace: np.ndarray | Array) -> TraceResult:
-    """Run the §V control loop over a workload trace (one jitted scan)."""
+             trace: np.ndarray | Array,
+             avail: Optional[np.ndarray | Array] = None) -> TraceResult:
+    """Run the §V control loop over a workload trace (one jitted scan).
+
+    ``avail`` is an optional per-step usable-node trace (same length as
+    ``trace``); ``None`` means a healthy fleet — every step has the
+    configured ``cfg.n_nodes`` available.
+    """
     tables = build_bin_tables(platform, cfg)
-    return _scan_control_loop(tables, cfg, jnp.asarray(trace, jnp.float32))
+    trace = jnp.asarray(trace, jnp.float32)
+    avail = (jnp.full(trace.shape, float(cfg.n_nodes)) if avail is None
+             else jnp.asarray(avail, jnp.float32))
+    return _scan_control_loop(tables, cfg, trace, avail)
 
 
 def summarize(platform: PlatformSpec, cfg: ControllerConfig,
-              trace: np.ndarray | Array, result: TraceResult) -> Summary:
-    nominal_w = (nominal_node_watts(platform)
-                 + pll_standing_watts(cfg)) * cfg.n_nodes
+              trace: np.ndarray | Array, result: TraceResult,
+              avail: Optional[np.ndarray | Array] = None) -> Summary:
+    """Reduce a :class:`TraceResult` to the paper's Summary metrics.
+
+    ``avail`` is the usable-node trace the run was simulated with (when
+    any).  The headline ``power_gain`` is computed against the
+    *available* fleet's nominal watts — dead nodes draw nothing, so they
+    earn no baseline credit; ``power_gain_vs_configured`` keeps the
+    configured-``n_nodes`` comparison.  Both coincide on healthy runs.
+    """
+    node_nom = nominal_node_watts(platform) + pll_standing_watts(cfg)
+    nominal_cfg_w = node_nom * cfg.n_nodes
+    mean_avail = (float(cfg.n_nodes) if avail is None
+                  else float(np.mean(np.asarray(avail))))
+    nominal_w = node_nom * mean_avail
     mean_w = float(jnp.mean(result.power))
     offered = float(jnp.sum(jnp.asarray(trace)))
     served = offered - float(result.backlog[-1])
@@ -439,14 +520,16 @@ def summarize(platform: PlatformSpec, cfg: ControllerConfig,
         served_fraction=served / max(offered, 1e-9),
         misprediction_rate=float(result.mispredictions) / n_scored,
         mean_backlog=float(jnp.mean(result.backlog)),
+        nominal_power_configured_w=nominal_cfg_w,
+        power_gain_vs_configured=nominal_cfg_w / mean_w,
     )
 
 
 def run_technique(platform: PlatformSpec, trace, technique: str,
-                  **cfg_kwargs) -> Summary:
+                  avail=None, **cfg_kwargs) -> Summary:
     cfg = ControllerConfig(technique=technique, **cfg_kwargs)
-    result = simulate(platform, cfg, trace)
-    return summarize(platform, cfg, trace, result)
+    result = simulate(platform, cfg, trace, avail=avail)
+    return summarize(platform, cfg, trace, result, avail=avail)
 
 
 def compare_all(platform: PlatformSpec, trace,
@@ -565,12 +648,14 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
                                      grids.core, grids.bram)
         node_w = pts.power * params.watts_scale[:, None, None]  # [P, R, M]
         n_full = jnp.full((n_p, m), float(cfg.n_nodes))
+        zeros = jnp.zeros((n_p, m))
         for i, t in enumerate(dvfs):
             per_tech[t] = BinTables(
                 capacity=jnp.broadcast_to(levels * (1.0 - stall), (n_p, m)),
                 power=(node_w[:, i] + pll_watts) * cfg.n_nodes,
                 v_core=pts.v_core[:, i], v_bram=pts.v_bram[:, i],
-                f_rel=jnp.broadcast_to(levels, (n_p, m)), n_active=n_full)
+                f_rel=jnp.broadcast_to(levels, (n_p, m)), n_active=n_full,
+                node_power=node_w[:, i] + pll_watts, gated_power=zeros)
         if hybrid:
             h_w = node_w[:, len(dvfs):]                       # [P, G, M]
             nom_w = _fleet_nominal_watts_jit(params)          # [P]
@@ -590,7 +675,10 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
                 power=pick(total),
                 v_core=pick(pts.v_core[:, len(dvfs):]),
                 v_bram=pick(pts.v_bram[:, len(dvfs):]),
-                f_rel=f_sel, n_active=n_sel)
+                f_rel=f_sel, n_active=n_sel,
+                node_power=pick(h_w) + pll_watts,
+                gated_power=jnp.broadcast_to(
+                    (cfg.gated_power_frac * nom_w)[:, None], (n_p, m)))
 
     if "nominal" in techniques or "power_gating" in techniques:
         node_w = _fleet_nominal_watts_jit(params)  # [P]
@@ -603,7 +691,10 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
                 power=jnp.broadcast_to(
                     ((node_w + pll_watts) * cfg.n_nodes)[:, None], (n_p, m)),
                 v_core=nom_vc, v_bram=nom_vb, f_rel=ones,
-                n_active=jnp.full((n_p, m), float(cfg.n_nodes)))
+                n_active=jnp.full((n_p, m), float(cfg.n_nodes)),
+                node_power=jnp.broadcast_to((node_w + pll_watts)[:, None],
+                                            (n_p, m)),
+                gated_power=jnp.zeros((n_p, m)))
         if "power_gating" in techniques:
             edges = (np.arange(m) + 1.0) / m
             n_active = jnp.asarray(np.minimum(np.ceil(edges * cfg.n_nodes),
@@ -614,7 +705,11 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
                 capacity=jnp.broadcast_to(n_active / cfg.n_nodes, (n_p, m)),
                 power=n_active * (node_w[:, None] + pll_watts) + gated,
                 v_core=nom_vc, v_bram=nom_vb, f_rel=ones,
-                n_active=jnp.broadcast_to(n_active, (n_p, m)))
+                n_active=jnp.broadcast_to(n_active, (n_p, m)),
+                node_power=jnp.broadcast_to((node_w + pll_watts)[:, None],
+                                            (n_p, m)),
+                gated_power=jnp.broadcast_to(
+                    (cfg.gated_power_frac * node_w)[:, None], (n_p, m)))
 
     return BinTables(*[jnp.stack([getattr(per_tech[t], f) for t in techniques],
                                  axis=1)
@@ -622,12 +717,17 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _simulate_fleet_jit(tables: BinTables, traces: Array,
+def _simulate_fleet_jit(tables: BinTables, traces: Array, avail: Array,
                         cfg: ControllerConfig) -> TraceResult:
-    """One vmapped ``lax.scan`` over the flattened [K] fleet axis."""
+    """One vmapped ``lax.scan`` over the flattened [K] fleet axis.
+
+    ``avail`` always rides along (all-``n_nodes`` for healthy fleets), so
+    availability-bearing and healthy sweeps share one compiled program.
+    """
     _TRACE_COUNTS["simulate"] += 1
-    return jax.vmap(lambda tab, trace: _scan_control_loop(tab, cfg, trace)
-                    )(tables, traces)
+    return jax.vmap(lambda tab, trace, av: _scan_control_loop(tab, cfg,
+                                                              trace, av)
+                    )(tables, traces, avail)
 
 
 def _broadcast_traces(traces: np.ndarray, lead: Tuple[int, ...]) -> np.ndarray:
@@ -654,13 +754,37 @@ def _broadcast_traces(traces: np.ndarray, lead: Tuple[int, ...]) -> np.ndarray:
         "[P, 1, S] explicitly")
 
 
+def _broadcast_avail(avail, lead: Tuple[int, ...], n_nodes: int,
+                     s: int) -> np.ndarray:
+    """Expand a usable-nodes schedule to ``lead + (S,)`` (stride-0).
+
+    ``None`` means a healthy fleet: every step has ``n_nodes`` available
+    — materialized as a zero-copy broadcast so the always-present
+    availability input never costs ``K·S`` memory.
+    """
+    if avail is None:
+        return np.broadcast_to(np.float32(n_nodes), lead + (s,))
+    avail = _broadcast_traces(np.asarray(avail), lead)
+    if avail.shape[-1] != s:
+        raise ValueError(f"avail length {avail.shape[-1]} != trace "
+                         f"length {s}")
+    return avail
+
+
 def simulate_fleet(tables: BinTables, traces: np.ndarray | Array,
-                   cfg: ControllerConfig) -> TraceResult:
+                   cfg: ControllerConfig,
+                   avail: Optional[np.ndarray | Array] = None
+                   ) -> TraceResult:
     """Run the §V loop for every fleet cell in one compiled program.
 
     ``tables`` fields carry arbitrary leading axes ``[..., M]`` (e.g.
     [P, T, M] from :func:`fleet_bin_tables`); ``traces`` is either one
     shared trace [S] or per-cell traces broadcastable to ``[..., S]``.
+    ``avail`` is an optional usable-nodes schedule with the same
+    broadcasting rules ([S] shared or per-cell ``[..., S]``); ``None``
+    means every step has ``cfg.n_nodes`` available.  Because the healthy
+    case is an all-``n_nodes`` schedule of the same shape, adding an
+    availability schedule never compiles a second program.
     Returns a :class:`TraceResult` whose fields have shape ``[..., S]``.
     The jit cache is keyed on shapes + the static config (normalized to be
     technique-independent — the runtime loop is shared across techniques),
@@ -674,10 +798,12 @@ def simulate_fleet(tables: BinTables, traces: np.ndarray | Array,
     flat = BinTables(*[jnp.reshape(x, (k,) + x.shape[len(lead):])
                        for x in tables])
     traces = _broadcast_traces(np.asarray(traces), lead)
-    traces = jnp.asarray(np.ascontiguousarray(traces)).reshape(
-        (k, traces.shape[-1]))
+    s = traces.shape[-1]
+    avail = _broadcast_avail(avail, lead, cfg.n_nodes, s)
+    traces = jnp.asarray(np.ascontiguousarray(traces)).reshape((k, s))
+    avail = jnp.asarray(np.ascontiguousarray(avail)).reshape((k, s))
     cfg = dataclasses.replace(cfg, technique="proposed")
-    out = _simulate_fleet_jit(flat, traces, cfg)
+    out = _simulate_fleet_jit(flat, traces, avail, cfg)
     return jax.tree_util.tree_map(
         lambda x: jnp.reshape(x, lead + x.shape[1:]), out)
 
@@ -708,6 +834,7 @@ class _StreamAcc(NamedTuple):
     viol_sum: Array      # Σ violations
     backlog_sum: Array   # Σ backlog (the backlog integral)
     offered_sum: Array   # Σ w_t
+    avail_sum: Array     # Σ usable nodes (the availability integral)
 
 
 class FleetSummary(NamedTuple):
@@ -728,51 +855,62 @@ class FleetSummary(NamedTuple):
     n_steps: int
     final_predictor: pred_mod.MarkovState
     emitted: Dict[str, np.ndarray]
+    #: Mean usable nodes per step — ``cfg.n_nodes`` on healthy runs; the
+    #: available-fleet nominal baseline is ``mean_avail_nodes`` × the
+    #: per-node nominal watts.
+    mean_avail_nodes: np.ndarray = None
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "emit"))
 def _fleet_stream_chunk_jit(tables: BinTables, mstate: pred_mod.MarkovState,
-                            backlog: Array, chunk: Array, valid: Array,
-                            cfg: ControllerConfig,
+                            backlog: Array, chunk: Array, avail: Array,
+                            valid: Array, cfg: ControllerConfig,
                             emit: Tuple[str, ...]) -> Tuple:
     """One fixed-shape streaming chunk over the flattened [K] fleet axis.
 
-    ``chunk`` is [K, C] (the tail chunk zero-padded), ``valid`` is a [C]
-    mask; invalid steps pass the carry through unchanged, so partial tail
-    chunks reuse the same compiled program.  Reduction sums restart at
-    zero each chunk — the host accumulates them in float64, keeping
-    long-trace sums out of float32 range.
+    ``chunk`` and ``avail`` are [K, C] (the tail chunk zero-padded) —
+    availability always rides the chunk program (all-``n_nodes`` for
+    healthy fleets), so failure-bearing sweeps share the compiled
+    program; ``valid`` is a [C] mask; invalid steps pass the carry
+    through unchanged, so partial tail chunks reuse the same compiled
+    program.  Reduction sums restart at zero each chunk — the host
+    accumulates them in float64, keeping long-trace sums out of float32
+    range.
     """
     _TRACE_COUNTS["stream"] += 1
 
-    def cell(tab, ms, bl, tr):
+    def cell(tab, ms, bl, tr, av):
         zero = jnp.asarray(0.0, jnp.float32)
         acc0 = _StreamAcc(mstate=ms, backlog=bl, power_sum=zero,
-                          viol_sum=zero, backlog_sum=zero, offered_sum=zero)
+                          viol_sum=zero, backlog_sum=zero, offered_sum=zero,
+                          avail_sum=zero)
 
         def step(a, inp):
-            w_t, v = inp
+            w_t, a_t, v = inp
             (ms2, bl2), out = _control_step(tab, cfg, (a.mstate, a.backlog),
-                                            w_t)
+                                            w_t, a_t)
             new = _StreamAcc(
                 mstate=ms2, backlog=bl2,
                 power_sum=a.power_sum + out.power,
                 viol_sum=a.viol_sum + out.violation.astype(jnp.float32),
                 backlog_sum=a.backlog_sum + bl2,
-                offered_sum=a.offered_sum + w_t)
+                offered_sum=a.offered_sum + w_t,
+                avail_sum=a.avail_sum + a_t)
             a2 = jax.tree.map(lambda n, o: jnp.where(v, n, o), new, a)
             return a2, tuple(getattr(out, e) for e in emit)
 
-        return jax.lax.scan(step, acc0, (tr, valid))
+        return jax.lax.scan(step, acc0, (tr, av, valid))
 
-    return jax.vmap(cell, in_axes=(0, 0, 0, 0))(tables, mstate, backlog,
-                                                chunk)
+    return jax.vmap(cell, in_axes=(0, 0, 0, 0, 0))(tables, mstate, backlog,
+                                                   chunk, avail)
 
 
 def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
                           cfg: ControllerConfig, chunk_size: int = 1024,
                           emit: Sequence[str] = (),
-                          shard: bool = True) -> FleetSummary:
+                          shard: bool = True,
+                          avail: Optional[np.ndarray | Array] = None
+                          ) -> FleetSummary:
     """Streaming :func:`simulate_fleet`: O(K) memory, any trace length.
 
     **Shape conventions.**  ``tables`` fields carry arbitrary leading
@@ -790,6 +928,14 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
     synthetic, short, and million-step traces of the same fleet shape
     all reuse one cache entry (the zero-retrace contract;
     :func:`fleet_trace_counts`\\ ``()["stream"]`` is the witness).
+
+    **Availability.**  ``avail`` is an optional per-step usable-nodes
+    schedule with the same broadcasting rules as ``traces`` ([S] shared
+    or per-cell ``[..., S]``); it rides the same ``[K, C]`` chunks as
+    the workload.  ``None`` means a healthy fleet — a stride-0
+    all-``n_nodes`` schedule is fed instead, so the chunk program always
+    has the availability input and adding a failure schedule never
+    compiles a second program.
 
     **Reductions and ``emit=``.**  The ``Summary`` reductions
     (power/violation/backlog sums, offered work, predictor state) ride
@@ -827,10 +973,13 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
     k = int(np.prod(lead, dtype=np.int64)) if lead else 1
     flat = BinTables(*[jnp.reshape(x, (k,) + x.shape[len(lead):])
                        for x in tables])
+    # Keep traces/availability in their lead + (S,) stride-0 broadcast
+    # form — a dense (K, S) reshape here would silently copy K·S floats
+    # (numpy cannot express it as a view), breaking the O(K) memory
+    # contract.  Only the per-chunk slices below ever materialize.
     traces = _broadcast_traces(np.asarray(traces), lead)
-    traces = traces.reshape((k, traces.shape[-1])) if lead else \
-        traces[None, :]
     s = traces.shape[-1]
+    avail_full = _broadcast_avail(avail, lead, cfg.n_nodes, s)
     c = max(1, min(int(chunk_size), s))
     cfg = dataclasses.replace(cfg, technique="proposed")
 
@@ -863,26 +1012,50 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
     viol_sum = np.zeros(k_pad, np.float64)
     backlog_sum = np.zeros(k_pad, np.float64)
     offered_sum = np.zeros(k_pad, np.float64)
-    emitted = {e: [] for e in emit}
-    for s0 in range(0, s, c):
-        raw = np.ascontiguousarray(traces[:, s0:s0 + c])
-        n_valid = raw.shape[-1]
+    avail_sum = np.zeros(k_pad, np.float64)
+
+    def chunked(rows, s0, n_valid):
+        """One [k_pad, C] device chunk of a lead + (S,) row set.
+
+        ``rows`` may be a stride-0 broadcast; slicing the step axis keeps
+        the view, so only k·C elements materialize per chunk — never K·S.
+        """
+        raw = np.ascontiguousarray(rows[..., s0:s0 + c]).reshape((k, -1))
         if n_valid < c:
             raw = np.pad(raw, ((0, 0), (0, c - n_valid)))
         if k_pad != k:
             raw = np.concatenate(
                 [raw, np.broadcast_to(raw[:1], (k_pad - k, raw.shape[-1]))])
-        chunk = jnp.asarray(raw)
-        valid = jnp.asarray(np.arange(c) < n_valid)
+        out = jnp.asarray(raw)
+        return shd.shard_fleet(out, rules) if mesh is not None else out
+
+    # Healthy fleets have a constant all-n_nodes schedule: build its
+    # device chunk once and reuse it, instead of re-materializing and
+    # re-transferring an identical [k_pad, C] array every chunk.
+    # (Padded/invalid steps never escape — the valid mask gates the
+    # carry and emits are cut to n_valid — so one chunk fits all.)
+    av_const = None
+    if avail is None:
+        av_const = jnp.full((k_pad, c), jnp.float32(cfg.n_nodes))
         if mesh is not None:
-            chunk = shd.shard_fleet(chunk, rules)
+            av_const = shd.shard_fleet(av_const, rules)
+
+    emitted = {e: [] for e in emit}
+    for s0 in range(0, s, c):
+        n_valid = min(c, s - s0)
+        chunk = chunked(traces, s0, n_valid)
+        av_chunk = (av_const if av_const is not None
+                    else chunked(avail_full, s0, n_valid))
+        valid = jnp.asarray(np.arange(c) < n_valid)
         acc, ys = _fleet_stream_chunk_jit(flat, mstate, backlog, chunk,
-                                          valid, cfg, emit_internal)
+                                          av_chunk, valid, cfg,
+                                          emit_internal)
         mstate, backlog = acc.mstate, acc.backlog
         power_sum += np.asarray(acc.power_sum, np.float64)
         viol_sum += np.asarray(acc.viol_sum, np.float64)
         backlog_sum += np.asarray(acc.backlog_sum, np.float64)
         offered_sum += np.asarray(acc.offered_sum, np.float64)
+        avail_sum += np.asarray(acc.avail_sum, np.float64)
         for e, y in zip(emit, ys):
             emitted[e].append(np.asarray(y[:, :n_valid]))
 
@@ -902,14 +1075,28 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
         n_steps=s,
         final_predictor=jax.tree.map(cut, mstate),
         emitted={e: cut(np.concatenate(v, axis=-1))
-                 for e, v in emitted.items()})
+                 for e, v in emitted.items()},
+        mean_avail_nodes=cut(avail_sum / s))
+
+
+def fleet_node_nominal_watts(params: char.PlatformParams,
+                             cfg: ControllerConfig) -> np.ndarray:
+    """Per-platform nominal watts of ONE node (incl. PLLs) [P].
+
+    Multiply by a node count to price a fleet baseline: ``cfg.n_nodes``
+    for the configured fleet, a mean usable-node count for the
+    availability-aware baseline.
+    """
+    return (np.asarray(_fleet_nominal_watts_jit(params))
+            + pll_standing_watts(cfg))
 
 
 def fleet_nominal_watts(params: char.PlatformParams,
                         cfg: ControllerConfig) -> np.ndarray:
-    """Per-platform nominal fleet watts [P] — the power-gain denominator."""
-    return ((np.asarray(_fleet_nominal_watts_jit(params))
-             + pll_standing_watts(cfg)) * cfg.n_nodes)
+    """Per-platform *configured*-fleet nominal watts [P] — the
+    ``power_gain_vs_configured`` denominator (and ``power_gain``'s on
+    healthy fleets)."""
+    return fleet_node_nominal_watts(params, cfg) * cfg.n_nodes
 
 
 def compare_all_batched(platforms: Sequence[PlatformSpec],
@@ -959,6 +1146,8 @@ def compare_all_batched(platforms: Sequence[PlatformSpec],
                 served_fraction=served / max(offered, 1e-9),
                 misprediction_rate=float(mispred[i, j]) / n_scored,
                 mean_backlog=float(backlog[i, j].mean()),
+                nominal_power_configured_w=float(nominal_w[i]),
+                power_gain_vs_configured=float(nominal_w[i]) / mean_w,
             )
         out[plat.name] = per_tech
     return out

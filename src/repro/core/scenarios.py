@@ -7,9 +7,12 @@ interactive-datacenter stress of arXiv:2304.04488), heterogeneous
 multi-tenant mixes (arXiv:2311.11015), capacity ramps/decays, and
 node-failure transients.  Each scenario is a named, seeded generator
 returning workload fractions ``w_t ∈ [0, 1]``; node-failure scenarios
-additionally carry an alive-node schedule that drives ``n_nodes``
-reductions through :func:`repro.runtime.elastic.shrink_mesh_plan`
-(failed nodes concentrate demand on the surviving usable grid).
+additionally carry a per-step *usable-nodes schedule* (alive fractions
+quantized through :func:`repro.runtime.elastic.shrink_mesh_plan`) that
+flows alongside the workload trace into the §V control loop — the
+controller clamps each step's provisioned ``n_active`` to the
+survivors, so dead nodes are unpowered and unprovisioned and lost
+capacity shows up as backlog and QoS violations.
 
 Beyond the synthetic shapes, **replayed traces** are first-class
 scenarios: :func:`register_replay` wraps any
@@ -21,11 +24,13 @@ scenario, and the bundled Azure/Google-style samples auto-register as
 synthetic generators via :func:`repro.core.traces.mix` /
 :func:`~repro.core.traces.splice`).
 
-``build_suite`` stacks any subset into one ``[N, S]`` array for the
-streaming fleet path, and :func:`run_campaign` sweeps
-platforms × techniques × scenarios in one compiled chunk program
-(``controller.simulate_fleet_stream``), so a whole campaign reuses two
-jit cache entries regardless of how many scenarios it covers.
+``build_suite`` stacks any subset into ``[N, S]`` workload *and*
+usable-nodes arrays for the streaming fleet path, and
+:func:`run_campaign` sweeps platforms × techniques × scenarios in one
+compiled chunk program (``controller.simulate_fleet_stream`` — the
+availability schedule rides the same ``[K, C]`` chunks), so a whole
+campaign reuses two jit cache entries regardless of how many scenarios
+it covers and whether any of them carries failures.
 """
 
 from __future__ import annotations
@@ -69,42 +74,27 @@ class Scenario:
 
     def node_schedule(self, n_steps: int, n_nodes: int,
                       seed: int = 0) -> np.ndarray:
-        """Per-step usable alive-node counts.
+        """Per-step usable-node counts ``[S]`` — the availability trace
+        that feeds the §V control loop alongside the workload.
 
-        The raw alive fraction is quantized through
-        :func:`elastic.shrink_mesh_plan`: a failed fleet can only run the
-        largest (data × model) grid that fits the survivors, so e.g. 7 of
-        8 alive nodes still only yield a 4-node usable mesh.
+        A failure-free step always yields the full ``n_nodes`` (also for
+        fleets that are not a power of two).  A *degraded* step is
+        quantized through :func:`elastic.shrink_mesh_plan`: a failed
+        fleet can only run the largest (data × model) grid that fits the
+        survivors, so e.g. 7 of 8 alive nodes still only yield a 4-node
+        usable mesh.
         """
         if self.nodes is None:
             return np.full(n_steps, n_nodes, np.int32)
         frac = np.clip(self.nodes(n_steps, self._rng(seed, "/nodes")),
                        0.0, 1.0)
-        alive = np.maximum(1, np.round(frac * n_nodes)).astype(np.int64)
+        alive = np.minimum(n_nodes, np.maximum(
+            1, np.round(frac * n_nodes))).astype(np.int64)
         prefer = 1 << (max(n_nodes, 1).bit_length() - 1)
-        usable = {a: int(np.prod(elastic.shrink_mesh_plan(a, prefer)))
+        usable = {a: (int(a) if a >= n_nodes else
+                      int(np.prod(elastic.shrink_mesh_plan(int(a), prefer))))
                   for a in np.unique(alive)}
         return np.asarray([usable[a] for a in alive], np.int32)
-
-    def effective_trace(self, n_steps: int, n_nodes: int,
-                        seed: int = 0) -> np.ndarray:
-        """Workload as seen by the *usable* fleet: failures concentrate
-        demand on survivors (w·n/alive), saturating at 1.
-
-        Modeling caveats (deliberate, see ROADMAP open items): the
-        workload counter measures utilization of peak, so demand beyond
-        the survivors' peak saturates at w=1 (it shows up as sustained
-        top-bin load and QoS violations, not as unbounded backlog), and
-        the controller still provisions/bills the *configured*
-        ``n_nodes`` — failed nodes draw operating-point power, making
-        node-failure power gains conservative.  Forcing per-step
-        ``n_active`` through the tables is future work.
-        """
-        w = self.trace(n_steps, seed)
-        if self.nodes is None:
-            return w
-        alive = self.node_schedule(n_steps, n_nodes, seed)
-        return np.clip(w * n_nodes / alive, 0.0, 1.0).astype(np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -191,7 +181,7 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
     Scenario("multi_tenant", "heterogeneous bursty/periodic/batch tenant mix",
              _multi_tenant),
     Scenario("node_failure", "bursty load + node-failure windows "
-             "(elastic re-mesh concentrates demand on survivors)",
+             "(per-step usable-nodes schedule clamps controller capacity)",
              _burse, nodes=_failure_nodes),
 )}
 
@@ -285,14 +275,22 @@ _register_bundled_replays()
 
 def build_suite(names: Optional[Sequence[str]] = None, n_steps: int = 2048,
                 n_nodes: int = 8, seed: int = 0
-                ) -> Tuple[Tuple[str, ...], np.ndarray]:
-    """Stack named scenarios into one [N, S] trace array (node-failure
-    scenarios contribute their survivor-concentrated effective trace)."""
+                ) -> Tuple[Tuple[str, ...], np.ndarray, np.ndarray]:
+    """Stack named scenarios into ``(names, traces [N, S], avail [N, S])``.
+
+    ``traces`` are the raw workload fractions (demand stays in
+    configured-fleet units — failures no longer concentrate demand onto
+    survivors); ``avail`` is the per-step usable-node schedule, a
+    constant ``n_nodes`` row for healthy scenarios.  Both feed the fleet
+    engines side by side: the controller clamps provisioning to
+    ``avail`` so lost capacity surfaces as backlog/QoS, and dead nodes
+    draw no power.
+    """
     names = tuple(names) if names is not None else tuple(SCENARIOS)
-    traces = np.stack([get_scenario(n).effective_trace(n_steps, n_nodes,
-                                                       seed)
-                       for n in names])
-    return names, traces
+    traces = np.stack([get_scenario(n).trace(n_steps, seed) for n in names])
+    avail = np.stack([get_scenario(n).node_schedule(n_steps, n_nodes, seed)
+                      for n in names]).astype(np.float32)
+    return names, traces, avail
 
 
 # ---------------------------------------------------------------------------
@@ -327,27 +325,37 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
     attaches them); ``**cfg_kwargs`` feed ``ControllerConfig`` (e.g.
     ``n_nodes=16``).
 
+    Node-failure scenarios contribute their usable-nodes schedule, which
+    rides the same ``[K, C]`` chunks as the workload (healthy scenarios
+    pass a constant all-``n_nodes`` row), so availability-bearing sweeps
+    reuse the very same compiled chunk program.
+
     Returns ``{"scenarios", "techniques", "n_steps", "table"}`` where
-    ``table[platform][technique][scenario]`` holds power_gain /
-    mean_power_w / qos_violation_rate / served_fraction / mean_backlog.
+    ``table[platform][technique][scenario]`` holds power_gain (vs the
+    *available* fleet) / power_gain_vs_configured / mean_power_w /
+    mean_avail_nodes / qos_violation_rate / served_fraction /
+    mean_backlog.
     """
     missing = [p.name for p in platforms if p.params is None]
     if missing:
         raise ValueError(f"platforms lack PlatformParams: {missing}")
     cfg = ctl.ControllerConfig(**cfg_kwargs)
-    names, traces = build_suite(scenario_names, n_steps=n_steps,
-                                n_nodes=cfg.n_nodes, seed=seed)
+    names, traces, avail = build_suite(scenario_names, n_steps=n_steps,
+                                       n_nodes=cfg.n_nodes, seed=seed)
     params = char.stack_platform_params([p.params for p in platforms])
     tables = ctl.fleet_bin_tables(params, cfg, techniques)     # [P, T, M]
     n_scen = len(names)
     # Scenario axis rides the tables' leading axes: broadcast [P, T, M] →
-    # [P, T, N, M] (free) and feed per-scenario traces as [1, 1, N, S].
+    # [P, T, N, M] (free) and feed per-scenario traces + availability as
+    # [1, 1, N, S].
     tab_n = ctl.BinTables(*[jnp.broadcast_to(
         x[:, :, None], x.shape[:2] + (n_scen,) + x.shape[2:])
         for x in tables])
     summary = ctl.simulate_fleet_stream(tab_n, traces[None, None], cfg,
-                                        chunk_size=chunk_size, shard=shard)
-    nominal_w = ctl.fleet_nominal_watts(params, cfg)           # [P]
+                                        chunk_size=chunk_size, shard=shard,
+                                        avail=avail[None, None])
+    node_nom_w = ctl.fleet_node_nominal_watts(params, cfg)     # [P]
+    nominal_cfg_w = node_nom_w * cfg.n_nodes                   # [P]
 
     table: Dict[str, Dict[str, Dict[str, Dict[str, float]]]] = {}
     for i, plat in enumerate(platforms):
@@ -356,9 +364,13 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
             table[plat.name][tech] = {}
             for k, scen in enumerate(names):
                 mean_w = float(summary.mean_power_w[i, j, k])
+                mean_avail = float(summary.mean_avail_nodes[i, j, k])
                 table[plat.name][tech][scen] = {
-                    "power_gain": float(nominal_w[i]) / mean_w,
+                    "power_gain": float(node_nom_w[i]) * mean_avail / mean_w,
+                    "power_gain_vs_configured":
+                        float(nominal_cfg_w[i]) / mean_w,
                     "mean_power_w": mean_w,
+                    "mean_avail_nodes": mean_avail,
                     "qos_violation_rate":
                         float(summary.qos_violation_rate[i, j, k]),
                     "served_fraction":

@@ -74,7 +74,8 @@ class DvfsServingSimulator:
                          mean_new_tokens: int = 64,
                          seed: int = 0,
                          closed_loop: bool = True,
-                         workload_signal: str = "occupancy"
+                         workload_signal: str = "occupancy",
+                         node_schedule: Optional[np.ndarray] = None
                          ) -> Dict[str, object]:
         """Drive a ContinuousBatcher from a Poisson request process with
         the §V controller *in the loop*.
@@ -88,8 +89,11 @@ class DvfsServingSimulator:
         ``ContinuousBatcher.step(throughput=...)`` for the next interval.
         Occupancy, backlog, and per-request latency therefore respond to
         the DVFS decision.  ``closed_loop=False`` reproduces the old
-        open-loop behavior (batcher always at nominal throughput) while
-        still integrating modeled power.
+        open-loop behavior (batcher at nominal throughput, ignoring the
+        controller's throttle) while still integrating modeled power —
+        though dead chips are physics, not a controller choice, so a
+        ``node_schedule`` still caps open-loop throughput at
+        ``avail/n_chips``.
 
         ``workload_signal`` selects what the controller bins each τ —
         the request-driven alternative to feeding it synthetic fractions:
@@ -112,6 +116,20 @@ class DvfsServingSimulator:
         :func:`repro.core.traces.from_serving`, so measured serving
         behavior can drive fleet campaigns.
 
+        ``node_schedule`` is an optional per-τ usable-chip count trace
+        (entries in ``[1, n_chips]`` — a total outage cannot drain the
+        batcher and is refused; e.g. ``Scenario.node_schedule``
+        resampled to serving τs): each
+        control interval the selected bin's ``n_active`` is clamped to
+        the interval's survivors, the batcher's delivered throughput
+        scales by ``n_act/n_nodes`` — so measured occupancy, queueing,
+        and request latency p50/p99 genuinely react to failures — and
+        power is re-priced from the per-node decomposition (dead chips
+        draw 0 W).  The schedule is indexed per control interval and
+        holds its last value through the drain; the returned ``Summary``
+        prices ``power_gain`` against the *available* fleet and
+        ``power_gain_vs_configured`` against the configured one.
+
         When the arrival trace ends, the batcher is *drained* at the
         final operating point (bounded by the remaining tokens at that
         ``f_now``), so every submitted request finishes and
@@ -130,17 +148,58 @@ class DvfsServingSimulator:
         rng = np.random.default_rng(seed)
         batcher = ContinuousBatcher(batch_size=batch_size)
         tables = ctl.build_bin_tables(self.platform, self.cfg)
-        cap = np.asarray(tables.capacity)
         f_rel = np.asarray(tables.f_rel)
-        power = np.asarray(tables.power)
-        throughput = f_rel * np.asarray(tables.n_active) / self.cfg.n_nodes
         pcfg = self.cfg.predictor
+        n_nodes = self.cfg.n_nodes
+        sched = None
+        if node_schedule is not None:
+            sched = np.asarray(node_schedule, np.float64)
+            if sched.size == 0:
+                raise ValueError("node_schedule must be non-empty")
+            if (sched < 1.0).any():
+                # Refuse rather than silently clip to 1: a total outage
+                # cannot drain the batcher (throughput 0), so simulating
+                # it as one surviving chip would misreport power and
+                # latency.  Model full-fleet loss with the modeled
+                # loop's `avail=` instead.
+                raise ValueError("node_schedule entries must be >= 1 "
+                                 "usable chip (the serving co-simulation "
+                                 "cannot drain a total outage)")
+            sched = np.minimum(sched, n_nodes)
+
+        def avail_at(i: int) -> float:
+            """Usable chips during control interval ``i`` (holds the
+            last schedule entry once the trace outlives the schedule)."""
+            if sched is None:
+                return float(n_nodes)
+            return float(sched[min(i, len(sched) - 1)])
+
+        def operating_point(pred: int, avail: float):
+            """Availability-clamped (throughput, capacity, watts) via the
+            shared §V pricing rule (:func:`controller.availability_point`
+            — the same formula the modeled scan uses, so the serving
+            co-simulation can never drift from the fleet engines)."""
+            n_act, cap_eff, pwr = ctl.availability_point(tables, pred,
+                                                         avail)
+            thr = float(f_rel[pred]) * float(n_act) / n_nodes
+            return thr, float(cap_eff), float(pwr)
 
         mstate = pred_mod.init_state(pcfg)
         predicted = int(pred_mod.predict(pcfg, mstate))
-        f_now = float(throughput[predicted]) if closed_loop else 1.0
+        tau_idx = 0
+        avail_now = avail_at(tau_idx)
+        thr_now, cap_now, pwr_now = operating_point(predicted, avail_now)
+
+        def batcher_throughput() -> float:
+            """Delivered batcher throughput for the current τ.  Open
+            loop ignores the *controller's* throttle but not physics:
+            dead chips cap delivered throughput at avail/n_nodes even
+            when the batcher otherwise runs at nominal speed."""
+            return thr_now if closed_loop else avail_now / n_nodes
+
+        f_now = batcher_throughput()
         occ_tau, f_tau, thr_tau, power_tau, viol_tau = [], [], [], [], []
-        workload_tau, arrival_tau = [], []
+        workload_tau, arrival_tau, avail_tau = [], [], []
         tau_weights = []  # 1.0 per full τ; < 1 for the trailing partial
         queued, interval_occ, interval_queue = [], [], []
         interval_tokens = [0]  # tokens submitted during the current τ
@@ -154,9 +213,10 @@ class DvfsServingSimulator:
 
         def close_interval(update_controller: bool) -> None:
             """τ boundary: fold the interval (full *or* partial) into the
-            counters; optionally train the predictor and re-select the
-            operating point for the next τ."""
+            counters; optionally train the predictor, advance the node
+            schedule, and re-select the operating point for the next τ."""
             nonlocal mstate, predicted, f_now, n_ctrl_tau
+            nonlocal tau_idx, avail_now, thr_now, cap_now, pwr_now
             occ = float(np.mean(interval_occ))
             # QoS mirrors the controller's backlog-aware semantics: demand
             # is busy slots plus queued requests per slot, not occupancy
@@ -170,11 +230,11 @@ class DvfsServingSimulator:
             occ_tau.append(occ)
             workload_tau.append(signal)
             arrival_tau.append(arrival_frac)
+            avail_tau.append(avail_now)
             f_tau.append(float(f_rel[predicted]) if closed_loop else 1.0)
             thr_tau.append(f_now)
-            power_tau.append(float(power[predicted]))
-            viol_tau.append(occ + backlog_slots
-                            > float(cap[predicted]) + 1e-9)
+            power_tau.append(pwr_now)
+            viol_tau.append(occ + backlog_slots > cap_now + 1e-9)
             tau_weights.append(len(interval_occ) / self.steps_per_tau)
             interval_occ.clear()
             interval_queue.clear()
@@ -186,8 +246,11 @@ class DvfsServingSimulator:
                 mstate = pred_mod.observe(pcfg, mstate, jnp.asarray(actual),
                                           jnp.asarray(predicted))
                 predicted = int(pred_mod.predict(pcfg, mstate))
-                f_now = (float(throughput[predicted]) if closed_loop
-                         else 1.0)
+                tau_idx += 1
+                avail_now = avail_at(tau_idx)
+                thr_now, cap_now, pwr_now = operating_point(predicted,
+                                                            avail_now)
+                f_now = batcher_throughput()
 
         rid = 0
         offered_tokens = 0
@@ -233,9 +296,13 @@ class DvfsServingSimulator:
                              for r in batcher.finished)
                          + sum(min(s.decoded, s.max_new_tokens)
                                for s in batcher.slots if s is not None))
-        nominal_w = ((ctl.nominal_node_watts(self.platform)
-                      + ctl.pll_standing_watts(self.cfg)) * self.cfg.n_nodes)
+        node_nom_w = (ctl.nominal_node_watts(self.platform)
+                      + ctl.pll_standing_watts(self.cfg))
+        nominal_cfg_w = node_nom_w * self.cfg.n_nodes
         wts = np.asarray(tau_weights)
+        mean_avail = (float(np.average(avail_tau, weights=wts)) if avail_tau
+                      else float(n_nodes))
+        nominal_w = node_nom_w * mean_avail
         mean_w = (float(np.average(power_tau, weights=wts)) if power_tau
                   else nominal_w)
         summary = ctl.Summary(
@@ -251,11 +318,14 @@ class DvfsServingSimulator:
             mean_backlog=float(np.mean(queued)) / batch_size,
             latency_p50=p50,
             latency_p99=p99,
+            nominal_power_configured_w=nominal_cfg_w,
+            power_gain_vs_configured=nominal_cfg_w / mean_w,
         )
         return {"summary": summary,
                 "occupancy_tau": np.asarray(occ_tau),
                 "workload_tau": np.asarray(workload_tau),
                 "arrival_fraction_tau": np.asarray(arrival_tau),
+                "avail_tau": np.asarray(avail_tau),
                 "workload_signal": workload_signal,
                 "f_rel_tau": np.asarray(f_tau),
                 "throughput_tau": np.asarray(thr_tau),

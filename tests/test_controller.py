@@ -171,6 +171,58 @@ def test_violations_count_backlogged_demand():
     np.testing.assert_array_equal(viol[ok], trace[ok] > cap[ok] + 1e-9)
 
 
+def test_availability_clamps_capacity_and_unpowers_dead_nodes():
+    """Faithful failure modeling: with avail < n_nodes the controller
+    provisions only the survivors — capacity scales by n_act/n_active,
+    dead nodes draw no operating-point power, and the Summary reports
+    both the available-fleet and configured-fleet baselines."""
+    plat = ctl.fpga_platform(ACCELERATORS["tabla"])
+    cfg = ctl.ControllerConfig(n_nodes=8)
+    trace = np.full(64, 0.6, np.float32)
+    avail = np.full(64, 6.0, np.float32)   # 2 nodes dead throughout
+    full = ctl.simulate(plat, cfg, trace)
+    deg = ctl.simulate(plat, cfg, trace, avail=avail)
+    np.testing.assert_array_equal(np.asarray(deg.n_active),
+                                  np.full(64, 6.0))
+    # power is exactly the survivors' share: 6/8 of the full-fleet draw
+    np.testing.assert_allclose(np.asarray(deg.power),
+                               np.asarray(full.power) * 6.0 / 8.0,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(deg.capacity),
+                               np.asarray(full.capacity) * 6.0 / 8.0,
+                               rtol=1e-6)
+    s_full = ctl.summarize(plat, cfg, trace, full)
+    s_deg = ctl.summarize(plat, cfg, trace, deg, avail=avail)
+    # healthy runs: both baselines coincide
+    assert s_full.nominal_power_w == pytest.approx(
+        s_full.nominal_power_configured_w)
+    assert s_full.power_gain == pytest.approx(
+        s_full.power_gain_vs_configured)
+    # degraded runs: the available-fleet baseline is 6/8 the configured
+    assert s_deg.nominal_power_w == pytest.approx(
+        s_deg.nominal_power_configured_w * 6.0 / 8.0)
+    assert s_deg.power_gain < s_deg.power_gain_vs_configured
+    # constant trace + proportional clamp → the available-fleet gain
+    # matches the healthy gain (same operating points, scaled fleet)
+    assert s_deg.power_gain == pytest.approx(s_full.power_gain, rel=1e-5)
+
+
+def test_availability_losses_surface_as_backlog_not_saturation():
+    """Lost capacity must show up in the QoS ledger: a failure window
+    under sustained load produces violations/backlog that the healthy
+    run does not have, and served work drops accordingly."""
+    plat = ctl.fpga_platform(ACCELERATORS["tabla"])
+    cfg = ctl.ControllerConfig(n_nodes=8)
+    trace = np.full(128, 0.9, np.float32)
+    avail = np.full(128, 8.0, np.float32)
+    avail[40:80] = 4.0                      # half the fleet fails
+    full = ctl.run_technique(plat, trace, "proposed")
+    deg = ctl.run_technique(plat, trace, "proposed", avail=avail)
+    assert deg.qos_violation_rate > full.qos_violation_rate
+    assert deg.mean_backlog > full.mean_backlog
+    assert deg.served_fraction < full.served_fraction
+
+
 def test_tpu_platform_controller_runs(trace):
     """The TPU adaptation: controller on roofline-derived terms."""
     plat = ctl.tpu_platform(t_compute=0.002, t_memory=0.012,

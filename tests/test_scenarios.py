@@ -40,55 +40,103 @@ def test_node_failure_schedule_quantized_by_elastic_plan():
     assert alive.shape == (512,)
     assert (alive >= 1).all() and (alive <= 8).all()
     assert alive.min() < 8          # failures actually happen
-    # every count is a usable (data × model) grid from the elastic plan
+    assert alive.max() == 8         # and the fleet recovers fully
+    # every degraded count is a usable (data × model) grid from the plan
     for a in np.unique(alive):
         d, m = elastic.shrink_mesh_plan(int(a), prefer_model=8)
         assert d * m == a, a
-    # failures concentrate demand on survivors
-    base = sc.trace(512, seed=0)
-    eff = sc.effective_trace(512, n_nodes=8, seed=0)
-    failed = alive < 8
-    assert failed.any()
-    assert (eff[failed] >= base[failed] - 1e-7).all()
-    assert eff[failed].mean() > base[failed].mean()
-    np.testing.assert_allclose(eff[~failed], base[~failed], atol=1e-6)
+
+
+def test_node_schedule_healthy_fleet_not_shrunk_to_power_of_two():
+    """Regression: with n_nodes=6 the power-of-two `prefer` used to
+    shrink even failure-free steps to a 4-node mesh — a healthy step
+    must yield the full configured fleet."""
+    sc = scn.get_scenario("node_failure")
+    for n_nodes in (6, 5, 12):
+        alive = sc.node_schedule(512, n_nodes=n_nodes, seed=0)
+        frac = np.clip(scn._failure_nodes(512, sc._rng(0, "/nodes")),
+                       0.0, 1.0)
+        healthy = np.round(frac * n_nodes) >= n_nodes
+        assert healthy.any()
+        assert (alive[healthy] == n_nodes).all(), n_nodes
+        # degraded steps are still plan-quantized below n_nodes
+        assert (alive[~healthy] < n_nodes).all(), n_nodes
+    # healthy scenarios are trivially full
+    assert (scn.get_scenario("burse").node_schedule(64, 6) == 6).all()
+
+
+def test_overlapping_failure_windows_respect_alive_floor():
+    """Many failure windows overlap on a long trace; the raw alive
+    fraction must clip at the 0.1 floor, never below (and node_schedule
+    must keep at least one usable node)."""
+    rng = np.random.default_rng(7)
+    frac = scn._failure_nodes(8192, rng)
+    assert frac.shape == (8192,)
+    assert (frac >= 0.1 - 1e-12).all() and (frac <= 1.0).all()
+    # evidence that windows actually overlapped: a single window drops
+    # at most 0.5, so any step below 0.5 saw at least two overlapping
+    # windows — and the deepest overlap bottomed out at the floor.
+    assert frac.min() < 0.5 - 1e-9
+    assert np.isclose(frac.min(), 0.1)
+    sc = scn.get_scenario("node_failure")
+    for n_nodes in (2, 8, 64):
+        alive = sc.node_schedule(4096, n_nodes=n_nodes, seed=7)
+        assert (alive >= 1).all() and (alive <= n_nodes).all(), n_nodes
 
 
 def test_build_suite_stacks_all_scenarios():
-    names, traces = scn.build_suite(n_steps=128, n_nodes=8, seed=3)
+    names, traces, avail = scn.build_suite(n_steps=128, n_nodes=8, seed=3)
     assert names == tuple(scn.SCENARIOS)
     assert traces.shape == (len(names), 128)
+    assert avail.shape == (len(names), 128)
     assert (traces >= 0.0).all() and (traces <= 1.0).all()
+    # availability: all-n_nodes for healthy scenarios, dips for failures
+    assert (avail >= 1).all() and (avail <= 8).all()
+    for i, name in enumerate(names):
+        if scn.SCENARIOS[name].nodes is None:
+            assert (avail[i] == 8).all(), name
+    k = names.index("node_failure")
+    assert avail[k].min() < 8
     with pytest.raises(KeyError, match="unknown scenario"):
         scn.build_suite(["no_such_scenario"], n_steps=64)
 
 
 def test_campaign_streaming_matches_materialized_path():
     """Per-scenario streamed summaries == the materialized simulate_fleet
-    reductions to ≤1e-5 on a shared scenario suite."""
+    reductions to ≤1e-5 on a shared scenario suite — including a
+    node_failure scenario whose availability schedule rides the chunks."""
     platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
     techniques = ("proposed", "power_gating")
-    names, traces = scn.build_suite(("burse", "flash_crowd"), n_steps=192)
+    names, traces, avail = scn.build_suite(
+        ("burse", "flash_crowd", "node_failure"), n_steps=192)
     cfg = ctl.ControllerConfig()
     params = char.stack_platform_params([p.params for p in platforms])
     tables = ctl.fleet_bin_tables(params, cfg, techniques)
     tab_n = ctl.BinTables(*[jnp.broadcast_to(
         x[:, :, None], x.shape[:2] + (len(names),) + x.shape[2:])
         for x in tables])
-    res = ctl.simulate_fleet(tab_n, traces[None, None], cfg)  # [P,T,N,S]
+    res = ctl.simulate_fleet(tab_n, traces[None, None], cfg,
+                             avail=avail[None, None])  # [P,T,N,S]
 
     out = scn.run_campaign(platforms, scenario_names=names,
                            techniques=techniques, n_steps=192,
                            chunk_size=50)
-    nominal = ctl.fleet_nominal_watts(params, cfg)
+    node_nom = ctl.fleet_node_nominal_watts(params, cfg)
+    nominal = node_nom * cfg.n_nodes
     for j, tech in enumerate(techniques):
         for k, scen in enumerate(names):
             cell = out["table"][platforms[0].name][tech][scen]
             power = np.asarray(res.power)[0, j, k]
             np.testing.assert_allclose(cell["mean_power_w"], power.mean(),
                                        rtol=1e-5, err_msg=(tech, scen))
+            np.testing.assert_allclose(cell["mean_avail_nodes"],
+                                       avail[k].mean(), rtol=1e-6)
             np.testing.assert_allclose(
-                cell["power_gain"], nominal[0] / power.mean(), rtol=1e-5)
+                cell["power_gain"],
+                node_nom[0] * avail[k].mean() / power.mean(), rtol=1e-5)
+            np.testing.assert_allclose(
+                cell["power_gain_vs_configured"],
+                nominal[0] / power.mean(), rtol=1e-5)
             np.testing.assert_allclose(
                 cell["qos_violation_rate"],
                 np.asarray(res.violations)[0, j, k].mean(), atol=1e-7)
@@ -96,6 +144,10 @@ def test_campaign_streaming_matches_materialized_path():
             served = offered - np.asarray(res.backlog)[0, j, k, -1]
             np.testing.assert_allclose(cell["served_fraction"],
                                        served / offered, rtol=1e-5)
+    # the failure scenario really was degraded, and its two gains differ
+    cell = out["table"][platforms[0].name]["proposed"]["node_failure"]
+    assert cell["mean_avail_nodes"] < cfg.n_nodes
+    assert cell["power_gain"] < cell["power_gain_vs_configured"]
 
 
 def test_campaign_zero_retrace_across_scenario_sweeps():
@@ -109,6 +161,70 @@ def test_campaign_zero_retrace_across_scenario_sweeps():
     scn.run_campaign(platforms, scenario_names=("ramp", "decay"), seed=5,
                      **kw)
     assert ctl.fleet_trace_counts() == before
+
+
+def test_availability_schedule_compiles_no_new_programs():
+    """Zero-retrace witness: after a healthy same-shaped sweep, an
+    availability-bearing sweep (node_failure schedule, explicit avail on
+    both fleet engines) adds no compiled programs — healthy fleets pass
+    an all-n_nodes schedule through the same [K, C]/[K, S] inputs."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    kw = dict(techniques=("proposed", "hybrid"), n_steps=160, chunk_size=64)
+    scn.run_campaign(platforms, scenario_names=("burse", "diurnal"), **kw)
+    cfg = ctl.ControllerConfig()
+    params = char.stack_platform_params([p.params for p in platforms])
+    tables = ctl.fleet_bin_tables(params, cfg, ("proposed", "hybrid"))
+    trace = scn.get_scenario("node_failure").trace(160, seed=0)
+    ctl.simulate_fleet(tables, trace, cfg)
+    ctl.simulate_fleet_stream(tables, trace, cfg, chunk_size=64)
+    before = ctl.fleet_trace_counts()
+    # failure-bearing campaign of the same shape
+    scn.run_campaign(platforms, scenario_names=("burse", "node_failure"),
+                     seed=2, **kw)
+    # explicit schedules through both fleet engines, same shapes
+    avail = scn.get_scenario("node_failure").node_schedule(160, cfg.n_nodes,
+                                                           seed=2)
+    ctl.simulate_fleet(tables, trace, cfg, avail=avail)
+    ctl.simulate_fleet_stream(tables, trace, cfg, chunk_size=64,
+                              avail=avail)
+    assert ctl.fleet_trace_counts() == before
+
+
+def test_failed_steps_price_strictly_below_full_availability():
+    """Acceptance: with the same controller state (identical bin
+    selections — the predictor sees only the workload), steps with
+    failed nodes draw strictly less fleet power than at full
+    availability (dead nodes contribute 0 W), and capacity clamps by
+    n_act/n_active instead of concentrating demand."""
+    cfg = ctl.ControllerConfig()
+    params = char.stack_platform_params(
+        [ctl.fpga_platform(ACCELERATORS["tabla"]).params])
+    tables = ctl.fleet_bin_tables(params, cfg, ("proposed", "power_gating"))
+    sc = scn.get_scenario("node_failure")
+    trace = sc.trace(384, seed=1)
+    avail = sc.node_schedule(384, cfg.n_nodes, seed=1).astype(np.float32)
+    assert (avail < cfg.n_nodes).any()
+    full = ctl.simulate_fleet(tables, trace, cfg)
+    deg = ctl.simulate_fleet(tables, trace, cfg, avail=avail)
+    # same workload → same predictor evolution → same selected bins
+    np.testing.assert_array_equal(np.asarray(deg.predicted_bin),
+                                  np.asarray(full.predicted_bin))
+    p_full = np.asarray(full.power)
+    p_deg = np.asarray(deg.power)
+    n_full = np.asarray(full.n_active)
+    failed = np.broadcast_to(avail, p_full.shape) < n_full  # lost capacity
+    assert failed.any()
+    assert (p_deg[failed] < p_full[failed]).all()
+    np.testing.assert_allclose(p_deg[~failed], p_full[~failed], rtol=1e-6)
+    # capacity clamps proportionally to surviving provisioned nodes
+    np.testing.assert_allclose(
+        np.asarray(deg.capacity),
+        np.asarray(full.capacity) * np.asarray(deg.n_active) / n_full,
+        rtol=1e-5)
+    # and n_active is the clamped count
+    np.testing.assert_array_equal(
+        np.asarray(deg.n_active),
+        np.minimum(n_full, np.broadcast_to(avail, p_full.shape)))
 
 
 def test_streaming_shards_fleet_axis_across_devices():

@@ -253,6 +253,64 @@ def test_closed_loop_occupancy_responds_to_throttle():
                                nom["occupancy_tau"])
 
 
+def test_node_schedule_throttles_serving_and_unpowers_dead_chips():
+    """Availability in the closed serving loop: a failure window clamps
+    the batcher's delivered throughput (measured latency p50/p99 react),
+    dead chips draw no power during the window, and the Summary reports
+    both the available- and configured-fleet baselines."""
+    lam = np.full(768, 1.0)
+    healthy = _closed_loop_sim("proposed").run_request_load(
+        lam, batch_size=32, mean_new_tokens=8)
+    # 48 τ intervals of arrivals; chips die for a mid-run window
+    sched = np.full(48, 8.0)
+    sched[16:40] = 3.0
+    failed = _closed_loop_sim("proposed").run_request_load(
+        lam, batch_size=32, mean_new_tokens=8, node_schedule=sched)
+    n_tau = len(healthy["avail_tau"])
+    np.testing.assert_array_equal(healthy["avail_tau"], np.full(n_tau, 8.0))
+    win = np.asarray(failed["avail_tau"]) < 8.0
+    assert win.any()
+    # the window really throttles delivered throughput below healthy
+    thr_h = np.asarray(healthy["throughput_tau"])
+    thr_f = np.asarray(failed["throughput_tau"])[:len(thr_h)]
+    assert thr_f[win[:len(thr_h)]].max() <= 3.0 / 8.0 + 1e-9
+    # ... so requests queue up and measured tail latency rises
+    assert failed["summary"].latency_p99 > healthy["summary"].latency_p99
+    assert failed["summary"].latency_p50 >= healthy["summary"].latency_p50
+    # dead chips draw 0 W: window power is bounded by the survivors'
+    # nominal share of the fleet
+    import repro.core.controller as ctl
+    sim = _closed_loop_sim("proposed")
+    node_nom = (ctl.nominal_node_watts(sim.platform)
+                + ctl.pll_standing_watts(sim.cfg))
+    pw = np.asarray(failed["power_tau"])
+    assert (pw[win[:len(pw)]] <= 3.0 * node_nom + 1e-6).all()
+    # Summary baselines: available < configured, and the gap matches the
+    # τ-weighted mean availability
+    s = failed["summary"]
+    assert s.nominal_power_w < s.nominal_power_configured_w
+    wts = np.asarray(failed["tau_weights"])
+    mean_avail = float(np.average(failed["avail_tau"], weights=wts))
+    assert s.nominal_power_w == pytest.approx(node_nom * mean_avail)
+    assert s.power_gain < s.power_gain_vs_configured
+    # open loop ignores the controller's throttle but not dead chips:
+    # the outage window still caps delivered throughput at avail/n_nodes
+    ol = _closed_loop_sim("proposed").run_request_load(
+        lam, batch_size=32, mean_new_tokens=8, node_schedule=sched,
+        closed_loop=False)
+    thr_ol = np.asarray(ol["throughput_tau"])
+    win_ol = np.asarray(ol["avail_tau"]) < 8.0
+    assert thr_ol[win_ol].max() <= 3.0 / 8.0 + 1e-9
+    assert thr_ol[~win_ol].min() == 1.0
+    with pytest.raises(ValueError, match="non-empty"):
+        _closed_loop_sim("proposed").run_request_load(
+            lam[:64], node_schedule=np.asarray([]))
+    # total outage is refused, not silently clipped to one chip
+    with pytest.raises(ValueError, match=">= 1"):
+        _closed_loop_sim("proposed").run_request_load(
+            lam[:64], node_schedule=np.asarray([8.0, 0.0, 8.0]))
+
+
 def test_request_driven_workload_diverges_from_synthetic_under_bursts():
     """The occupancy-derived workload mixture (workload_signal='demand')
     measurably diverges from the synthetic arrival fraction when arrivals
