@@ -2,9 +2,13 @@
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--steps N] [--only SUBSTRS]
 Prints ``name,us_per_call,derived`` CSV rows (derived = the table's
-headline metric) and writes the same rows to ``BENCH_fleet.json`` so the
-perf trajectory is trackable across PRs.  ``--only table2,fleet`` with
-``--steps 64`` is the CI smoke subset.
+headline metric; derived-only rows leave ``us_per_call`` empty in the
+CSV and ``null`` in the JSON) and writes the same rows to
+``BENCH_fleet.json`` so the perf trajectory is trackable across PRs.
+``--only table2,fleet`` with ``--steps 64`` is the CI smoke subset.
+``--cache-dir DIR`` turns on the persistent JAX compilation cache
+(``repro.core.aot``) so repeat runs skip XLA compilation of the fleet
+programs — the committed ``BENCH_fleet.json`` is generated that way.
 """
 
 from __future__ import annotations
@@ -59,7 +63,7 @@ def bench_table2():
             rows.append((f"table2/{name}/{tech}", dt, derived))
     for tech in ("proposed", "core_only", "bram_only"):
         avg = float(np.mean(gains[tech]))
-        rows.append((f"table2/average/{tech}", 0.0,
+        rows.append((f"table2/average/{tech}", None,
                      f"gain={avg:.2f}x;paper="
                      f"{PAPER_TABLE_II[tech]['average']}x"))
     return rows
@@ -73,7 +77,7 @@ def bench_fig4_workload_sweep():
         trace = np.full(256, load)
         for tech in ("proposed", "core_only", "bram_only", "power_gating"):
             s = ctl.run_technique(plat, trace, tech, n_nodes=64)
-            rows.append((f"fig4/load{load:.1f}/{tech}", 0.0,
+            rows.append((f"fig4/load{load:.1f}/{tech}", None,
                          f"gain={s.power_gain:.2f}x"))
     return rows
 
@@ -86,7 +90,7 @@ def bench_fig5_alpha_sweep():
         plat = ctl.analytic_platform(alpha=alpha, beta=0.4)
         for tech in ("proposed", "core_only", "bram_only"):
             s = ctl.run_technique(plat, trace, tech)
-            rows.append((f"fig5/alpha{alpha:.1f}/{tech}", 0.0,
+            rows.append((f"fig5/alpha{alpha:.1f}/{tech}", None,
                          f"gain={s.power_gain:.2f}x"))
     return rows
 
@@ -99,7 +103,7 @@ def bench_fig6_beta_sweep():
         plat = ctl.analytic_platform(alpha=0.2, beta=beta)
         for tech in ("proposed", "core_only", "bram_only"):
             s = ctl.run_technique(plat, trace, tech)
-            rows.append((f"fig6/beta{beta:.2f}/{tech}", 0.0,
+            rows.append((f"fig6/beta{beta:.2f}/{tech}", None,
                          f"gain={s.power_gain:.2f}x"))
     return rows
 
@@ -132,7 +136,7 @@ def bench_fig12_per_accelerator_traces():
         res = ctl.simulate(plat, ctl.ControllerConfig(), trace)
         s = ctl.summarize(plat, ctl.ControllerConfig(), trace, res)
         vb = np.asarray(res.v_bram)
-        rows.append((f"fig12/{name}", 0.0,
+        rows.append((f"fig12/{name}", None,
                      f"gain={s.power_gain:.2f}x;min_vbram={vb.min():.2f}"))
     return rows
 
@@ -282,7 +286,7 @@ def bench_campaign():
     scn.run_campaign(platforms, scenario_names=names, techniques=techniques,
                      n_steps=N_STEPS, chunk_size=chunk, seed=1)
     delta = ctl.fleet_trace_counts()["stream"] - before
-    rows.append(("campaign/stream_reuse", 0.0,
+    rows.append(("campaign/stream_reuse", None,
                  f"retraces={delta};chunk={chunk}"))
     return rows
 
@@ -322,7 +326,7 @@ def bench_failure():
                      f";vs_cfg={np.mean([c['power_gain_vs_configured'] for c in cell]):.2f}x"
                      f";avail={np.mean([c['mean_avail_nodes'] for c in cell]):.2f}"
                      f";qos_viol={np.mean([c['qos_violation_rate'] for c in cell]):.3f}"))
-    rows.append(("failure/stream_reuse", 0.0,
+    rows.append(("failure/stream_reuse", None,
                  f"retraces={delta};chunk={chunk}"))
     return rows
 
@@ -341,7 +345,7 @@ def bench_replay():
     replays = ("replay_azure_vm_cpu", "replay_google_cluster", "cloud_mix")
     missing = [n for n in replays if n not in scn.SCENARIOS]
     if missing:
-        return [("replay/skipped", 0.0, f"no bundled traces: {missing}")]
+        return [("replay/skipped", None, f"no bundled traces: {missing}")]
     platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
     techniques = ("proposed", "power_gating", "hybrid")
     chunk = max(min(N_STEPS, 512), 1)
@@ -361,10 +365,10 @@ def bench_replay():
                      f"prop={row['proposed'][scen]['power_gain']:.2f}x"
                      f";hyb={row['hybrid'][scen]['power_gain']:.2f}x"
                      f";qos={row['proposed'][scen]['qos_violation_rate']:.3f}"))
-    rows.append(("replay/stream_reuse", 0.0,
+    rows.append(("replay/stream_reuse", None,
                  f"retraces={delta};chunk={chunk}"))
     for n, s in sorted(tr.bundled_sources().items()):
-        rows.append((f"replay/source/{n}", 0.0,
+        rows.append((f"replay/source/{n}", None,
                      f"samples={s.n_samples};interval_s={s.interval_s:g}"
                      f";mean={s.utilization.mean():.3f}"))
     return rows
@@ -390,12 +394,114 @@ def bench_voltage_optimizer():
             ("voltage_opt/runtime_lookup", lookup_us, "runtime_path")]
 
 
+def _cold_probe(cache_dir: str) -> None:
+    """Child-process body for :func:`bench_cold` (``--cold-probe DIR``).
+
+    Runs the two cold paths — the 25-bin table build and the batched
+    fleet first call — in a *fresh* process with the persistent
+    compilation cache pointed at ``cache_dir``, and prints the seconds
+    as JSON.  The parent runs this twice against the same directory:
+    first with an empty cache (true cold), then again (warm: same trace
+    cost, compilation served from disk).
+    """
+    from repro.core import aot
+    aot.enable_compilation_cache(cache_dir)
+    plat = ctl.fpga_platform(ACCELERATORS["tabla"])
+    grids = volt.VoltageGrids.default()
+    levels = volt.bin_frequency_levels(25, 0.05)
+    t0 = time.perf_counter()
+    volt.build_operating_table(plat.delay_fn, plat.power_fn, levels,
+                               grids).power.block_until_ready()
+    t_table = time.perf_counter() - t0
+    platforms = [ctl.fpga_platform(ACCELERATORS[n])
+                 for n in ("tabla", "stripes")]
+    trace = _trace(min(N_STEPS, 256))
+    t0 = time.perf_counter()
+    ctl.compare_all_batched(platforms, trace)
+    t_fleet = time.perf_counter() - t0
+    print(json.dumps({"table_s": t_table, "fleet_s": t_fleet}))
+
+
+def bench_cold():
+    """Cold-path cost with the persistent compilation cache, cold vs warm.
+
+    Spawns two fresh interpreters against one just-created cache
+    directory: the first pays trace + XLA compile and populates the
+    cache, the second pays trace + disk hit.  The warm/cold ratio is the
+    ``--cache-dir`` payoff a user sees on their second-ever run.
+    """
+    import shutil
+    import subprocess
+    import tempfile
+    cache = tempfile.mkdtemp(prefix="repro-jax-cache-")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), env.get("PYTHONPATH")) if p)
+    cmd = [sys.executable, "-m", "benchmarks.run", "--cold-probe", cache,
+           "--steps", str(N_STEPS)]
+    try:
+        runs = []
+        for _ in range(2):
+            out = subprocess.run(cmd, cwd=root, env=env, check=True,
+                                 capture_output=True, text=True).stdout
+            runs.append(json.loads(out.strip().splitlines()[-1]))
+        cold, warm = runs
+        return [
+            ("cold/table_build_first_call", cold["table_s"] * 1e6,
+             f"warm_cache_us={warm['table_s'] * 1e6:.0f}"
+             f";speedup={cold['table_s'] / warm['table_s']:.1f}x"),
+            ("cold/fleet_first_call", cold["fleet_s"] * 1e6,
+             f"warm_cache_us={warm['fleet_s'] * 1e6:.0f}"
+             f";speedup={cold['fleet_s'] / warm['fleet_s']:.1f}x"),
+        ]
+    finally:
+        shutil.rmtree(cache, ignore_errors=True)
+
+
+def bench_composition():
+    """Fleet-composition search: candidate mixes × scenarios, one sweep.
+
+    The whole candidate batch rides the same two compiled fleet programs
+    (run in two halves — the second half must not retrace).  Reports the
+    per-cell cost and the per-scenario Pareto-set sizes.
+    """
+    from repro.core import composition as comp
+    platforms = [ctl.fpga_platform(ACCELERATORS[n])
+                 for n in ("tabla", "stripes")]
+    scenarios = ("burse", "diurnal")
+    cand = comp.enumerate_candidates(len(platforms), 6, 48)
+    t0 = time.perf_counter()
+    res = comp.search_fleet_composition(
+        platforms, cand, scenarios, n_steps=N_STEPS,
+        chunk_size=max(min(N_STEPS, 512), 1))
+    dt = time.perf_counter() - t0
+    cells = cand.shape[0] * len(platforms) * len(scenarios)
+    pareto = ";".join(f"pareto_{s}={len(res.pareto[s])}" for s in scenarios)
+    rows = [("composition/sweep", dt / cells * 1e6,
+             f"cands={cand.shape[0]};{pareto}"
+             f";retraces={res.retraces_second_half}")]
+    for i, s in enumerate(scenarios):
+        # Knee of the front: cheapest-power mix that still holds QoS
+        # (falls back to the least-violating point if none does).
+        idx = res.pareto[s]
+        ok = [j for j in idx if res.qos_violation_rate[j, i] <= 0.25]
+        j = ok[0] if ok else min(idx,
+                                 key=lambda j: res.qos_violation_rate[j, i])
+        rows.append((f"composition/knee/{s}", None,
+                     "mix=" + "x".join(str(int(v))
+                                       for v in res.candidates[j])
+                     + f";power_w={res.total_power_w[j, i]:.1f}"
+                     f";qos_viol={res.qos_violation_rate[j, i]:.3f}"))
+    return rows
+
+
 def bench_tpu_serving():
     """TPU adaptation: controller on *measured* roofline terms per arch."""
     path = os.path.join(os.path.dirname(__file__), "dryrun_results.jsonl")
     rows = []
     if not os.path.exists(path):
-        return [("tpu_serving/skipped", 0.0, "no dryrun_results.jsonl")]
+        return [("tpu_serving/skipped", None, "no dryrun_results.jsonl")]
     cells = [json.loads(l) for l in open(path)]
     trace = _trace(512, seed=3)
     from repro.serving.autoscale import RooflineTerms, compare_techniques
@@ -413,7 +519,7 @@ def bench_tpu_serving():
                               rf["t_collective_s"])
         out = compare_techniques(terms, trace)
         g = {k: v.power_gain for k, v in out.items()}
-        rows.append((f"tpu_serving/{r['arch']}/{r['shape']}", 0.0,
+        rows.append((f"tpu_serving/{r['arch']}/{r['shape']}", None,
                      f"prop={g['proposed']:.2f}x;core={g['core_only']:.2f}x"
                      f";hbm={g['bram_only']:.2f}x"
                      f";pg={g['power_gating']:.2f}x"
@@ -427,7 +533,8 @@ BENCHES = [bench_fleet, bench_table2, bench_fig4_workload_sweep,
            bench_fig5_alpha_sweep, bench_fig6_beta_sweep, bench_fig10_trace,
            bench_fig12_per_accelerator_traces, bench_predictor,
            bench_hybrid, bench_campaign, bench_failure, bench_replay,
-           bench_voltage_optimizer, bench_tpu_serving]
+           bench_voltage_optimizer, bench_composition, bench_cold,
+           bench_tpu_serving]
 
 
 def main(argv=None) -> None:
@@ -442,8 +549,19 @@ def main(argv=None) -> None:
                     "defaults to BENCH_fleet.json for full default runs "
                     "and off for --only/--steps subsets (so smoke runs "
                     "don't clobber the tracked perf record)")
+    ap.add_argument("--cache-dir", type=str, default="",
+                    help="persistent JAX compilation-cache directory "
+                    "(repro.core.aot) — repeat runs skip XLA compilation")
+    ap.add_argument("--cold-probe", type=str, default="",
+                    help=argparse.SUPPRESS)  # bench_cold child entry point
     args = ap.parse_args(argv)
     N_STEPS = args.steps
+    if args.cold_probe:
+        _cold_probe(args.cold_probe)
+        return
+    if args.cache_dir:
+        from repro.core import aot
+        aot.enable_compilation_cache(args.cache_dir)
     only = [s for s in args.only.split(",") if s]
     if args.json is None:
         args.json = "" if (only or N_STEPS != 1024) else "BENCH_fleet.json"
@@ -455,9 +573,11 @@ def main(argv=None) -> None:
             continue
         try:
             for name, us, derived in bench():
-                results[name] = {"us_per_call": round(us, 1),
+                results[name] = {"us_per_call":
+                                 None if us is None else round(us, 1),
                                  "derived": derived}
-                print(f"{name},{us:.1f},{derived}", flush=True)
+                us_s = "" if us is None else f"{us:.1f}"
+                print(f"{name},{us_s},{derived}", flush=True)
         except Exception as e:  # noqa: BLE001
             results[bench.__name__] = {"us_per_call": None,
                                        "derived":

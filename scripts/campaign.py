@@ -65,6 +65,14 @@ def main(argv=None) -> int:
                     help="comma list of accelerator names, 'tpu', or 'all'")
     ap.add_argument("--n-nodes", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-dir", type=str, default="",
+                    help="persistent JAX compilation-cache directory "
+                    "(core.aot): repeat campaigns skip XLA compilation "
+                    "of the fleet programs entirely")
+    ap.add_argument("--warm", action="store_true",
+                    help="AOT-compile the two fleet programs for this "
+                    "campaign's shapes before running (populates "
+                    "--cache-dir at setup time, not first-use time)")
     ap.add_argument("--json", type=str, default="",
                     help="write the campaign table to this path")
     ap.add_argument("--trace", type=str, default="",
@@ -112,6 +120,23 @@ def main(argv=None) -> int:
     techniques = tuple(t for t in args.techniques.split(",") if t)
     if registered is not None and names is not None:
         names += (registered.name,)
+
+    if args.cache_dir:
+        from repro.core import aot
+        print(f"# compilation cache: "
+              f"{aot.enable_compilation_cache(args.cache_dir)}")
+    if args.warm:
+        from repro.core import aot
+        from repro.core import characterization as char
+        params = char.stack_platform_params([p.params for p in platforms])
+        cfg = ctl.ControllerConfig(n_nodes=args.n_nodes)
+        n_scen = len(names) if names is not None else len(scn.SCENARIOS)
+        t = aot.warm_fleet_programs(
+            params, cfg, techniques,
+            fleet_shape=(len(platforms), len(techniques), n_scen),
+            chunk_size=min(args.chunk, args.steps))
+        print(f"# warmed fleet programs: tables {t['tables_compile_s']:.2f}s"
+              f", stream {t['stream_compile_s']:.2f}s")
 
     t0 = time.perf_counter()
     out = scn.run_campaign(platforms, scenario_names=names,

@@ -35,6 +35,7 @@ from repro.core import pll as pll_mod
 from repro.core import predictor as pred_mod
 from repro.core import voltage as volt_mod
 from repro.core.accelerators import Accelerator
+from repro.kernels.grid_argmin import grid_argmin as grid_argmin_op
 from repro.parallel import sharding as shd
 
 Array = jax.Array
@@ -595,14 +596,13 @@ def _fleet_dvfs_tables_jit(params: char.PlatformParams, masks: Array,
     ``levels`` is [R, M] — a row per DVFS technique *plus* one per hybrid
     node-count gear (the node axis rides the same masked sweep); returns
     an :class:`~repro.core.voltage.OperatingPoint` with [P, R, M] fields.
+
+    The sweep body is the fused ``kernels.grid_argmin`` op: Pallas on
+    TPU/GPU, its lax reference on CPU (both match the closure optimizer
+    to ≤ 1e-5 — ``tests/test_kernels_grid_argmin.py``).
     """
     _TRACE_COUNTS["tables"] += 1  # Python side effect → counts tracings only
-
-    def per_platform(p):
-        return jax.vmap(lambda mk, lv: volt_mod.optimize_batch_params(
-            p, lv, core_grid, bram_grid, mk))(masks, levels)
-
-    return jax.vmap(per_platform)(params)
+    return grid_argmin_op(params, masks, levels, core_grid, bram_grid)
 
 
 @jax.jit
@@ -610,6 +610,33 @@ def _fleet_nominal_watts_jit(params: char.PlatformParams) -> Array:
     return jax.vmap(lambda p: char.params_power_watts(
         p, jnp.asarray(char.V_CORE_NOM), jnp.asarray(char.V_BRAM_NOM),
         jnp.asarray(1.0)))(params)
+
+
+def _sweep_rows(cfg: ControllerConfig, techniques: Sequence[str]
+                ) -> Tuple[volt_mod.VoltageGrids, Array, Array, Array]:
+    """Masked sweep rows for :func:`_fleet_dvfs_tables_jit`.
+
+    One row per DVFS technique; the hybrid node-count axis is expressed
+    as extra rows (full grid mask, per-gear frequencies), so everything
+    stays inside the one shape-keyed jitted program.  Returns
+    ``(grids, levels [M], row_masks [R, C, B], row_levels [R, M])`` —
+    shared by :func:`fleet_bin_tables` and the AOT warmer
+    (``core.aot.warm_fleet_programs``), so ahead-of-time compiles see
+    byte-identical shapes to the live path.
+    """
+    dvfs = [t for t in techniques
+            if t not in ("nominal", "power_gating", "hybrid")]
+    grids = volt_mod.VoltageGrids.default(cfg.v_step)
+    levels = volt_mod.bin_frequency_levels(cfg.n_bins, cfg.margin,
+                                           cfg.f_floor)
+    row_masks = [volt_mod.technique_grid_mask(t, grids) for t in dvfs]
+    row_levels = [levels] * len(dvfs)
+    if "hybrid" in techniques:
+        gears, f_node, _ = _hybrid_gears(cfg)
+        full_mask = volt_mod.technique_grid_mask("hybrid", grids)
+        row_masks += [full_mask] * gears.shape[0]
+        row_levels += list(f_node)
+    return grids, levels, jnp.stack(row_masks), jnp.stack(row_levels)
 
 
 def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
@@ -631,20 +658,10 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
             if t not in ("nominal", "power_gating", "hybrid")]
     hybrid = "hybrid" in techniques
     if dvfs or hybrid:
-        grids = volt_mod.VoltageGrids.default(cfg.v_step)
-        levels = volt_mod.bin_frequency_levels(m, cfg.margin, cfg.f_floor)
-        # One sweep row per DVFS technique; the hybrid node-count axis is
-        # expressed as extra rows (full grid mask, per-gear frequencies),
-        # so everything stays inside the one shape-keyed jitted program.
-        row_masks = [volt_mod.technique_grid_mask(t, grids) for t in dvfs]
-        row_levels = [levels] * len(dvfs)
+        grids, levels, row_masks, row_levels = _sweep_rows(cfg, techniques)
         if hybrid:
             gears, f_node, gear_ok = _hybrid_gears(cfg)
-            full_mask = volt_mod.technique_grid_mask("hybrid", grids)
-            row_masks += [full_mask] * gears.shape[0]
-            row_levels += list(f_node)
-        pts = _fleet_dvfs_tables_jit(params, jnp.stack(row_masks),
-                                     jnp.stack(row_levels),
+        pts = _fleet_dvfs_tables_jit(params, row_masks, row_levels,
                                      grids.core, grids.bram)
         node_w = pts.power * params.watts_scale[:, None, None]  # [P, R, M]
         n_full = jnp.full((n_p, m), float(cfg.n_nodes))

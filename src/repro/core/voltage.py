@@ -126,6 +126,41 @@ class VoltageGrids:
                             bram=jnp.array([char.V_BRAM_NOM]))
 
 
+# Registered as a pytree so the grids can ride *traced* jit arguments:
+# the table-build cache is then keyed on grid shapes (13×19, 13×1, ...)
+# rather than on unhashable Array identity.
+jax.tree_util.register_pytree_node(
+    VoltageGrids,
+    lambda g: ((g.core, g.bram), None),
+    lambda _, leaves: VoltageGrids(core=leaves[0], bram=leaves[1]))
+
+
+def masked_grid_argmin(power: Array, feasible: Array,
+                       core_grid: Array, bram_grid: Array, f_rel: Array,
+                       fallback_power: Array) -> OperatingPoint:
+    """Select the minimum-power feasible grid point — the one argmin.
+
+    ``power``/``feasible`` are [C, B] over the (core × bram) grid.  Ties
+    break toward the lowest row-major flat index (``jnp.argmin`` keeps the
+    first minimum), so the closure path (:func:`optimize_point`), the
+    array-parameterized path (:func:`optimize_point_params`), and the
+    Pallas kernel's reference (``kernels.grid_argmin.ref``) all pick the
+    *identical* grid point on tied objectives.  When nothing is feasible
+    the point falls back to nominal rails (``grid[-1]`` — grids ascend)
+    at ``fallback_power``.
+    """
+    masked = jnp.where(feasible, power, jnp.inf)
+    flat_idx = jnp.argmin(masked.reshape(-1))
+    ci, bi = jnp.unravel_index(flat_idx, masked.shape)
+    any_feasible = jnp.any(feasible)
+
+    v_core = jnp.where(any_feasible, core_grid[ci], core_grid[-1])
+    v_bram = jnp.where(any_feasible, bram_grid[bi], bram_grid[-1])
+    p = jnp.where(any_feasible, masked.reshape(-1)[flat_idx], fallback_power)
+    return OperatingPoint(v_core=v_core, v_bram=v_bram, f_rel=f_rel,
+                          power=p, feasible=any_feasible)
+
+
 def optimize_point(delay_fn: DelayFn, power_fn: PowerFn, f_rel: Array,
                    grids: VoltageGrids,
                    slack_eps: float = 1e-6) -> OperatingPoint:
@@ -144,20 +179,11 @@ def optimize_point(delay_fn: DelayFn, power_fn: PowerFn, f_rel: Array,
     power = power_fn(vc, vb, f_rel)  # [C, B]
     delay, power = jnp.broadcast_arrays(delay, power)
 
-    feasible = delay <= stretch * (1.0 + slack_eps)
-    masked = jnp.where(feasible, power, jnp.inf)
-    flat_idx = jnp.argmin(masked.reshape(-1))
-    ci, bi = jnp.unravel_index(flat_idx, masked.shape)
-    any_feasible = jnp.any(feasible)
-
     # Fall back to nominal voltages when nothing on the grid meets timing
     # (cannot happen for f_rel <= 1 with sane grids, but keep it total).
-    v_core = jnp.where(any_feasible, grids.core[ci], grids.core[-1])
-    v_bram = jnp.where(any_feasible, grids.bram[bi], grids.bram[-1])
-    p = jnp.where(any_feasible, masked.reshape(-1)[flat_idx],
-                  power_fn(grids.core[-1], grids.bram[-1], f_rel))
-    return OperatingPoint(v_core=v_core, v_bram=v_bram, f_rel=f_rel,
-                          power=p, feasible=any_feasible)
+    return masked_grid_argmin(
+        power, delay <= stretch * (1.0 + slack_eps), grids.core, grids.bram,
+        f_rel, power_fn(grids.core[-1], grids.bram[-1], f_rel))
 
 
 def optimize_batch(delay_fn: DelayFn, power_fn: PowerFn, f_rels: Array,
@@ -214,28 +240,21 @@ def optimize_point_params(params: "char.PlatformParams", f_rel: Array,
     delay = char.params_delay(params, vc, vb)         # [C, B]
     power = char.params_power(params, vc, vb, f_rel)  # [C, B]
 
-    feasible = (delay <= stretch * (1.0 + slack_eps)) & mask
-    masked = jnp.where(feasible, power, jnp.inf)
-    flat_idx = jnp.argmin(masked.reshape(-1))
-    ci, bi = jnp.unravel_index(flat_idx, masked.shape)
-    any_feasible = jnp.any(feasible)
-
-    v_core = jnp.where(any_feasible, core_grid[ci], core_grid[-1])
-    v_bram = jnp.where(any_feasible, bram_grid[bi], bram_grid[-1])
-    p = jnp.where(any_feasible, masked.reshape(-1)[flat_idx],
-                  char.params_power(params, core_grid[-1], bram_grid[-1],
-                                    f_rel))
-    return OperatingPoint(v_core=v_core, v_bram=v_bram, f_rel=f_rel,
-                          power=p, feasible=any_feasible)
+    return masked_grid_argmin(
+        power, (delay <= stretch * (1.0 + slack_eps)) & mask,
+        core_grid, bram_grid, f_rel,
+        char.params_power(params, core_grid[-1], bram_grid[-1], f_rel))
 
 
 def optimize_batch_params(params: "char.PlatformParams", f_rels: Array,
                           core_grid: Array, bram_grid: Array,
-                          mask: Array) -> OperatingPoint:
+                          mask: Array,
+                          slack_eps: float = 1e-6) -> OperatingPoint:
     """vmap of :func:`optimize_point_params` over frequency levels."""
     return jax.vmap(
         lambda f: optimize_point_params(params, f, core_grid, bram_grid,
-                                        mask))(jnp.asarray(f_rels))
+                                        mask, slack_eps=slack_eps)
+        )(jnp.asarray(f_rels))
 
 
 # ---------------------------------------------------------------------------
@@ -263,7 +282,7 @@ class OperatingTable(NamedTuple):
                               feasible=jnp.asarray(True))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 3))
+@functools.partial(jax.jit, static_argnums=(0, 1))
 def _build_table_jit(delay_fn, power_fn, f_levels, grids):
     return optimize_batch(delay_fn, power_fn, f_levels, grids)
 
@@ -271,10 +290,16 @@ def _build_table_jit(delay_fn, power_fn, f_levels, grids):
 def build_operating_table(delay_fn: DelayFn, power_fn: PowerFn,
                           f_levels: Array, grids: VoltageGrids | None = None
                           ) -> OperatingTable:
-    """Precompute the optimal (V_core, V_bram) per frequency level."""
+    """Precompute the optimal (V_core, V_bram) per frequency level.
+
+    Runs through :func:`_build_table_jit` so repeat synthesis for the
+    same platform closures (the common case: one table per technique,
+    rebuilt per campaign) amortizes to a cache hit instead of re-paying
+    the eager per-op sweep every call.
+    """
     grids = VoltageGrids.default() if grids is None else grids
     f_levels = jnp.sort(jnp.asarray(f_levels))
-    pts = optimize_batch(delay_fn, power_fn, f_levels, grids)
+    pts = _build_table_jit(delay_fn, power_fn, f_levels, grids)
     return OperatingTable(f_levels=f_levels, v_core=pts.v_core,
                           v_bram=pts.v_bram, power=pts.power)
 

@@ -1,0 +1,38 @@
+"""Pure-lax oracle for the fused masked grid-argmin sweep.
+
+This is the pre-kernel implementation of the fleet table sweep
+(`controller._fleet_dvfs_tables_jit`): a ``vmap`` pyramid over
+:func:`repro.core.voltage.optimize_point_params`, whose selection rule is
+the shared :func:`repro.core.voltage.masked_grid_argmin` helper.  The
+Pallas kernel must match this path to ≤ 1e-5 on every platform ×
+technique (``tests/test_kernels_grid_argmin.py``), including the
+first-flat-index tie-break on tied objectives.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import characterization as char
+from repro.core import voltage as volt
+
+Array = jax.Array
+
+
+def grid_argmin_ref(params: char.PlatformParams, masks: Array,
+                    levels: Array, core_grid: Array, bram_grid: Array,
+                    slack_eps: float = 1e-6) -> volt.OperatingPoint:
+    """Masked grid sweep + per-bin argmin for a whole fleet.
+
+    ``params`` leaves are stacked ``[P, ...]``; ``masks`` is ``[R, C, B]``
+    (one row per DVFS technique / hybrid gear) and ``levels`` is
+    ``[R, M]``.  Returns an :class:`~repro.core.voltage.OperatingPoint`
+    with ``[P, R, M]`` fields.
+    """
+
+    def per_platform(p):
+        return jax.vmap(lambda mk, lv: volt.optimize_batch_params(
+            p, lv, core_grid, bram_grid, mk, slack_eps=slack_eps)
+        )(masks, levels)
+
+    return jax.vmap(per_platform)(params)

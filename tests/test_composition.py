@@ -1,0 +1,117 @@
+"""Fleet-composition search: Pareto, budget gates, zero-retrace witness."""
+
+import numpy as np
+import pytest
+
+from repro.core import composition as comp
+from repro.core import controller as ctl
+from repro.core.accelerators import ACCELERATORS
+
+STEPS, CHUNK = 192, 64
+
+
+def _platforms(names=("tabla", "stripes")):
+    return [ctl.fpga_platform(ACCELERATORS[n]) for n in names]
+
+
+@pytest.fixture(scope="module")
+def small_search():
+    plats = _platforms()
+    cand = comp.enumerate_candidates(len(plats), 3, 64)
+    res = comp.search_fleet_composition(plats, cand, ("burse", "diurnal"),
+                                        n_steps=STEPS, chunk_size=CHUNK)
+    return cand, res
+
+
+def test_enumerate_candidates_lattice_and_sampled():
+    full = comp.enumerate_candidates(2, 3, 64)
+    assert full.shape == (15, 2)  # 4*4 lattice minus the all-zero fleet
+    assert (full.sum(axis=1) > 0).all()
+    sampled = comp.enumerate_candidates(3, 8, 50, seed=1)
+    assert sampled.shape == (50, 3)
+    assert len({tuple(r) for r in sampled}) == 50  # unique
+    assert (sampled.sum(axis=1) > 0).all()
+
+
+def test_pareto_front_mask():
+    obj = np.array([[1.0, 5.0], [2.0, 2.0], [3.0, 3.0], [5.0, 1.0]])
+    np.testing.assert_array_equal(comp.pareto_front(obj),
+                                  [True, True, False, True])
+    # Duplicated rows don't dominate each other.
+    dup = np.array([[1.0, 1.0], [1.0, 1.0]])
+    assert comp.pareto_front(dup).all()
+
+
+def test_second_half_adds_no_retraces(small_search):
+    _, res = small_search
+    assert res.retraces_second_half == 0
+
+
+def test_pareto_sets_are_nondominated(small_search):
+    _, res = small_search
+    for s, scen in enumerate(res.scenario_names):
+        idx = res.pareto[scen]
+        assert len(idx) > 0
+        obj = np.stack([res.total_power_w[:, s],
+                        res.qos_violation_rate[:, s], res.cost], axis=1)
+        sel = obj[idx]
+        # No selected point dominates another selected point.
+        mask = comp.pareto_front(sel)
+        assert mask.all()
+        # And every non-selected point is dominated by some selected one.
+        rest = np.setdiff1d(np.arange(obj.shape[0]), idx)
+        for r in rest[:32]:
+            dominated = ((sel <= obj[r]).all(axis=1)
+                         & (sel < obj[r]).any(axis=1)).any()
+            assert dominated, f"candidate {r} missing from {scen} front"
+        # Sorted by mean power, ascending.
+        assert (np.diff(res.total_power_w[idx, s]) >= 0).all()
+
+
+def test_more_nodes_never_raises_qos_violations(small_search):
+    """A strict superset fleet serves at least as well (same demand)."""
+    cand, res = small_search
+    by_mix = {tuple(map(int, c)): i for i, c in enumerate(res.candidates)}
+    small, big = by_mix[(1, 1)], by_mix[(3, 3)]
+    assert (res.qos_violation_rate[big] <= res.qos_violation_rate[small]
+            + 1e-6).all()
+    assert (res.served_fraction[big] >= res.served_fraction[small]
+            - 1e-6).all()
+
+
+def test_budget_gates_drop_candidates():
+    plats = _platforms()
+    cand = comp.enumerate_candidates(len(plats), 3, 64)
+    budget = comp.CompositionBudget(max_cost=3.0)
+    res = comp.search_fleet_composition(plats, cand, ("burse",), budget,
+                                        n_steps=STEPS, chunk_size=CHUNK)
+    assert res.n_rejected > 0
+    assert res.candidates.shape[0] + res.n_rejected == cand.shape[0]
+    assert (res.cost <= 3.0).all()
+    with pytest.raises(ValueError, match="budget"):
+        comp.search_fleet_composition(
+            plats, cand, ("burse",), comp.CompositionBudget(max_cost=0.1),
+            n_steps=STEPS, chunk_size=CHUNK)
+
+
+def test_zero_count_platform_is_inert():
+    """[k, 0] mixes match a single-platform [k] sweep exactly."""
+    both = comp.search_fleet_composition(
+        _platforms(("tabla", "stripes")), np.array([[2, 0], [3, 0]]),
+        ("burse",), n_steps=STEPS, chunk_size=CHUNK)
+    solo = comp.search_fleet_composition(
+        _platforms(("tabla",)), np.array([[2], [3]]),
+        ("burse",), n_steps=STEPS, chunk_size=CHUNK)
+    np.testing.assert_allclose(both.total_power_w, solo.total_power_w,
+                               rtol=1e-5)
+    np.testing.assert_allclose(both.qos_violation_rate,
+                               solo.qos_violation_rate, atol=1e-6)
+    np.testing.assert_allclose(both.cost, solo.cost)
+
+
+def test_non_composable_technique_rejected():
+    plats = _platforms(("tabla",))
+    with pytest.raises(ValueError, match="composition-safe"):
+        comp.search_fleet_composition(plats, np.array([[2]]), ("burse",),
+                                      technique="hybrid", n_steps=STEPS,
+                                      chunk_size=CHUNK)

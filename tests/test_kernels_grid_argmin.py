@@ -1,0 +1,152 @@
+"""Fused grid-argmin kernel vs its lax reference (interpret mode).
+
+Parity sweep per the tentpole contract: every technique's grid mask
+(all 7, including the hybrid gear rows with per-gear frequency levels)
+× every bundled accelerator × both grid shapes must match the reference
+implementation — and the reference must match the closure-based
+single-platform optimizer — to ≤ 1e-5.  Also holds the shared tie-break
+contract: on tied objectives every path picks the *first* flat
+(row-major) grid index.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import characterization as char
+from repro.core import controller as ctl
+from repro.core import voltage as volt
+from repro.core.accelerators import ACCELERATORS
+from repro.kernels.grid_argmin import grid_argmin, grid_argmin_ref
+
+TOL = 1e-5
+GRIDS = {
+    "default": volt.VoltageGrids.default(),
+    "core_only": volt.VoltageGrids.core_only(),
+}
+
+
+def _stacked_params():
+    plats = [ctl.fpga_platform(acc) for acc in ACCELERATORS.values()]
+    return plats, char.stack_platform_params([p.params for p in plats])
+
+
+def _technique_rows(grids, n_bins=25):
+    """[R, C, B] masks + [R, M] levels: all 7 techniques + hybrid gears."""
+    margin = max(0.05, 1.5 / n_bins)  # cfg requires margin > 1/n_bins
+    levels = volt.bin_frequency_levels(n_bins, margin)
+    masks = [volt.technique_grid_mask(t, grids) for t in ctl.TECHNIQUES]
+    row_levels = [levels] * len(ctl.TECHNIQUES)
+    gears, f_node, _ = ctl._hybrid_gears(
+        ctl.ControllerConfig(n_bins=n_bins, margin=margin))
+    full = volt.technique_grid_mask("hybrid", grids)
+    masks += [full] * gears.shape[0]
+    row_levels += list(f_node)
+    return jnp.stack(masks), jnp.stack(row_levels)
+
+
+def _assert_points_close(out, ref, tol=TOL):
+    for field in ("v_core", "v_bram", "f_rel", "power"):
+        a, b = np.asarray(getattr(out, field)), np.asarray(getattr(ref, field))
+        np.testing.assert_allclose(a, b, rtol=tol, atol=tol,
+                                   err_msg=f"field {field}")
+    np.testing.assert_array_equal(np.asarray(out.feasible),
+                                  np.asarray(ref.feasible))
+
+
+@pytest.mark.parametrize("grid_name", sorted(GRIDS))
+def test_kernel_matches_ref_all_techniques(grid_name):
+    """Pallas kernel (interpret mode on CPU) ≡ lax reference, both grids."""
+    grids = GRIDS[grid_name]
+    _, params = _stacked_params()
+    masks, levels = _technique_rows(grids)
+    out = grid_argmin(params, masks, levels, grids.core, grids.bram,
+                      impl="interpret")
+    ref = grid_argmin_ref(params, masks, levels, grids.core, grids.bram)
+    _assert_points_close(out, ref)
+
+
+@pytest.mark.parametrize("grid_name", sorted(GRIDS))
+def test_dispatcher_matches_ref(grid_name):
+    """The jitted dispatcher's platform default also holds parity."""
+    grids = GRIDS[grid_name]
+    _, params = _stacked_params()
+    masks, levels = _technique_rows(grids, n_bins=7)
+    out = grid_argmin(params, masks, levels, grids.core, grids.bram)
+    ref = grid_argmin_ref(params, masks, levels, grids.core, grids.bram)
+    _assert_points_close(out, ref)
+
+
+def test_interpret_smoke_single_platform():
+    """Cheap CPU-CI smoke: one platform, one row, tiny level count."""
+    grids = volt.VoltageGrids.default()
+    plat = ctl.fpga_platform(ACCELERATORS["tabla"])
+    params = char.stack_platform_params([plat.params])
+    masks = jnp.stack([volt.technique_grid_mask("proposed", grids)])
+    levels = jnp.stack([volt.bin_frequency_levels(5, 0.05)])
+    out = grid_argmin(params, masks, levels, grids.core, grids.bram,
+                      impl="interpret")
+    assert out.power.shape == (1, 1, 5)
+    assert bool(jnp.all(out.feasible))
+    assert bool(jnp.all(out.power > 0))
+
+
+def test_kernel_matches_closure_optimizer():
+    """Kernel path ≡ the single-platform closure optimizer (§V oracle)."""
+    grids = volt.VoltageGrids.default()
+    plats, params = _stacked_params()
+    levels = volt.bin_frequency_levels(9, 0.05)
+    mask = volt.technique_grid_mask("proposed", grids)
+    out = grid_argmin(params, jnp.stack([mask]), jnp.stack([levels]),
+                      grids.core, grids.bram, impl="interpret")
+    for i, plat in enumerate(plats):
+        ref = volt.build_operating_table(plat.delay_fn, plat.power_fn,
+                                         levels, grids)
+        np.testing.assert_allclose(np.asarray(out.power[i, 0]),
+                                   np.asarray(ref.power), rtol=TOL,
+                                   atol=TOL)
+        np.testing.assert_allclose(np.asarray(out.v_core[i, 0]),
+                                   np.asarray(ref.v_core), atol=TOL)
+        np.testing.assert_allclose(np.asarray(out.v_bram[i, 0]),
+                                   np.asarray(ref.v_bram), atol=TOL)
+
+
+# ---------------------------------------------------------------------------
+# Tie-break contract (the satellite regression for the shared helper)
+# ---------------------------------------------------------------------------
+
+
+def test_masked_grid_argmin_first_flat_index_on_ties():
+    """Tied objectives resolve to the first row-major grid point."""
+    core = jnp.asarray([0.6, 0.7, 0.8])
+    bram = jnp.asarray([0.65, 0.75])
+    power = jnp.asarray([[2.0, 1.0],   # flat 1 ties flat 4
+                         [3.0, 4.0],
+                         [1.0, 5.0]])  # flat 4
+    feasible = jnp.ones((3, 2), bool)
+    pt = volt.masked_grid_argmin(power, feasible, core, bram,
+                                 jnp.asarray(0.5), jnp.asarray(9.0))
+    # First flat index of the tied minimum is (0, 1): v_core=0.6, v_bram=0.75.
+    assert float(pt.v_core) == pytest.approx(0.6)
+    assert float(pt.v_bram) == pytest.approx(0.75)
+    assert float(pt.power) == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("grid_name", sorted(GRIDS))
+def test_closure_and_params_optimizers_pick_same_point(grid_name):
+    """optimize_point and optimize_point_params choose identical grid
+    indices — bitwise-equal voltages — for every accelerator × f_rel,
+    including plateaus where several grid points tie on power."""
+    grids = GRIDS[grid_name]
+    mask = volt.technique_grid_mask("proposed", grids)
+    for acc in ACCELERATORS.values():
+        plat = ctl.fpga_platform(acc)
+        for f in (0.15, 0.4, 0.75, 1.0):
+            a = volt.optimize_point(plat.delay_fn, plat.power_fn,
+                                    jnp.asarray(f), grids)
+            b = volt.optimize_point_params(plat.params, jnp.asarray(f),
+                                           grids.core, grids.bram, mask)
+            assert float(a.v_core) == float(b.v_core), (acc.name, f)
+            assert float(a.v_bram) == float(b.v_bram), (acc.name, f)
+            assert float(a.power) == pytest.approx(float(b.power),
+                                                   rel=1e-6), (acc.name, f)
