@@ -14,6 +14,7 @@ programs — the committed ``BENCH_fleet.json`` is generated that way.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -23,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import controller as ctl
-from repro.core import predictor as pred_mod
+from repro.core import predictors as pred_mod
 from repro.core import voltage as volt
 from repro.core import workload as wl
 from repro.core.accelerators import ACCELERATORS, PAPER_TABLE_II
@@ -142,24 +143,75 @@ def bench_fig12_per_accelerator_traces():
 
 
 def bench_predictor():
-    """§IV-A predictor: accuracy and runtime cost of the control path.
+    """Predictor-registry sweep: gain-vs-misprediction, fleet-wide.
 
-    One ``lax.scan`` per trace (``predictor.evaluate_trace``) — the seed's
-    host loop paid 2 dispatches per step.
+    Every registered forecaster (markov/persistence/ewma/holt_winters/
+    hierarchy/seasonal_naive) runs the *whole* scenario + replay library
+    through the streaming campaign path, one campaign per family
+    (per-family compile is the contract; same-family sweeps reuse the
+    programs).  Per (kind, scenario) row: ``exact`` and ``margin``
+    accuracy (exact-bin charges misses the controller's t% margin
+    absorbs by design; margin-aware is the honest "flying blind" axis),
+    power ``gain``, and ``qos`` violation rate — the sensitivity record
+    for how much prediction quality buys in power without costing QoS.
+
+    Campaigns run ``2·N_STEPS`` so a replayed trace spans more than one
+    full period — the regime where period-aware forecasters are even
+    learnable.  ``seasonal_naive`` goes through its measure-then-
+    configure workflow (``seasonal.config_for_trace``): scenarios are
+    grouped by detected exact tiling period and each group runs as its
+    own fitted campaign (``season`` is static config — one compile per
+    distinct period, zero retraces within a group).  The per-kind
+    ``predictor/<kind>/trace`` row times one ``evaluate_trace`` scan on
+    the canonical bursty trace (the seed's host loop paid 2 dispatches
+    per step).
     """
+    from repro.core import scenarios as scn
+    from repro.core.predictors import seasonal
     trace = _trace(2 * N_STEPS)
-    cfg = pred_mod.PredictorConfig(n_bins=25, warmup_steps=32)
-    out = pred_mod.evaluate_trace(cfg, trace)   # warm/compile
-    out.predicted.block_until_ready()
-    t0 = time.perf_counter()
-    out = pred_mod.evaluate_trace(cfg, trace)
-    out.predicted.block_until_ready()
-    us = (time.perf_counter() - t0) / len(trace) * 1e6
-    preds = np.asarray(out.predicted)
-    acts = np.asarray(out.actual)
-    return [("predictor/markov_25bins", us,
-             f"exact={np.mean(preds == acts):.3f}"
-             f";within1={np.mean(np.abs(preds - acts) <= 1):.3f}")]
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    names = tuple(sorted(scn.SCENARIOS))
+    n_steps = 2 * N_STEPS
+    chunk = max(min(N_STEPS, 512), 1)
+    rows = []
+
+    def campaign_rows(kind, group_names, predictor):
+        camp = scn.run_campaign(platforms, scenario_names=group_names,
+                                techniques=("proposed",), n_steps=n_steps,
+                                chunk_size=chunk, predictor=predictor)
+        for scen in camp["scenarios"]:
+            cell = camp["table"][platforms[0].name]["proposed"][scen]
+            rows.append((
+                f"predictor/{kind}/{scen}", None,
+                f"exact={1.0 - cell['misprediction_rate']:.3f}"
+                f";margin={1.0 - cell['margin_misprediction_rate']:.3f}"
+                f";gain={cell['power_gain']:.2f}x"
+                f";qos={cell['qos_violation_rate']:.3f}"))
+
+    for kind in pred_mod.available():
+        cfg = pred_mod.PredictorConfig(kind=kind, n_bins=25,
+                                       warmup_steps=32, margin_bins=1)
+        out = pred_mod.evaluate_trace(cfg, trace)   # warm/compile
+        out.predicted.block_until_ready()
+        t0 = time.perf_counter()
+        out = pred_mod.evaluate_trace(cfg, trace)
+        out.predicted.block_until_ready()
+        us = (time.perf_counter() - t0) / len(trace) * 1e6
+        rows.append((f"predictor/{kind}/trace", us,
+                     f"exact={float(out.exact_accuracy):.3f}"
+                     f";margin={float(out.margin_accuracy):.3f}"))
+        if kind == "seasonal_naive":
+            by_season = {}
+            for scen in names:
+                w = scn.get_scenario(scen).trace(n_steps, seed=0)
+                fitted = seasonal.config_for_trace(cfg, w)
+                by_season.setdefault(fitted.season, []).append(scen)
+            for season, group in sorted(by_season.items()):
+                campaign_rows(kind, tuple(group),
+                              dataclasses.replace(cfg, season=season))
+        else:
+            campaign_rows(kind, names, cfg)
+    return rows
 
 
 def bench_fleet():

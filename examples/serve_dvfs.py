@@ -50,7 +50,7 @@ def main() -> int:
     # so occupancy and request latency respond to the DVFS decisions.
     # (Load kept below saturation so the response is visible.)
     from repro.core import controller as ctl
-    from repro.core import predictor as pred_mod
+    from repro.core import predictors as pred_mod
     lam = np.concatenate([np.full(512, 0.6), np.full(512, 2.2),
                           np.full(512, 1.0)])
     out = None

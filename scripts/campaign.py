@@ -64,6 +64,9 @@ def main(argv=None) -> int:
     ap.add_argument("--platforms", type=str, default="all",
                     help="comma list of accelerator names, 'tpu', or 'all'")
     ap.add_argument("--n-nodes", type=int, default=8)
+    ap.add_argument("--predictor", type=str, default="markov",
+                    help="workload forecaster for every cell: one of the "
+                    "registered kinds (see core.predictors.available())")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cache-dir", type=str, default="",
                     help="persistent JAX compilation-cache directory "
@@ -98,6 +101,10 @@ def main(argv=None) -> int:
     if args.trace_tau is not None and args.trace_tau <= 0:
         raise SystemExit("error: --trace-tau must be positive "
                          f"(got {args.trace_tau:g})")
+    from repro.core import predictors as preds
+    if args.predictor not in preds.available():
+        raise SystemExit(f"error: unknown --predictor {args.predictor!r}; "
+                         f"choose from {list(preds.available())}")
 
     # Register --trace before --list-scenarios so the listing shows (and
     # validates) the trace the user just pointed at.
@@ -129,7 +136,8 @@ def main(argv=None) -> int:
         from repro.core import aot
         from repro.core import characterization as char
         params = char.stack_platform_params([p.params for p in platforms])
-        cfg = ctl.ControllerConfig(n_nodes=args.n_nodes)
+        cfg = ctl.ControllerConfig(n_nodes=args.n_nodes,
+                                   predictor=args.predictor)
         n_scen = len(names) if names is not None else len(scn.SCENARIOS)
         t = aot.warm_fleet_programs(
             params, cfg, techniques,
@@ -142,11 +150,12 @@ def main(argv=None) -> int:
     out = scn.run_campaign(platforms, scenario_names=names,
                            techniques=techniques, n_steps=args.steps,
                            seed=args.seed, chunk_size=args.chunk,
-                           n_nodes=args.n_nodes)
+                           n_nodes=args.n_nodes, predictor=args.predictor)
     dt = time.perf_counter() - t0
     cells = len(platforms) * len(techniques) * len(out["scenarios"])
     print(f"# {cells} cells × {args.steps} steps in {dt:.2f}s "
-          f"(chunk={args.chunk}, traces={ctl.fleet_trace_counts()})\n")
+          f"(chunk={args.chunk}, predictor={args.predictor}, "
+          f"traces={ctl.fleet_trace_counts()})\n")
 
     for scen in out["scenarios"]:
         print(f"== scenario: {scen} ==")

@@ -22,7 +22,7 @@ sys.path.insert(0, "src")
 from repro.core import accelerators as acc_mod
 from repro.core import characterization as char
 from repro.core import controller as ctl
-from repro.core import predictor as pred_mod
+from repro.core import predictors as pred_mod
 from repro.core import workload as wl
 
 V_CORE_NOM, V_BRAM_NOM, V_CRASH, V_STEP = 0.80, 0.95, 0.50, 0.025

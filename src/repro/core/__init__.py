@@ -4,7 +4,7 @@ multi-accelerator platforms (Salamat et al., 2019), adapted TPU-native.
 Layers:
   characterization — delay/power-vs-voltage libraries (FPGA fabric + TPU domains)
   voltage          — joint (V_core, V_bram) constrained optimization + §V tables
-  predictor        — online Markov-chain workload prediction
+  predictors       — pluggable workload forecasters (markov/ewma/…, registry)
   workload         — bursty self-similar trace synthesis (BURSE-like)
   traces           — trace-replay sources (CSV/NPZ loaders, resampling, mixtures)
   controller       — the §V runtime loop (predict → frequency → voltages → PLL)
@@ -14,7 +14,7 @@ Layers:
 """
 
 from repro.core import accelerators, characterization, controller, pll, \
-    predictor, scenarios, traces, voltage, workload  # noqa: F401
+    predictors, scenarios, traces, voltage, workload  # noqa: F401
 
 __all__ = ["accelerators", "characterization", "controller", "pll",
-           "predictor", "scenarios", "traces", "voltage", "workload"]
+           "predictors", "scenarios", "traces", "voltage", "workload"]

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import controller as ctl
-from repro.core import predictor as pred_mod
+from repro.core import predictors as pred_mod
 from repro.core import characterization as char
 
 _CACHE_DIR: Optional[str] = None
@@ -109,10 +109,11 @@ def warm_fleet_programs(params: char.PlatformParams,
     f32 = jnp.float32
     flat = ctl.BinTables(*[jax.ShapeDtypeStruct((k, m), f32)
                            for _ in ctl.BinTables._fields])
+    # state_spec is already abstract (no concrete state materializes on
+    # the cold path) — only the fleet axis K is prepended here.
     mstate = jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct((k,) + jnp.shape(x),
-                                       jnp.asarray(x).dtype),
-        pred_mod.init_state(cfg.predictor))
+        lambda x: jax.ShapeDtypeStruct((k,) + x.shape, x.dtype),
+        pred_mod.state_spec(cfg.predictor))
     run_cfg = dataclasses.replace(cfg, technique="proposed")
     t0 = time.perf_counter()
     ctl._fleet_stream_chunk_jit.lower(

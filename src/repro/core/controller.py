@@ -2,7 +2,8 @@
 
 The paper's runtime loop per time step τ:
 
-  workload counter → Markov predictor → frequency selector → voltage
+  workload counter → workload predictor (pluggable; paper: Markov chain)
+  → frequency selector → voltage
   selector (a lookup into the per-frequency operating table precomputed at
   synthesis time) → PLL reprogram (dual-PLL hides the lock) → PMBUS rails.
 
@@ -32,7 +33,7 @@ import numpy as np
 
 from repro.core import characterization as char
 from repro.core import pll as pll_mod
-from repro.core import predictor as pred_mod
+from repro.core import predictors as pred_mod
 from repro.core import voltage as volt_mod
 from repro.core.accelerators import Accelerator
 from repro.kernels.grid_argmin import grid_argmin as grid_argmin_op
@@ -165,7 +166,10 @@ class ControllerConfig:
     f_floor: float = 0.10         # lowest selectable relative frequency
     use_oracle: bool = False      # perfect prediction (upper bound; beyond paper)
     gated_power_frac: float = 0.0  # residual power of a power-gated node
-    predictor: pred_mod.PredictorConfig = dataclasses.field(
+    #: Predictor selection: a full ``PredictorConfig`` or just a
+    #: registered kind name (``"markov"``, ``"ewma"``, …) — a bare
+    #: string becomes ``PredictorConfig(kind=...)`` with defaults.
+    predictor: pred_mod.PredictorConfig | str = dataclasses.field(
         default_factory=pred_mod.PredictorConfig)
     pll: pll_mod.PllConfig = dataclasses.field(default_factory=pll_mod.PllConfig)
     v_step: float = char.V_STEP
@@ -179,9 +183,16 @@ class ControllerConfig:
             raise ValueError(
                 f"margin {self.margin} must exceed 1/n_bins = "
                 f"{1.0 / self.n_bins:.4f} (paper §V: t > 1/M)")
-        object.__setattr__(self, "predictor",
-                           dataclasses.replace(self.predictor,
-                                               n_bins=self.n_bins))
+        pcfg = self.predictor
+        if isinstance(pcfg, str):
+            pcfg = pred_mod.PredictorConfig(kind=pcfg)
+        # Keep the predictor's bin grid and margin coverage in sync with
+        # the controller: margin_bins = ⌊t·M⌋ is how many whole bins the
+        # provisioned t% margin absorbs (≥ 1, since t > 1/M) — the
+        # margin-aware score only charges misses beyond it.
+        object.__setattr__(self, "predictor", dataclasses.replace(
+            pcfg, n_bins=self.n_bins,
+            margin_bins=int(np.floor(self.margin * self.n_bins + 1e-9))))
 
 
 class BinTables(NamedTuple):
@@ -348,8 +359,9 @@ class TraceResult(NamedTuple):
     v_bram: Array           # [T]
     f_rel: Array            # [T]
     n_active: Array         # [T] powered-on nodes during the step
-    mispredictions: Array   # scalar int
-    final_predictor: pred_mod.MarkovState
+    mispredictions: Array   # scalar int — post-warmup exact-bin misses
+    margin_misses: Array    # scalar int — post-warmup beyond-margin misses
+    final_predictor: pred_mod.PredictorState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -365,6 +377,11 @@ class Summary:
     served_fraction: float       # work served in-step / work offered
     misprediction_rate: float    # post-warmup mispredictions / post-warmup steps
     mean_backlog: float
+    #: Post-warmup rate of predictions the controller's provisioned t%
+    #: margin did NOT cover (actual bin > predicted + ⌊t·M⌋).  Exact-bin
+    #: ``misprediction_rate`` charges the predictor for misses the
+    #: margin absorbs by design; this is the honest "flying blind" rate.
+    margin_misprediction_rate: float = float("nan")
     #: Measured request-latency QoS (closed-loop serving only; NaN for the
     #: open-loop modeled simulations, which have no per-request timeline).
     latency_p50: float = float("nan")
@@ -417,9 +434,9 @@ def availability_point(tables: BinTables, selected,
 
 
 def _control_step(tables: BinTables, cfg: ControllerConfig,
-                  carry: Tuple[pred_mod.MarkovState, Array],
+                  carry: Tuple[pred_mod.PredictorState, Array],
                   w_t: Array, avail_t: Array
-                  ) -> Tuple[Tuple[pred_mod.MarkovState, Array], _StepOut]:
+                  ) -> Tuple[Tuple[pred_mod.PredictorState, Array], _StepOut]:
     """One §V control step: predict → select → clamp to availability →
     serve → observe.
 
@@ -446,7 +463,7 @@ def _control_step(tables: BinTables, cfg: ControllerConfig,
     new_backlog = w_t + backlog - served
     violation = w_t + backlog > cap + 1e-9
 
-    mstate = pred_mod.observe(cfg.predictor, mstate, actual, predicted)
+    mstate = pred_mod.observe(cfg.predictor, mstate, w_t, predicted)
     out = _StepOut(power=pwr, capacity=cap, violation=violation,
                    backlog=new_backlog, predicted_bin=predicted,
                    actual_bin=actual, v_core=tables.v_core[selected],
@@ -472,6 +489,7 @@ def _scan_control_loop(tables: BinTables, cfg: ControllerConfig,
                        v_bram=outs.v_bram, f_rel=outs.f_rel,
                        n_active=outs.n_active,
                        mispredictions=mstate.mispredictions,
+                       margin_misses=mstate.margin_misses,
                        final_predictor=mstate)
 
 
@@ -521,6 +539,7 @@ def summarize(platform: PlatformSpec, cfg: ControllerConfig,
         served_fraction=served / max(offered, 1e-9),
         misprediction_rate=float(result.mispredictions) / n_scored,
         mean_backlog=float(jnp.mean(result.backlog)),
+        margin_misprediction_rate=float(result.margin_misses) / n_scored,
         nominal_power_configured_w=nominal_cfg_w,
         power_gain_vs_configured=nominal_cfg_w / mean_w,
     )
@@ -845,7 +864,7 @@ def simulate_fleet(tables: BinTables, traces: np.ndarray | Array,
 class _StreamAcc(NamedTuple):
     """Streaming scan carry: controller state + in-carry reductions."""
 
-    mstate: pred_mod.MarkovState
+    mstate: pred_mod.PredictorState
     backlog: Array
     power_sum: Array     # Σ watts over valid steps
     viol_sum: Array      # Σ violations
@@ -870,16 +889,20 @@ class FleetSummary(NamedTuple):
     offered: np.ndarray
     mispredictions: np.ndarray
     n_steps: int
-    final_predictor: pred_mod.MarkovState
+    final_predictor: pred_mod.PredictorState
     emitted: Dict[str, np.ndarray]
     #: Mean usable nodes per step — ``cfg.n_nodes`` on healthy runs; the
     #: available-fleet nominal baseline is ``mean_avail_nodes`` × the
     #: per-node nominal watts.
     mean_avail_nodes: np.ndarray = None
+    #: Post-warmup beyond-margin misses per cell (see
+    #: ``Summary.margin_misprediction_rate``).
+    margin_misses: np.ndarray = None
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "emit"))
-def _fleet_stream_chunk_jit(tables: BinTables, mstate: pred_mod.MarkovState,
+def _fleet_stream_chunk_jit(tables: BinTables,
+                            mstate: pred_mod.PredictorState,
                             backlog: Array, chunk: Array, avail: Array,
                             valid: Array, cfg: ControllerConfig,
                             emit: Tuple[str, ...]) -> Tuple:
@@ -1093,7 +1116,8 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
         final_predictor=jax.tree.map(cut, mstate),
         emitted={e: cut(np.concatenate(v, axis=-1))
                  for e, v in emitted.items()},
-        mean_avail_nodes=cut(avail_sum / s))
+        mean_avail_nodes=cut(avail_sum / s),
+        margin_misses=cut(mstate.margin_misses))
 
 
 def fleet_node_nominal_watts(params: char.PlatformParams,
@@ -1146,6 +1170,7 @@ def compare_all_batched(platforms: Sequence[PlatformSpec],
     viol = np.asarray(res.violations)
     backlog = np.asarray(res.backlog)
     mispred = np.asarray(res.mispredictions)
+    margin_miss = np.asarray(res.margin_misses)
     n_scored = max(power.shape[-1] - cfg.predictor.warmup_steps, 1)
 
     out: Dict[str, Dict[str, Summary]] = {}
@@ -1163,6 +1188,7 @@ def compare_all_batched(platforms: Sequence[PlatformSpec],
                 served_fraction=served / max(offered, 1e-9),
                 misprediction_rate=float(mispred[i, j]) / n_scored,
                 mean_backlog=float(backlog[i, j].mean()),
+                margin_misprediction_rate=float(margin_miss[i, j]) / n_scored,
                 nominal_power_configured_w=float(nominal_w[i]),
                 power_gain_vs_configured=float(nominal_w[i]) / mean_w,
             )

@@ -1,0 +1,94 @@
+"""Pluggable workload-predictor layer (paper §IV-A, §V).
+
+One protocol (``init_state`` / ``predict`` / ``observe`` / ``spec``),
+one name registry, several forecasting families:
+
+* ``markov`` — the paper's online transition-count chain (argmax /
+  quantile / expected policies, threshold re-learning);
+* ``persistence`` — last-bin naive baseline;
+* ``ewma`` — single exponentially-smoothed level;
+* ``holt_winters`` — level + trend + optional additive season;
+* ``hierarchy`` — Hurst-weighted multi-scale EWMA bank (long memory);
+* ``seasonal_naive`` — replay-exact s-naive ring with EWMA fallback.
+
+``PredictorConfig(kind=...)`` selects a family everywhere
+(``ControllerConfig``, ``run_campaign``, ``scripts/campaign.py
+--predictor``); the control loops carry only the family-agnostic
+:class:`PredictorState` pytree, so every family rides the same
+compiled fleet programs (one compile per family, zero retraces within
+one).  See ``docs/ARCHITECTURE.md`` §7 for the design story and how to
+add a forecaster.
+"""
+
+# Base first (defines the registry), then the families (each registers
+# itself on import).  No PredictorConfig is constructed during import,
+# so the eager kind-validation in base never races the registration.
+from repro.core.predictors.base import (  # noqa: F401
+    Predictor,
+    PredictorConfig,
+    PredictorState,
+    PersistencePredictor,
+    TraceEval,
+    available,
+    bin_upper_edge,
+    evaluate_trace,
+    get,
+    init_state,
+    observe,
+    predict,
+    register,
+    state_spec,
+    workload_to_bin,
+)
+from repro.core.predictors.markov import (  # noqa: F401
+    MarkovPredictor,
+    transition_matrix,
+)
+from repro.core.predictors.ewma import EwmaPredictor  # noqa: F401
+from repro.core.predictors.holt_winters import (  # noqa: F401
+    HoltWintersPredictor,
+)
+from repro.core.predictors.hierarchy import (  # noqa: F401
+    HierarchyPredictor,
+    config_for_trace,
+)
+from repro.core.predictors.seasonal import (  # noqa: F401
+    SeasonalNaivePredictor,
+    detect_period,
+)
+from repro.core.predictors.periodic import (  # noqa: F401
+    PeriodicState,
+    init_periodic,
+    periodic_observe,
+    periodic_predict,
+)
+
+__all__ = [
+    "Predictor",
+    "PredictorConfig",
+    "PredictorState",
+    "PersistencePredictor",
+    "MarkovPredictor",
+    "EwmaPredictor",
+    "HoltWintersPredictor",
+    "HierarchyPredictor",
+    "SeasonalNaivePredictor",
+    "TraceEval",
+    "detect_period",
+    "available",
+    "bin_upper_edge",
+    "config_for_trace",
+    "evaluate_trace",
+    "get",
+    "init_state",
+    "observe",
+    "predict",
+    "register",
+    "state_spec",
+    "transition_matrix",
+    "workload_to_bin",
+    "PeriodicState",
+    "init_periodic",
+    "periodic_observe",
+    "periodic_predict",
+]

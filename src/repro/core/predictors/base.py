@@ -1,0 +1,380 @@
+"""Predictor protocol, registry, and the family-agnostic scoring shell.
+
+The §V control loop needs exactly four things from a workload forecaster:
+
+* ``init_state(cfg) → pytree``   — a fresh state the ``lax.scan`` can carry;
+* ``predict(cfg, state) → bin``  — the next step's workload bin (int32);
+* ``observe(cfg, state, w, predicted) → pytree`` — fold one observed
+  workload fraction into the state (online training);
+* ``spec(cfg) → pytree of ShapeDtypeStruct`` — abstract shapes for the
+  AOT warmers (``core.aot.warm_fleet_programs``), so cold-path compiles
+  see byte-identical carries to the live path.
+
+Everything family-specific hides behind :class:`Predictor`; the shared
+shell handles what every family needs identically:
+
+* **warmup** (§IV-A): for the first ``warmup_steps`` observations the
+  platform runs at nominal frequency, encoded as predicting the top bin;
+* **scoring**: exact-bin mispredictions *and* margin-aware misses
+  (prediction + the controller's ``t%`` margin fails to cover the actual
+  bin) accumulate in the common :class:`PredictorState` wrapper —
+  post-warmup only, because warmup predictions are pinned by policy.
+
+Families are value objects in a name registry (:func:`register` /
+:func:`get` / :func:`available`); ``PredictorConfig.kind`` selects one.
+Because the config is a static jit argument, family dispatch happens at
+trace time (zero runtime cost) and each family compiles its own fleet
+programs exactly once — same-family sweeps never retrace
+(``tests/test_fleet.py::test_predictor_sweep_zero_retrace``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Configuration (shared by every family; family-specific fields are
+# ignored by the others, so one frozen dataclass keys every jit cache)
+# ---------------------------------------------------------------------------
+
+
+_POLICIES = ("argmax", "quantile", "expected")
+_UPDATE_MODES = ("always", "threshold")
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    """Static predictor configuration (hashable — rides the jit key).
+
+    ``kind`` names a registered family (:func:`available` lists them).
+    ``n_bins`` and ``margin_bins`` are synced from the owning
+    ``ControllerConfig`` (margin_bins = ⌊margin · n_bins⌋ — the number of
+    whole bins the controller's ``t%`` throughput margin absorbs, which
+    the margin-aware score charges only *beyond*).
+    """
+
+    n_bins: int = 10
+    warmup_steps: int = 32          # paper's I
+    kind: str = "markov"            # registered family name
+    #: whole bins covered by the controller's t% margin (synced by
+    #: ControllerConfig; §V requires t > 1/M so this is ≥ 1 there)
+    margin_bins: int = 1
+    # --- markov ---
+    policy: str = "argmax"          # "argmax" (paper) | "quantile" | "expected"
+    quantile: float = 0.9           # only for policy == "quantile"
+    mispred_threshold: int = 4      # paper §V: edge re-learn threshold
+    update_mode: str = "always"     # "always" | "threshold" (paper's lazier)
+    count_decay: float = 1.0        # exponential forgetting (1.0 = none)
+    # --- ewma / hierarchy short window ---
+    ewma_alpha: float = 0.35        # level smoothing weight
+    # --- holt_winters ---
+    hw_alpha: float = 0.45          # level
+    hw_beta: float = 0.10           # trend
+    hw_gamma: float = 0.25          # seasonal
+    season: int = 0                 # seasonal period in steps (0 = off)
+    # --- hierarchy ---
+    hier_scales: Tuple[int, ...] = (1, 4, 16, 64)  # EWMA spans (steps)
+    hurst: float = 0.76             # long-memory strength (H ∈ [0.5, 1])
+
+    def __post_init__(self):
+        # Eager validation: unknown strings / out-of-range knobs used to
+        # surface only inside traced code as inscrutable trace errors —
+        # fail at construction with one-line messages instead (the
+        # ControllerConfig.margin precedent).
+        if _REGISTRY and self.kind not in _REGISTRY:
+            raise ValueError(f"unknown predictor kind {self.kind!r}; "
+                             f"registered: {available()}")
+        if self.policy not in _POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; "
+                             f"choose from {_POLICIES}")
+        if self.update_mode not in _UPDATE_MODES:
+            raise ValueError(f"unknown update_mode {self.update_mode!r}; "
+                             f"choose from {_UPDATE_MODES}")
+        if not 0.0 < self.quantile <= 1.0:
+            raise ValueError(f"quantile {self.quantile} must be in (0, 1]")
+        if not 0.0 < self.count_decay <= 1.0:
+            raise ValueError(f"count_decay {self.count_decay} must be in "
+                             "(0, 1]")
+        if self.warmup_steps < 0:
+            raise ValueError(f"warmup_steps {self.warmup_steps} must be ≥ 0")
+        if self.n_bins < 1:
+            raise ValueError(f"n_bins {self.n_bins} must be ≥ 1")
+        if self.margin_bins < 0:
+            raise ValueError(f"margin_bins {self.margin_bins} must be ≥ 0")
+        for name in ("ewma_alpha", "hw_alpha", "hw_beta", "hw_gamma"):
+            v = getattr(self, name)
+            if not 0.0 < v <= 1.0:
+                raise ValueError(f"{name} {v} must be in (0, 1]")
+        if self.season < 0:
+            raise ValueError(f"season {self.season} must be ≥ 0")
+        scales = tuple(int(s) for s in self.hier_scales)
+        if not scales or any(s < 1 for s in scales) or \
+                list(scales) != sorted(set(scales)):
+            raise ValueError(f"hier_scales {self.hier_scales} must be "
+                             "strictly increasing positive ints")
+        object.__setattr__(self, "hier_scales", scales)
+        if not 0.5 <= self.hurst <= 1.0:
+            raise ValueError(f"hurst {self.hurst} must be in [0.5, 1.0] "
+                             "(clip estimate_hurst output, NaN-check short "
+                             "traces)")
+
+
+# ---------------------------------------------------------------------------
+# Common state wrapper and bin helpers
+# ---------------------------------------------------------------------------
+
+
+class PredictorState(NamedTuple):
+    """Family-agnostic scan carry: ``inner`` is the family's own pytree,
+    the rest is shared bookkeeping every Summary reads.
+
+    ``mispredictions`` counts post-warmup exact-bin misses (the paper's
+    misprediction rate); ``margin_misses`` counts only misses the
+    controller's provisioned ``t%`` margin does **not** absorb
+    (``actual > predicted + margin_bins``) — the honest "flying blind"
+    metric, since a one-bin under-prediction still meets QoS by design.
+    """
+
+    inner: Any             # family-specific pytree
+    steps: Array           # int32 — completed observations
+    mispredictions: Array  # int32 — post-warmup exact-bin misses
+    margin_misses: Array   # int32 — post-warmup beyond-margin misses
+
+
+def workload_to_bin(w: Array, n_bins: int) -> Array:
+    """Discretize a workload fraction in [0, 1] into bin 0..M-1."""
+    b = jnp.floor(jnp.asarray(w) * n_bins).astype(jnp.int32)
+    return jnp.clip(b, 0, n_bins - 1)
+
+
+def bin_upper_edge(b: Array, n_bins: int) -> Array:
+    return (b.astype(jnp.float32) + 1.0) / n_bins
+
+
+# ---------------------------------------------------------------------------
+# The family protocol and its registry
+# ---------------------------------------------------------------------------
+
+
+class Predictor:
+    """One forecasting family.  Subclass, set ``name``, implement the
+    three ``*_inner`` hooks, and :func:`register` an instance — the
+    family is then selectable everywhere (``ControllerConfig``,
+    ``run_campaign``, ``scripts/campaign.py --predictor``) and swept by
+    ``benchmarks bench_predictor``.
+
+    The hooks see only the family's own ``inner`` pytree; warmup
+    pinning, bin clipping, and miss scoring live in the shared
+    :func:`predict` / :func:`observe` shell.
+    """
+
+    name: str = ""
+
+    def init_inner(self, cfg: PredictorConfig):
+        """Fresh family state (a pytree of arrays)."""
+        raise NotImplementedError
+
+    def predict_inner(self, cfg: PredictorConfig, inner) -> Array:
+        """Raw next-bin prediction (int32; the shell clips to [0, M))."""
+        raise NotImplementedError
+
+    def observe_inner(self, cfg: PredictorConfig, inner, w: Array,
+                      actual_bin: Array, predicted_bin: Array):
+        """Fold one observation into the family state.
+
+        ``w`` is the continuous workload fraction (families that model
+        the continuous signal use it; bin-valued families use
+        ``actual_bin``).  ``predicted_bin`` is the *issued* prediction
+        (warmup-pinned), for families whose updates depend on their own
+        error (e.g. Markov's threshold re-learning).
+        """
+        raise NotImplementedError
+
+    def spec(self, cfg: PredictorConfig):
+        """Abstract ``inner`` shapes for AOT warmers.
+
+        The default evaluates :meth:`init_inner` shape-only — override
+        only if the fresh state's shapes differ from the steady state's
+        (they never should: the scan carry must be shape-stable).
+        """
+        return jax.eval_shape(lambda: self.init_inner(cfg))
+
+
+_REGISTRY: Dict[str, Predictor] = {}
+
+
+def register(predictor: Predictor, overwrite: bool = False) -> Predictor:
+    """Add a family to the name registry (import-time, like scenarios)."""
+    if not predictor.name:
+        raise ValueError("predictor must set a non-empty .name")
+    if predictor.name in _REGISTRY and not overwrite:
+        raise ValueError(f"predictor {predictor.name!r} already registered "
+                         "(pass overwrite=True to replace it)")
+    _REGISTRY[predictor.name] = predictor
+    return predictor
+
+
+def get(kind: str) -> Predictor:
+    """Look up a registered family (KeyError lists what exists)."""
+    if kind not in _REGISTRY:
+        raise KeyError(f"unknown predictor kind {kind!r}; "
+                       f"registered: {available()}")
+    return _REGISTRY[kind]
+
+
+def available() -> Tuple[str, ...]:
+    """Registered family names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# The shared predict/observe shell (what the control loops actually call)
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: PredictorConfig) -> PredictorState:
+    zero = jnp.asarray(0, jnp.int32)
+    return PredictorState(inner=get(cfg.kind).init_inner(cfg),
+                          steps=zero, mispredictions=zero,
+                          margin_misses=zero)
+
+
+def predict(cfg: PredictorConfig, state: PredictorState) -> Array:
+    """Predict the next step's workload bin.
+
+    During warmup the platform must run at nominal frequency (§IV-A),
+    encoded as predicting the top bin regardless of family.
+    """
+    raw = get(cfg.kind).predict_inner(cfg, state.inner)
+    raw = jnp.clip(jnp.asarray(raw, jnp.int32), 0, cfg.n_bins - 1)
+    warm = state.steps < cfg.warmup_steps
+    return jnp.where(warm, jnp.asarray(cfg.n_bins - 1, jnp.int32), raw)
+
+
+def observe(cfg: PredictorConfig, state: PredictorState, w: Array,
+            predicted_bin: Array) -> PredictorState:
+    """Fold one observed workload fraction into the state and score it.
+
+    Scoring skips warmup steps — :func:`predict` is pinned to the top
+    bin there (§IV-A nominal-frequency training), so counting those
+    disagreements would charge the predictor for a policy it never
+    applied.  ``margin_misses`` only counts ``actual > predicted +
+    margin_bins``: exactly the misses whose provisioned level
+    ``(predicted+1)/M + t`` fails to cover the actual bin's upper edge
+    (the clipped-to-1.0 top levels never miss under this rule either —
+    ⌊t·M⌋ under-counts coverage only where the level clip restores it).
+    """
+    w = jnp.asarray(w, jnp.float32)
+    actual = workload_to_bin(w, cfg.n_bins)
+    predicted_bin = jnp.asarray(predicted_bin, jnp.int32)
+    scored = state.steps >= cfg.warmup_steps
+    exact_miss = (predicted_bin != actual) & scored
+    margin_miss = (actual > predicted_bin + cfg.margin_bins) & scored
+    inner = get(cfg.kind).observe_inner(cfg, state.inner, w, actual,
+                                        predicted_bin)
+    return PredictorState(
+        inner=inner,
+        steps=state.steps + 1,
+        mispredictions=state.mispredictions + exact_miss.astype(jnp.int32),
+        margin_misses=state.margin_misses + margin_miss.astype(jnp.int32))
+
+
+def state_spec(cfg: PredictorConfig) -> PredictorState:
+    """Abstract :class:`PredictorState` shapes for one family.
+
+    The AOT warmers (``core.aot.warm_fleet_programs``) build the fleet
+    carry from this — via the family's :meth:`Predictor.spec` hook — so
+    no concrete state is ever materialized on the cold path.
+    """
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    return PredictorState(inner=get(cfg.kind).spec(cfg), steps=i32,
+                          mispredictions=i32, margin_misses=i32)
+
+
+# ---------------------------------------------------------------------------
+# Whole-trace evaluation (accuracy benchmarking, any family)
+# ---------------------------------------------------------------------------
+
+
+class TraceEval(NamedTuple):
+    """Whole-trace predictor evaluation (see :func:`evaluate_trace`).
+
+    ``exact_accuracy`` / ``margin_accuracy`` are post-warmup scalars:
+    the fraction of scored steps predicted exactly, and the fraction
+    whose provisioned ``t%`` margin still covered the actual bin.
+    """
+
+    predicted: Array        # [T] int32 — bin predicted for each step
+    actual: Array           # [T] int32 — bin observed at each step
+    final_state: PredictorState
+    exact_accuracy: Array   # scalar float32
+    margin_accuracy: Array  # scalar float32
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def evaluate_trace(cfg: PredictorConfig, trace: Array) -> TraceEval:
+    """Run predict→observe over a whole workload trace in one ``lax.scan``.
+
+    Works for every registered family (the config's ``kind`` picks one);
+    the jit cache is keyed on the static config and the trace shape, so
+    sweeps over same-length traces never retrace.
+    """
+    trace = jnp.asarray(trace, jnp.float32)
+
+    def step(state, w):
+        p = predict(cfg, state)
+        a = workload_to_bin(w, cfg.n_bins)
+        return observe(cfg, state, w, p), (p, a)
+
+    state, (preds, acts) = jax.lax.scan(step, init_state(cfg), trace)
+    n_scored = jnp.maximum(trace.shape[0] - cfg.warmup_steps, 1)
+    n_scored = n_scored.astype(jnp.float32)
+    return TraceEval(
+        predicted=preds, actual=acts, final_state=state,
+        exact_accuracy=1.0 - state.mispredictions / n_scored,
+        margin_accuracy=1.0 - state.margin_misses / n_scored)
+
+
+# ---------------------------------------------------------------------------
+# Reference family: persistence (last-bin baseline)
+# ---------------------------------------------------------------------------
+
+
+class _PersistenceInner(NamedTuple):
+    last_bin: Array  # int32
+
+
+class PersistencePredictor(Predictor):
+    """Naive last-value forecaster: tomorrow looks like today.
+
+    The floor every learned family must beat — short-term-sticky
+    workloads make persistence surprisingly strong, which is exactly why
+    it belongs in every benchmark sweep.
+    """
+
+    name = "persistence"
+
+    def init_inner(self, cfg: PredictorConfig) -> _PersistenceInner:
+        # Before any evidence, assume peak (matches warmup's nominal run).
+        return _PersistenceInner(
+            last_bin=jnp.asarray(cfg.n_bins - 1, jnp.int32))
+
+    def predict_inner(self, cfg: PredictorConfig,
+                      inner: _PersistenceInner) -> Array:
+        return inner.last_bin
+
+    def observe_inner(self, cfg: PredictorConfig, inner: _PersistenceInner,
+                      w: Array, actual_bin: Array,
+                      predicted_bin: Array) -> _PersistenceInner:
+        return _PersistenceInner(last_bin=actual_bin)
+
+
+register(PersistencePredictor())

@@ -1,0 +1,42 @@
+"""Exponentially-weighted moving average workload predictor.
+
+Tracks the continuous workload fraction with a single smoothed level
+``ℓ ← ℓ + α·(w − ℓ)`` and predicts the level's bin.  One scalar of
+state, one knob (``ewma_alpha``), and it already repairs the Markov
+chain's worst failure mode at fine bin grids: the chain conditions on
+an exact 1-of-M current bin, so at M=25 nearly every step is a novel
+context, while the EWMA pools all recent history into one estimate.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.predictors.base import (Array, Predictor, PredictorConfig,
+                                        register, workload_to_bin)
+
+
+class EwmaInner(NamedTuple):
+    level: Array  # float32 — smoothed workload fraction
+
+
+class EwmaPredictor(Predictor):
+    name = "ewma"
+
+    def init_inner(self, cfg: PredictorConfig) -> EwmaInner:
+        # Before any evidence, assume peak (matches warmup's nominal run).
+        return EwmaInner(level=jnp.asarray(1.0, jnp.float32))
+
+    def predict_inner(self, cfg: PredictorConfig, inner: EwmaInner) -> Array:
+        return workload_to_bin(inner.level, cfg.n_bins)
+
+    def observe_inner(self, cfg: PredictorConfig, inner: EwmaInner,
+                      w: Array, actual_bin: Array,
+                      predicted_bin: Array) -> EwmaInner:
+        level = inner.level + cfg.ewma_alpha * (w - inner.level)
+        return EwmaInner(level=level)
+
+
+register(EwmaPredictor())

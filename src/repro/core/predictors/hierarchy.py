@@ -1,0 +1,97 @@
+"""Hurst-aware multi-scale EWMA hierarchy (long-memory forecaster).
+
+Datacenter utilization traces are long-range dependent (Hurst exponent
+H > 0.5 — the fGn generator in ``core.workload`` produces exactly
+this).  For such series the autocorrelation decays as a power law
+``ρ(k) ~ k^(2H−2)``, so useful predictive signal lives at *many*
+timescales at once, which a single-α EWMA cannot capture.
+
+This family runs a bank of EWMAs at geometrically-spaced spans
+(``hier_scales``, α_j = 2/(scale_j+1)) and combines them with weights
+taken from the long-memory autocorrelation itself:
+
+* per-scale weight ``ω_j ∝ scale_j^(2H−2)`` (normalized) — slower
+  levels matter more the stronger the long memory;
+* blend ``g = clip(2H−1, 0, 1)`` between the shortest-scale EWMA
+  (H → ½: i.i.d.-like, only recent samples inform) and the weighted
+  long-memory combination (H → 1: strongly persistent).
+
+``H`` is static configuration (``cfg.hurst``), so the weights are
+Python-float constants folded into the compiled program — the state is
+just the ``[J]`` level bank.  :func:`config_for_trace` measures H from
+a concrete trace via ``workload.estimate_hurst`` (variance of
+aggregates), with a NaN guard for traces too short to estimate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predictors.base import (Array, Predictor, PredictorConfig,
+                                        register, workload_to_bin)
+
+
+class HierarchyInner(NamedTuple):
+    levels: Array  # [J] float32 — EWMA bank, fastest scale first
+
+
+def _weights(cfg: PredictorConfig):
+    """(per-scale weights ω[J], blend g) as Python floats — compile-time
+    constants, since ``hurst``/``hier_scales`` are static config."""
+    scales = np.asarray(cfg.hier_scales, np.float64)
+    omega = scales ** (2.0 * cfg.hurst - 2.0)
+    omega = omega / omega.sum()
+    g = float(np.clip(2.0 * cfg.hurst - 1.0, 0.0, 1.0))
+    return tuple(float(x) for x in omega), g
+
+
+class HierarchyPredictor(Predictor):
+    name = "hierarchy"
+
+    def init_inner(self, cfg: PredictorConfig) -> HierarchyInner:
+        # Assume peak at every scale before any evidence.
+        return HierarchyInner(
+            levels=jnp.ones(len(cfg.hier_scales), jnp.float32))
+
+    def predict_inner(self, cfg: PredictorConfig,
+                      inner: HierarchyInner) -> Array:
+        omega, g = _weights(cfg)
+        long_mem = jnp.sum(jnp.asarray(omega, jnp.float32) * inner.levels)
+        yhat = (1.0 - g) * inner.levels[0] + g * long_mem
+        return workload_to_bin(yhat, cfg.n_bins)
+
+    def observe_inner(self, cfg: PredictorConfig, inner: HierarchyInner,
+                      w: Array, actual_bin: Array,
+                      predicted_bin: Array) -> HierarchyInner:
+        alphas = jnp.asarray([2.0 / (s + 1.0) for s in cfg.hier_scales],
+                             jnp.float32)
+        return HierarchyInner(levels=inner.levels +
+                              alphas * (w - inner.levels))
+
+
+register(HierarchyPredictor())
+
+
+def config_for_trace(cfg: PredictorConfig, trace,
+                     min_block: int = 8) -> PredictorConfig:
+    """Return ``cfg`` with ``hurst`` measured from a concrete trace.
+
+    Uses ``workload.estimate_hurst`` (host-side, variance of
+    aggregates); the
+    estimate is clipped to the anti-persistent-free range [0.5, 1.0]
+    the weighting scheme assumes, and traces too short to estimate
+    (NaN) keep the configured default.  Call this *before* building the
+    fleet — it changes static config, so mixing per-trace Hurst values
+    into one sweep costs one compile per distinct value.
+    """
+    from repro.core import workload
+
+    h = workload.estimate_hurst(np.asarray(trace, np.float64),
+                                min_block=min_block)
+    if not np.isfinite(h):
+        return cfg
+    return dataclasses.replace(cfg, hurst=float(np.clip(h, 0.5, 1.0)))

@@ -1,0 +1,74 @@
+"""Holt-Winters (additive) workload predictor: level + trend + season.
+
+Double exponential smoothing extends the EWMA with a trend term so
+ramps are anticipated instead of chased; with ``season > 0`` a third
+additive component learns a repeating per-phase offset (the paper's
+"workloads with repeating patterns ... the average of the intervals
+represents a bias", §IV-A, generalized to online smoothing).  The
+seasonal period is static configuration, so the state stays a
+fixed-shape pytree ``(level, trend, season[P], step)`` and the scan
+carry never changes shape — season gating compiles away.
+
+Forecast: ``ŷ = ℓ + b + s[phase]``, binned by the shared shell (which
+also clips, so out-of-[0,1] forecasts saturate at the edge bins).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.predictors.base import (Array, Predictor, PredictorConfig,
+                                        register, workload_to_bin)
+
+
+class HoltWintersInner(NamedTuple):
+    level: Array   # float32 — smoothed level ℓ
+    trend: Array   # float32 — smoothed one-step trend b
+    season: Array  # [P] float32 — additive per-phase offsets (P ≥ 1)
+    step: Array    # int32 — completed observations (phase pointer)
+
+
+class HoltWintersPredictor(Predictor):
+    name = "holt_winters"
+
+    def _period(self, cfg: PredictorConfig) -> int:
+        return max(cfg.season, 1)
+
+    def init_inner(self, cfg: PredictorConfig) -> HoltWintersInner:
+        return HoltWintersInner(
+            level=jnp.asarray(1.0, jnp.float32),   # assume peak pre-evidence
+            trend=jnp.asarray(0.0, jnp.float32),
+            season=jnp.zeros(self._period(cfg), jnp.float32),
+            step=jnp.asarray(0, jnp.int32),
+        )
+
+    def predict_inner(self, cfg: PredictorConfig,
+                      inner: HoltWintersInner) -> Array:
+        yhat = inner.level + inner.trend
+        if cfg.season > 0:
+            # inner.step counts completed observations, so the upcoming
+            # step's phase is step % P.
+            yhat = yhat + inner.season[inner.step % cfg.season]
+        return workload_to_bin(yhat, cfg.n_bins)
+
+    def observe_inner(self, cfg: PredictorConfig, inner: HoltWintersInner,
+                      w: Array, actual_bin: Array,
+                      predicted_bin: Array) -> HoltWintersInner:
+        a, b, g = cfg.hw_alpha, cfg.hw_beta, cfg.hw_gamma
+        if cfg.season > 0:
+            phase = inner.step % cfg.season
+            s = inner.season[phase]
+            level = a * (w - s) + (1.0 - a) * (inner.level + inner.trend)
+            season = inner.season.at[phase].set(
+                g * (w - level) + (1.0 - g) * s)
+        else:
+            level = a * w + (1.0 - a) * (inner.level + inner.trend)
+            season = inner.season
+        trend = b * (level - inner.level) + (1.0 - b) * inner.trend
+        return HoltWintersInner(level=level, trend=trend, season=season,
+                                step=inner.step + 1)
+
+
+register(HoltWintersPredictor())

@@ -1,0 +1,113 @@
+"""Markov-chain workload predictor (paper §IV-A, §V).
+
+Discrete-time Markov chain over ``M`` workload bins.  Transition counts
+are learned online; prediction reads the current bin's transition row
+under the configured policy.  The paper's policy is ``argmax``; two
+beyond-paper variants ride the same counts:
+
+* ``quantile`` — smallest bin whose cumulative transition probability
+  exceeds ``q`` (trades a little power for fewer QoS violations);
+* ``expected`` — conservative ceil of the expected next bin.
+
+Misprediction handling (§V): the chain's state is always corrected to
+the *actual* bin; in ``threshold`` update mode edge counts are only
+flushed into the model after ``mispred_threshold`` consecutive
+mispredictions (the paper's lazy re-learning), while ``always`` mode
+learns every transition immediately.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.predictors.base import (Array, Predictor, PredictorConfig,
+                                        register)
+
+
+class MarkovInner(NamedTuple):
+    counts: Array          # [M, M] transition counts (float32)
+    pending: Array         # [M, M] counts awaiting threshold flush
+    current_bin: Array     # int32 — bin observed for the last completed step
+    consecutive_mispred: Array  # int32 — for the threshold update mode
+
+
+class MarkovPredictor(Predictor):
+    name = "markov"
+
+    def init_inner(self, cfg: PredictorConfig) -> MarkovInner:
+        m = cfg.n_bins
+        # Diagonal-biased Laplace prior: before any evidence, the best
+        # guess is a self-transition (workloads are short-term sticky);
+        # the small uniform floor keeps every edge alive, as in the
+        # paper's fully-connected chain.
+        prior = 0.01 * jnp.ones((m, m), jnp.float32) + \
+            jnp.eye(m, dtype=jnp.float32)
+        return MarkovInner(
+            counts=prior,
+            pending=jnp.zeros((m, m), jnp.float32),
+            current_bin=jnp.asarray(0, jnp.int32),
+            consecutive_mispred=jnp.asarray(0, jnp.int32),
+        )
+
+    def predict_inner(self, cfg: PredictorConfig,
+                      inner: MarkovInner) -> Array:
+        row = inner.counts[inner.current_bin]
+        probs = row / jnp.sum(row)
+        if cfg.policy == "argmax":
+            return jnp.argmax(probs).astype(jnp.int32)
+        if cfg.policy == "expected":
+            # conservative ceil of the expected bin
+            exp_bin = jnp.sum(probs * jnp.arange(cfg.n_bins))
+            return jnp.ceil(exp_bin).astype(jnp.int32)
+        # "quantile" — config validation rejects anything else eagerly
+        cdf = jnp.cumsum(probs)
+        return jnp.argmax(cdf >= cfg.quantile).astype(jnp.int32)
+
+    def observe_inner(self, cfg: PredictorConfig, inner: MarkovInner,
+                      w: Array, actual_bin: Array,
+                      predicted_bin: Array) -> MarkovInner:
+        m = cfg.n_bins
+        edge = jnp.zeros((m, m), jnp.float32) \
+            .at[inner.current_bin, actual_bin].add(1.0)
+
+        # The consecutive counter (which gates threshold-mode flushing)
+        # sees every disagreement, warmup included — only the *score*
+        # (in the shared shell) skips warmup, so observations reach the
+        # model exactly as in the paper's online training.
+        mispred = predicted_bin != actual_bin
+        consecutive = jnp.where(mispred, inner.consecutive_mispred + 1,
+                                jnp.asarray(0, jnp.int32))
+
+        if cfg.update_mode == "always":
+            counts = inner.counts * cfg.count_decay + edge
+            pending = inner.pending
+        else:
+            flush = consecutive >= cfg.mispred_threshold
+            pending_new = inner.pending + edge
+            counts = jnp.where(flush,
+                               inner.counts * cfg.count_decay + pending_new,
+                               inner.counts)
+            pending = jnp.where(flush, jnp.zeros_like(pending_new),
+                                pending_new)
+            consecutive = jnp.where(flush, jnp.asarray(0, jnp.int32),
+                                    consecutive)
+
+        return MarkovInner(counts=counts, pending=pending,
+                           current_bin=actual_bin,
+                           consecutive_mispred=consecutive)
+
+
+register(MarkovPredictor())
+
+
+def transition_matrix(state) -> Array:
+    """Row-stochastic transition probabilities P[i, j].
+
+    Accepts either a wrapper ``PredictorState`` (kind="markov") or a
+    bare :class:`MarkovInner`.
+    """
+    inner = getattr(state, "inner", state)
+    row_sums = jnp.sum(inner.counts, axis=1, keepdims=True)
+    return inner.counts / row_sums

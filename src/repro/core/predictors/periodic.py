@@ -1,0 +1,55 @@
+"""Periodic-bias predictor (paper §IV-A, first paragraph).
+
+For workloads with a *known* repeating period, the paper observes that
+"the average of the intervals represents a bias" — tracked here as a
+per-phase running mean of the continuous workload fraction.  The period
+is a call-site argument rather than a ``PredictorConfig`` field, so
+this stays a standalone state machine (used by the serving notebooks
+and tests) instead of a registered family; the registry's
+``holt_winters`` with ``season > 0`` is the online-smoothing
+generalization that rides the control loop.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class PeriodicState(NamedTuple):
+    phase_sum: Array    # [P] running sum per phase
+    phase_count: Array  # [P]
+    step: Array         # int32
+
+
+def init_periodic(period: int) -> PeriodicState:
+    return PeriodicState(phase_sum=jnp.zeros(period),
+                         phase_count=jnp.zeros(period),
+                         step=jnp.asarray(0, jnp.int32))
+
+
+def periodic_predict(state: PeriodicState, period: int) -> Array:
+    """Average of the same phase across previous periods (the 'bias').
+
+    Predicts the *upcoming* step — i.e. phase ``state.step % period``,
+    since ``state.step`` counts completed observations.
+    """
+    phase = state.step % period
+    cnt = state.phase_count[phase]
+    mean = state.phase_sum[phase] / jnp.maximum(cnt, 1.0)
+    # Until a full period has been seen, predict peak (nominal frequency).
+    return jnp.where(cnt > 0, mean, jnp.asarray(1.0))
+
+
+def periodic_observe(state: PeriodicState, w: Array,
+                     period: int) -> PeriodicState:
+    phase = state.step % period
+    return PeriodicState(
+        phase_sum=state.phase_sum.at[phase].add(w),
+        phase_count=state.phase_count.at[phase].add(1.0),
+        step=state.step + 1,
+    )

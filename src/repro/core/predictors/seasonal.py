@@ -1,0 +1,115 @@
+"""Seasonal-naive forecaster (s-naive) with EWMA fallback.
+
+The classical seasonal-naive benchmark: predict this step's workload as
+the value observed exactly one season ago (``cfg.season`` steps).  It
+is the strongest possible forecaster for *replayed* traces — trace
+replay tiles a recorded series exactly (``core.traces``), so once one
+full period has been observed every later step is predicted perfectly,
+including the sudden spikes that defeat every causal smoother.
+
+Before a full season has been seen (or when ``season == 0``) it falls
+back to the conservative upper envelope ``max(EWMA level, last w)`` —
+for a *provisioning* predictor under-prediction is the expensive error
+(QoS + backlog), and the envelope only misses where the smoothed and
+the naive estimate *both* miss — so on aperiodic traces the family
+degrades gracefully instead of pinning nominal.
+
+:func:`config_for_trace` detects an exact tiling period host-side —
+the smallest lag ``p`` with ``max |w[t] - w[t-p]| ≤ tol`` — mirroring
+``hierarchy.config_for_trace``'s measure-then-configure workflow.
+``season`` is static config (it sizes the ``[P]`` ring carry), so
+mixing per-trace periods into one sweep costs one compile per distinct
+period.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predictors.base import (Array, Predictor, PredictorConfig,
+                                        register, workload_to_bin)
+
+
+class SeasonalInner(NamedTuple):
+    ring: Array   # [max(season, 1)] float32 — last observed w per phase
+    level: Array  # scalar float32 — EWMA half of the fallback envelope
+    last: Array   # scalar float32 — last observed w (naive half)
+    step: Array   # scalar int32 — observations so far
+
+
+class SeasonalNaivePredictor(Predictor):
+    name = "seasonal_naive"
+
+    def init_inner(self, cfg: PredictorConfig) -> SeasonalInner:
+        return SeasonalInner(
+            ring=jnp.ones(max(cfg.season, 1), jnp.float32),
+            level=jnp.asarray(1.0, jnp.float32),
+            last=jnp.asarray(1.0, jnp.float32),
+            step=jnp.asarray(0, jnp.int32))
+
+    def predict_inner(self, cfg: PredictorConfig,
+                      inner: SeasonalInner) -> Array:
+        envelope = jnp.maximum(inner.level, inner.last)
+        if cfg.season == 0:
+            return workload_to_bin(envelope, cfg.n_bins)
+        phase = jnp.mod(inner.step, cfg.season)
+        seen_full_period = inner.step >= cfg.season
+        # Exact phase: the ring value *is* next step's workload (replay
+        # tiling), so the forecast error is zero and the controller's
+        # throughput margin is pure headroom — hand back margin_bins
+        # bins of it.  Safe by construction: margin_bins ≥ 1 implies
+        # t ≥ 1/M, so provisioning for bin p − margin_bins still
+        # covers every workload in bin p.
+        exact = (workload_to_bin(inner.ring[phase], cfg.n_bins)
+                 - cfg.margin_bins)
+        fallback = workload_to_bin(envelope, cfg.n_bins)
+        return jnp.where(seen_full_period, exact, fallback)
+
+    def observe_inner(self, cfg: PredictorConfig, inner: SeasonalInner,
+                      w: Array, actual_bin: Array,
+                      predicted_bin: Array) -> SeasonalInner:
+        level = inner.level + cfg.ewma_alpha * (w - inner.level)
+        ring = inner.ring
+        if cfg.season > 0:
+            phase = jnp.mod(inner.step, cfg.season)
+            ring = ring.at[phase].set(w)
+        return SeasonalInner(ring=ring, level=level, last=w,
+                             step=inner.step + 1)
+
+
+register(SeasonalNaivePredictor())
+
+
+def detect_period(trace, min_period: int = 8,
+                  tol: float = 1e-6) -> int:
+    """Smallest exact tiling period of ``trace``, or 0 if none.
+
+    A period ``p`` qualifies when every sample matches the one a full
+    period earlier to within ``tol`` — the signature of a replayed
+    (tiled) trace — and at least a quarter period of repeated evidence
+    exists past the first occurrence.
+    """
+    w = np.asarray(trace, np.float64)
+    n = len(w)
+    for p in range(min_period, (4 * n) // 5 + 1):
+        if n - p < max(p // 4, 1):
+            break
+        if np.abs(w[p:] - w[:-p]).max() <= tol:
+            return p
+    return 0
+
+
+def config_for_trace(cfg: PredictorConfig, trace, min_period: int = 8,
+                     tol: float = 1e-6) -> PredictorConfig:
+    """Return ``cfg`` with ``season`` set to the trace's exact tiling
+    period (0 — pure EWMA fallback — when the trace does not tile).
+
+    Call before building the fleet: ``season`` is static config, so
+    per-trace periods cost one compile per distinct value.
+    """
+    return dataclasses.replace(
+        cfg, season=detect_period(trace, min_period=min_period, tol=tol))

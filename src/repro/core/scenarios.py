@@ -268,6 +268,17 @@ def _register_bundled_replays() -> None:
             "bursty BURSE tail (traces.splice)",
             traces.splice([azure, "burse"], [0.6, 0.4])),
             overwrite=True)
+    google = srcs.get("google_cluster")
+    if azure is not None and google is not None:
+        # Pure-replay superposition: both components tile exactly, so
+        # the blend tiles with the periods' lcm — the aggregate demand
+        # a controller sees when two replayed clusters share a fleet.
+        register_scenario(Scenario(
+            "cloud_overlay",
+            "both bundled cluster replays superposed 50/50 "
+            "(traces.mix) — aggregate two-cluster demand",
+            traces.mix([azure, google], [0.5, 0.5])),
+            overwrite=True)
 
 
 _register_bundled_replays()
@@ -323,7 +334,8 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
     replays added via :func:`register_replay`; ``None`` sweeps the whole
     library.  Each platform needs array ``params`` (every factory helper
     attaches them); ``**cfg_kwargs`` feed ``ControllerConfig`` (e.g.
-    ``n_nodes=16``).
+    ``n_nodes=16``, or ``predictor="ewma"`` to swap the workload
+    forecaster — any registered kind or a full ``PredictorConfig``).
 
     Node-failure scenarios contribute their usable-nodes schedule, which
     rides the same ``[K, C]`` chunks as the workload (healthy scenarios
@@ -334,7 +346,9 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
     ``table[platform][technique][scenario]`` holds power_gain (vs the
     *available* fleet) / power_gain_vs_configured / mean_power_w /
     mean_avail_nodes / qos_violation_rate / served_fraction /
-    mean_backlog.
+    mean_backlog / misprediction_rate / margin_misprediction_rate
+    (post-warmup exact-bin and beyond-margin miss rates — the
+    gain-vs-misprediction sensitivity axes).
     """
     missing = [p.name for p in platforms if p.params is None]
     if missing:
@@ -356,6 +370,7 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
                                         avail=avail[None, None])
     node_nom_w = ctl.fleet_node_nominal_watts(params, cfg)     # [P]
     nominal_cfg_w = node_nom_w * cfg.n_nodes                   # [P]
+    n_scored = max(n_steps - cfg.predictor.warmup_steps, 1)
 
     table: Dict[str, Dict[str, Dict[str, Dict[str, float]]]] = {}
     for i, plat in enumerate(platforms):
@@ -376,6 +391,10 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
                     "served_fraction":
                         float(summary.served_fraction[i, j, k]),
                     "mean_backlog": float(summary.mean_backlog[i, j, k]),
+                    "misprediction_rate":
+                        float(summary.mispredictions[i, j, k]) / n_scored,
+                    "margin_misprediction_rate":
+                        float(summary.margin_misses[i, j, k]) / n_scored,
                 }
     return {"scenarios": names, "techniques": tuple(techniques),
             "n_steps": n_steps, "table": table}

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import controller as ctl
-from repro.core import predictor as pred_mod
+from repro.core import predictors as pred_mod
 from repro.core import workload as wl
 from repro.serving.batching import ContinuousBatcher, Request
 
@@ -81,7 +81,8 @@ class DvfsServingSimulator:
         the §V controller *in the loop*.
 
         Each control interval τ (``steps_per_tau`` decode steps) the
-        measured workload signal feeds the Markov predictor, and the
+        measured workload signal feeds the configured workload
+        predictor, and the
         selected operating point's delivered relative throughput —
         ``f_rel · n_active/n_nodes``, so node-gating techniques
         (power_gating, hybrid) are throttled by their powered-off chips
@@ -241,9 +242,8 @@ class DvfsServingSimulator:
             interval_tokens[0] = 0
             if update_controller:
                 n_ctrl_tau += 1
-                actual = int(pred_mod.workload_to_bin(jnp.asarray(signal),
-                                                      pcfg.n_bins))
-                mstate = pred_mod.observe(pcfg, mstate, jnp.asarray(actual),
+                mstate = pred_mod.observe(pcfg, mstate,
+                                          jnp.asarray(signal),
                                           jnp.asarray(predicted))
                 predicted = int(pred_mod.predict(pcfg, mstate))
                 tau_idx += 1
@@ -316,6 +316,9 @@ class DvfsServingSimulator:
             misprediction_rate=(int(mstate.mispredictions)
                                 / max(n_ctrl_tau - pcfg.warmup_steps, 1)),
             mean_backlog=float(np.mean(queued)) / batch_size,
+            margin_misprediction_rate=(
+                int(mstate.margin_misses)
+                / max(n_ctrl_tau - pcfg.warmup_steps, 1)),
             latency_p50=p50,
             latency_p99=p99,
             nominal_power_configured_w=nominal_cfg_w,

@@ -150,7 +150,7 @@ def test_hybrid_gates_nodes_at_low_load():
 def test_violations_count_backlogged_demand():
     """Regression: a step whose backlog-inflated demand exceeds capacity
     is a QoS miss even when w_t alone fits (served-within-τ semantics)."""
-    import repro.core.predictor as pred_mod
+    import repro.core.predictors as pred_mod
     plat = ctl.fpga_platform(ACCELERATORS["tabla"])
     cfg = ctl.ControllerConfig(
         predictor=pred_mod.PredictorConfig(warmup_steps=0))

@@ -1,13 +1,14 @@
 """Fused fleet path: array-parameterized platforms, masked grids, batched
 controller — parity with the closure path and zero-retrace guarantees."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import characterization as char
 from repro.core import controller as ctl
-from repro.core import predictor as pred_mod
+from repro.core import predictors as pred_mod
 from repro.core import voltage as volt
 from repro.core import workload as wl
 from repro.core.accelerators import ACCELERATORS
@@ -178,21 +179,23 @@ def test_grid_top_is_nominal_for_any_step(trace):
                                    rtol=1e-5, err_msg=tech)
 
 
-def test_evaluate_trace_matches_host_loop():
-    cfg = pred_mod.PredictorConfig(n_bins=10, warmup_steps=8)
+@pytest.mark.parametrize("kind", sorted(pred_mod.available()))
+def test_evaluate_trace_matches_host_loop(kind):
+    cfg = pred_mod.PredictorConfig(n_bins=10, warmup_steps=8, kind=kind)
     trace = wl.generate_trace(wl.WorkloadConfig(n_steps=96, seed=4))
     state = pred_mod.init_state(cfg)
     preds, acts = [], []
     for w in trace:
         p = pred_mod.predict(cfg, state)
         a = pred_mod.workload_to_bin(jnp.asarray(float(w)), cfg.n_bins)
-        state = pred_mod.observe(cfg, state, a, p)
+        state = pred_mod.observe(cfg, state, jnp.asarray(float(w)), p)
         preds.append(int(p))
         acts.append(int(a))
     out = pred_mod.evaluate_trace(cfg, trace)
-    np.testing.assert_array_equal(np.asarray(out.predicted), preds)
-    np.testing.assert_array_equal(np.asarray(out.actual), acts)
+    np.testing.assert_array_equal(np.asarray(out.predicted), preds, kind)
+    np.testing.assert_array_equal(np.asarray(out.actual), acts, kind)
     assert int(out.final_state.mispredictions) == int(state.mispredictions)
+    assert int(out.final_state.margin_misses) == int(state.margin_misses)
 
 
 def test_streaming_matches_materialized(trace):
@@ -218,9 +221,11 @@ def test_streaming_matches_materialized(trace):
                                np.asarray(res.backlog)[..., -1], atol=1e-6)
     np.testing.assert_array_equal(fs.mispredictions,
                                   np.asarray(res.mispredictions))
+    np.testing.assert_array_equal(fs.margin_misses,
+                                  np.asarray(res.margin_misses))
     np.testing.assert_allclose(
-        np.asarray(fs.final_predictor.counts),
-        np.asarray(res.final_predictor.counts), rtol=1e-6)
+        np.asarray(fs.final_predictor.inner.counts),
+        np.asarray(res.final_predictor.inner.counts), rtol=1e-6)
     # offered/served bookkeeping
     np.testing.assert_allclose(fs.offered, float(np.sum(trace)), rtol=1e-5)
     served = fs.offered - fs.final_backlog
@@ -258,6 +263,59 @@ def test_streaming_zero_retrace_across_same_shaped_sweeps(trace):
     trace3 = wl.generate_trace(wl.WorkloadConfig(n_steps=512, seed=12))
     ctl.simulate_fleet_stream(tables2, trace3, cfg, chunk_size=64)
     assert ctl.fleet_trace_counts() == before
+
+
+@pytest.mark.parametrize("kind", sorted(pred_mod.available()))
+def test_streaming_matches_materialized_per_predictor(trace, kind):
+    """Every registered forecaster flows through both fleet programs and
+    the streamed reductions match the materialized ones to ≤1e-5."""
+    params = char.stack_platform_params(
+        [ctl.fpga_platform(ACCELERATORS["tabla"]).params])
+    cfg = ctl.ControllerConfig(predictor=kind)
+    tables = ctl.fleet_bin_tables(params, cfg, ("proposed", "hybrid"))
+    res = ctl.simulate_fleet(tables, trace, cfg)
+    fs = ctl.simulate_fleet_stream(tables, trace, cfg, chunk_size=100)
+    np.testing.assert_allclose(fs.mean_power_w,
+                               np.asarray(res.power).mean(-1), rtol=1e-5,
+                               err_msg=kind)
+    np.testing.assert_allclose(fs.mean_backlog,
+                               np.asarray(res.backlog).mean(-1), atol=1e-5,
+                               err_msg=kind)
+    np.testing.assert_array_equal(fs.mispredictions,
+                                  np.asarray(res.mispredictions), kind)
+    np.testing.assert_array_equal(fs.margin_misses,
+                                  np.asarray(res.margin_misses), kind)
+    # the generic predictor carry itself round-trips both paths
+    for a, b in zip(jax.tree.leaves(fs.final_predictor),
+                    jax.tree.leaves(res.final_predictor)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, err_msg=kind)
+
+
+def test_predictor_sweep_zero_retrace(trace):
+    """Same-family predictor sweeps compile zero extra programs: after
+    one compile per family, new platforms + new trace values reuse all
+    three fleet programs — the predictor state rides the scan carries as
+    a generic pytree, never a retrace axis."""
+    first = char.stack_platform_params(
+        [ctl.fpga_platform(ACCELERATORS["tabla"]).params])
+    configs = {kind: ctl.ControllerConfig(predictor=kind)
+               for kind in ("ewma", "hierarchy")}
+    for cfg in configs.values():  # one compile per family — accepted
+        tables = ctl.fleet_bin_tables(first, cfg, ("proposed", "hybrid"))
+        ctl.simulate_fleet(tables, trace, cfg)
+        ctl.simulate_fleet_stream(tables, trace, cfg, chunk_size=64)
+    before = ctl.fleet_trace_counts()
+    # same families, new platforms + new traces → zero extra programs
+    second = char.stack_platform_params(
+        [ctl.fpga_platform(ACCELERATORS["stripes"]).params])
+    for seed, cfg in zip((21, 22), configs.values()):
+        trace2 = wl.generate_trace(wl.WorkloadConfig(n_steps=256, seed=seed))
+        tables2 = ctl.fleet_bin_tables(second, cfg, ("proposed", "hybrid"))
+        ctl.simulate_fleet(tables2, trace2, cfg)
+        ctl.simulate_fleet_stream(tables2, trace2, cfg, chunk_size=64)
+    after = ctl.fleet_trace_counts()
+    assert after == before, f"retraced: {before} -> {after}"
 
 
 def test_streaming_long_trace_constant_memory():

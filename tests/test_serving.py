@@ -213,7 +213,7 @@ def test_autoscaler_request_loop():
 
 def _closed_loop_sim(technique):
     import repro.core.controller as ctl
-    import repro.core.predictor as pred_mod
+    import repro.core.predictors as pred_mod
     terms = RooflineTerms(t_compute=0.002, t_memory=0.012,
                           t_collective=0.001)
     cfg = ctl.ControllerConfig(
