@@ -426,6 +426,78 @@ def bench_replay():
     return rows
 
 
+def bench_scheduler():
+    """Per-tenant scheduling co-optimized with DVFS vs its ablations.
+
+    Three arms on the ``multi_tenant`` scenario (three QoS classes:
+    interactive / periodic / batch), one streaming campaign each:
+    ``sched_dvfs`` (hybrid DVFS + priority scheduler — deferral shapes
+    the gear argmin, valley-fill drains batch at the energy-optimal
+    bin), ``dvfs_only`` (hybrid, scheduler off), and
+    ``placement_only`` (priority scheduler placing onto gated nodes at
+    nominal rails).  The co-optimized arm must win on power at
+    equal-or-better worst-tenant QoS violation.  The two
+    ``stream_reuse`` rows are the tenant-axis zero-retrace witnesses:
+    after the first arm compiles the chunk program, scheduler-on/off
+    sweeps and tenant-count sweeps (scenarios padded to a common
+    width) must add no compiled programs.
+    """
+    from repro.core import scenarios as scn
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    chunk = max(min(N_STEPS, 512), 1)
+    kw = dict(scenario_names=("multi_tenant",), n_steps=N_STEPS,
+              chunk_size=chunk, tenants=3)
+    arms = (("sched_dvfs", "hybrid", "priority"),
+            ("dvfs_only", "hybrid", "none"),
+            ("placement_only", "power_gating", "priority"))
+    cells = {}
+    rows = []
+    stream0 = None
+    for label, tech, sched in arms:
+        t0 = time.perf_counter()
+        out = scn.run_campaign(platforms, techniques=(tech,),
+                               scheduler=sched, **kw)
+        dt = time.perf_counter() - t0
+        c = out["table"][platforms[0].name][tech]["multi_tenant"]
+        cells[label] = c
+        if stream0 is None:
+            stream0 = ctl.fleet_trace_counts()["stream"]
+        rows.append((f"scheduler/{label}", dt / N_STEPS * 1e6,
+                     f"power_w={c['mean_power_w']:.2f}"
+                     f";worst_tenant_qos="
+                     f"{c['worst_tenant_qos_violation']:.3f}"
+                     f";t_viol=" + "/".join(
+                         f"{v:.3f}" for v in c["tenant_qos_violation_rate"])
+                     + ";t_starve=" + "/".join(
+                         f"{v:.3f}" for v in c["tenant_starvation_rate"])))
+    # Scheduler-on/off sweeps above share one chunk program; a
+    # tenant-count sweep at a padded common width must reuse it too
+    # (different T recompiles once, then 2- and 3-class scenarios ride
+    # the same width-4 program).
+    onoff_delta = ctl.fleet_trace_counts()["stream"] - stream0
+    scn.run_campaign(platforms, techniques=("hybrid",),
+                     scenario_names=("multi_tenant",), n_steps=N_STEPS,
+                     chunk_size=chunk, tenants=4, scheduler="priority")
+    before = ctl.fleet_trace_counts()["stream"]
+    scn.run_campaign(platforms, techniques=("hybrid",),
+                     scenario_names=("flash_crowd",), n_steps=N_STEPS,
+                     chunk_size=chunk, tenants=4, scheduler="priority")
+    width_delta = ctl.fleet_trace_counts()["stream"] - before
+    s, d, p = (cells[k] for k in ("sched_dvfs", "dvfs_only",
+                                  "placement_only"))
+    rows.append(("scheduler/cooptimization", None,
+                 f"power_vs_dvfs_only="
+                 f"{s['mean_power_w'] / d['mean_power_w']:.3f}"
+                 f";power_vs_placement_only="
+                 f"{s['mean_power_w'] / p['mean_power_w']:.3f}"
+                 f";qos_ok={int(s['worst_tenant_qos_violation'] <= d['worst_tenant_qos_violation'] + 1e-9 and s['worst_tenant_qos_violation'] <= p['worst_tenant_qos_violation'] + 1e-9)}"))
+    rows.append(("scheduler/stream_reuse_onoff", None,
+                 f"retraces={onoff_delta};chunk={chunk}"))
+    rows.append(("scheduler/stream_reuse_tenant_width", None,
+                 f"retraces={width_delta};chunk={chunk};width=4"))
+    return rows
+
+
 def bench_voltage_optimizer():
     """Runtime cost of the §V voltage selection (table build + lookup)."""
     plat = ctl.fpga_platform(ACCELERATORS["tabla"])
@@ -585,8 +657,8 @@ BENCHES = [bench_fleet, bench_table2, bench_fig4_workload_sweep,
            bench_fig5_alpha_sweep, bench_fig6_beta_sweep, bench_fig10_trace,
            bench_fig12_per_accelerator_traces, bench_predictor,
            bench_hybrid, bench_campaign, bench_failure, bench_replay,
-           bench_voltage_optimizer, bench_composition, bench_cold,
-           bench_tpu_serving]
+           bench_scheduler, bench_voltage_optimizer, bench_composition,
+           bench_cold, bench_tpu_serving]
 
 
 def main(argv=None) -> None:

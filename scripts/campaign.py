@@ -12,6 +12,9 @@ utilization file via ``--trace``) sweep through the same programs.
       --scenarios burse,flash_crowd,node_failure --json campaign.json
   PYTHONPATH=src python scripts/campaign.py --platforms tabla,stripes,tpu
   PYTHONPATH=src python scripts/campaign.py --list-scenarios
+  PYTHONPATH=src python scripts/campaign.py --tenants 3 --scheduler priority \
+      --scenarios multi_tenant,flash_crowd --platforms tabla
+  PYTHONPATH=src python scripts/campaign.py --list-schedulers
   PYTHONPATH=src python scripts/campaign.py \
       --trace data/traces/azure_vm_cpu.csv --trace-tau 60 \
       --scenarios burse --platforms tabla --steps 4096
@@ -67,6 +70,17 @@ def main(argv=None) -> int:
     ap.add_argument("--predictor", type=str, default="markov",
                     help="workload forecaster for every cell: one of the "
                     "registered kinds (see core.predictors.available())")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="resolve each scenario into this many tenant "
+                    "classes and report per-tenant QoS (0 = aggregate "
+                    "single-tenant path, today's behavior; scenarios "
+                    "with fewer classes pad with inert tenants)")
+    ap.add_argument("--scheduler", type=str, default="none",
+                    help="per-tenant placement/admission policy: one of "
+                    "the registered schedulers (see --list-schedulers); "
+                    "'none' reproduces the aggregate allocator")
+    ap.add_argument("--list-schedulers", action="store_true",
+                    help="print the registered scheduler policies and exit")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cache-dir", type=str, default="",
                     help="persistent JAX compilation-cache directory "
@@ -105,6 +119,24 @@ def main(argv=None) -> int:
     if args.predictor not in preds.available():
         raise SystemExit(f"error: unknown --predictor {args.predictor!r}; "
                          f"choose from {list(preds.available())}")
+    from repro.core import scheduler as sched_mod
+    if args.scheduler not in sched_mod.available():
+        raise SystemExit(f"error: unknown --scheduler {args.scheduler!r}; "
+                         f"choose from {list(sched_mod.available())}")
+    if args.tenants < 0:
+        raise SystemExit(f"error: --tenants must be >= 0 "
+                         f"(got {args.tenants})")
+    if args.scheduler != "none" and args.tenants == 0:
+        raise SystemExit("error: --scheduler needs a tenant-resolved "
+                         "workload plane; pass --tenants N (N >= 1)")
+
+    if args.list_schedulers:
+        for name in sched_mod.available():
+            cfg = sched_mod.get(name)
+            state = "enabled" if cfg.enabled else "pass-through"
+            print(f"{name:16s} policy={cfg.policy:10s} "
+                  f"migration_cost={cfg.migration_cost:g}  ({state})")
+        return 0
 
     # Register --trace before --list-scenarios so the listing shows (and
     # validates) the trace the user just pointed at.
@@ -142,7 +174,8 @@ def main(argv=None) -> int:
         t = aot.warm_fleet_programs(
             params, cfg, techniques,
             fleet_shape=(len(platforms), len(techniques), n_scen),
-            chunk_size=min(args.chunk, args.steps))
+            chunk_size=min(args.chunk, args.steps),
+            n_tenants=max(1, args.tenants))
         print(f"# warmed fleet programs: tables {t['tables_compile_s']:.2f}s"
               f", stream {t['stream_compile_s']:.2f}s")
 
@@ -150,12 +183,16 @@ def main(argv=None) -> int:
     out = scn.run_campaign(platforms, scenario_names=names,
                            techniques=techniques, n_steps=args.steps,
                            seed=args.seed, chunk_size=args.chunk,
-                           n_nodes=args.n_nodes, predictor=args.predictor)
+                           n_nodes=args.n_nodes, predictor=args.predictor,
+                           tenants=args.tenants or None,
+                           scheduler=args.scheduler)
     dt = time.perf_counter() - t0
     cells = len(platforms) * len(techniques) * len(out["scenarios"])
+    tenant_note = (f", tenants={args.tenants}, scheduler={args.scheduler}"
+                   if args.tenants else "")
     print(f"# {cells} cells × {args.steps} steps in {dt:.2f}s "
-          f"(chunk={args.chunk}, predictor={args.predictor}, "
-          f"traces={ctl.fleet_trace_counts()})\n")
+          f"(chunk={args.chunk}, predictor={args.predictor}"
+          f"{tenant_note}, traces={ctl.fleet_trace_counts()})\n")
 
     for scen in out["scenarios"]:
         print(f"== scenario: {scen} ==")
@@ -165,14 +202,21 @@ def main(argv=None) -> int:
             print(f"   (mean usable nodes {avail:.2f}/{args.n_nodes}; "
                   "power_gain is vs the available fleet — "
                   "power_gain_vs_configured is in the JSON)")
-        print(f"{'platform':16s} " + " ".join(f"{t:>14s}" for t in techniques))
+        width = 14 + (6 if args.tenants else 0)
+        print(f"{'platform':16s} "
+              + " ".join(f"{t:>{width}s}" for t in techniques))
         for plat in platforms:
             row = out["table"][plat.name]
             cells_s = " ".join(
                 f"{row[t][scen]['power_gain']:6.2f}x"
                 f"/q{row[t][scen]['qos_violation_rate']:.2f}"
+                + (f"/w{row[t][scen]['worst_tenant_qos_violation']:.2f}"
+                   if args.tenants else "")
                 for t in techniques)
             print(f"{plat.name:16s} {cells_s}")
+        if args.tenants:
+            print("   (w = worst per-tenant QoS-violation rate across "
+                  "active tenant classes)")
         print()
 
     if args.json:

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from repro.core import controller as ctl
 from repro.core import predictors as pred_mod
 from repro.core import characterization as char
+from repro.core import scheduler as sched_mod
 
 _CACHE_DIR: Optional[str] = None
 
@@ -76,15 +77,18 @@ def warm_fleet_programs(params: char.PlatformParams,
                         cfg: ctl.ControllerConfig,
                         techniques: Sequence[str] = ctl.DEFAULT_TECHNIQUES,
                         *, fleet_shape: Optional[Tuple[int, ...]] = None,
-                        chunk_size: int = 1024,
+                        chunk_size: int = 1024, n_tenants: int = 1,
                         emit: Sequence[str] = ()) -> Dict[str, float]:
     """AOT-compile the two fleet programs for one fleet shape.
 
     ``fleet_shape`` is the tables' leading axes as seen by
     :func:`~repro.core.controller.simulate_fleet_stream` — default
     ``(P, len(techniques))``; pass e.g. ``(P, T, N)`` for a campaign
-    with a scenario axis.  Lowering uses abstract values only (no table
-    math runs); ``.compile()`` populates the persistent cache when
+    with a scenario axis.  ``n_tenants`` is the tenant-axis width of
+    the workload plane (1 for aggregate runs; tenant campaigns pad to
+    a common width, so warm once at that width).  Lowering uses
+    abstract values only (no table math runs); ``.compile()``
+    populates the persistent cache when
     :func:`enable_compilation_cache` is active.  Returns wall-clock
     seconds per program: ``{"tables_compile_s", "stream_compile_s"}``.
     """
@@ -114,12 +118,19 @@ def warm_fleet_programs(params: char.PlatformParams,
     mstate = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct((k,) + x.shape, x.dtype),
         pred_mod.state_spec(cfg.predictor))
-    run_cfg = dataclasses.replace(cfg, technique="proposed")
+    q = max(1, int(n_tenants))
+    spec = sched_mod.TenantSpec(*[jax.ShapeDtypeStruct((k, q), f32)
+                                  for _ in sched_mod.TenantSpec._fields])
+    run_cfg = dataclasses.replace(cfg, technique="proposed",
+                                  scheduler="none")
     t0 = time.perf_counter()
     ctl._fleet_stream_chunk_jit.lower(
-        flat, mstate, jax.ShapeDtypeStruct((k,), f32),
-        jax.ShapeDtypeStruct((k, c), f32), jax.ShapeDtypeStruct((k, c), f32),
-        jax.ShapeDtypeStruct((c,), jnp.bool_), run_cfg,
+        flat, mstate, jax.ShapeDtypeStruct((k, q), f32),
+        jax.ShapeDtypeStruct((k, q), f32),
+        jax.ShapeDtypeStruct((k, c, q), f32),
+        jax.ShapeDtypeStruct((k, c), f32),
+        jax.ShapeDtypeStruct((c,), jnp.bool_), spec,
+        jax.ShapeDtypeStruct((3,), f32), run_cfg,
         tuple(emit)).compile()
     t_stream = time.perf_counter() - t0
     return {"tables_compile_s": t_tables, "stream_compile_s": t_stream}

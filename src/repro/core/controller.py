@@ -34,6 +34,7 @@ import numpy as np
 from repro.core import characterization as char
 from repro.core import pll as pll_mod
 from repro.core import predictors as pred_mod
+from repro.core import scheduler as sched_mod
 from repro.core import voltage as volt_mod
 from repro.core.accelerators import Accelerator
 from repro.kernels.grid_argmin import grid_argmin as grid_argmin_op
@@ -171,12 +172,29 @@ class ControllerConfig:
     #: string becomes ``PredictorConfig(kind=...)`` with defaults.
     predictor: pred_mod.PredictorConfig | str = dataclasses.field(
         default_factory=pred_mod.PredictorConfig)
+    #: Multi-tenant scheduler selection: a ``SchedulerConfig`` or a
+    #: registered name (``"none"``, ``"priority"``, ``"fair_share"``) —
+    #: a bare string is resolved through the ``core.scheduler`` registry.
+    #: Only the streaming fleet path acts on it (the scheduler runs
+    #: inside the ``[K, C]`` chunk scan); its knobs are traced *values*,
+    #: so on/off sweeps share one compiled program.
+    scheduler: sched_mod.SchedulerConfig | str = "none"
     pll: pll_mod.PllConfig = dataclasses.field(default_factory=pll_mod.PllConfig)
     v_step: float = char.V_STEP
 
     def __post_init__(self):
         if self.technique not in TECHNIQUES:
             raise ValueError(f"unknown technique {self.technique!r}")
+        # Resolve the scheduler eagerly so a typo fails at config time
+        # (mirrors the predictor-kind validation), keeping the field a
+        # hashable SchedulerConfig for the static jit key.
+        if isinstance(self.scheduler, str):
+            object.__setattr__(self, "scheduler",
+                               sched_mod.get(self.scheduler))
+        elif not isinstance(self.scheduler, sched_mod.SchedulerConfig):
+            raise TypeError(
+                f"scheduler must be a registered name or SchedulerConfig, "
+                f"got {type(self.scheduler).__name__}")
         if self.margin < 1.0 / self.n_bins + 1e-9:
             # §V: t must exceed 1/M so the capacity provisioned for bin i
             # still covers a one-bin under-prediction.
@@ -397,7 +415,12 @@ class Summary:
 
 
 class _StepOut(NamedTuple):
-    """Per-step fields produced by one §V control step (scan ``ys``)."""
+    """Per-step fields produced by one §V control step (scan ``ys``).
+
+    The first ten fields are aggregate scalars (the emittable per-step
+    :class:`TraceResult` fields); the ``tenant_*`` tail carries the
+    ``[T]`` per-tenant outcome for the streaming reductions.
+    """
 
     power: Array
     capacity: Array
@@ -409,6 +432,16 @@ class _StepOut(NamedTuple):
     v_bram: Array
     f_rel: Array
     n_active: Array
+    tenant_served: Array     # [T]
+    tenant_backlog: Array    # [T]
+    tenant_violation: Array  # [T] bool
+    tenant_starved: Array    # [T] bool
+
+
+#: Per-step fields ``emit=`` may request — aggregate scalars only (the
+#: ``[T]``-shaped tenant tail concatenates on the wrong axis).
+_EMITTABLE = ("power", "capacity", "violation", "backlog", "predicted_bin",
+              "actual_bin", "v_core", "v_bram", "f_rel", "n_active")
 
 
 def availability_point(tables: BinTables, selected,
@@ -433,54 +466,96 @@ def availability_point(tables: BinTables, selected,
     return n_act, cap, pwr
 
 
+_Carry = Tuple[pred_mod.PredictorState, Array, Array]
+
+
 def _control_step(tables: BinTables, cfg: ControllerConfig,
-                  carry: Tuple[pred_mod.PredictorState, Array],
-                  w_t: Array, avail_t: Array
-                  ) -> Tuple[Tuple[pred_mod.PredictorState, Array], _StepOut]:
-    """One §V control step: predict → select → clamp to availability →
-    serve → observe.
+                  carry: _Carry, w_t: Array, avail_t: Array,
+                  spec: sched_mod.TenantSpec, sched: Array
+                  ) -> Tuple[_Carry, _StepOut]:
+    """One §V control step: predict → schedule-shape → select → clamp to
+    availability → place/serve → observe.
 
     Shared by the materializing scan and the streaming chunk scan.
-    ``avail_t`` is the step's usable node count (``cfg.n_nodes`` for a
-    healthy fleet); :func:`availability_point` clamps the selected
-    bin's operating point to it, so dead nodes are unpowered and
-    unprovisioned.  A step violates QoS when its *demand* — offered
-    work plus carried backlog — exceeds delivered capacity: under the
-    paper's served-within-τ semantics a step that cannot clear its
-    backlog-inflated demand is a miss even when ``w_t`` alone would
-    fit.
+    ``w_t`` is the step's per-tenant offered work ``[T]`` (aggregate
+    callers pass a single default tenant); ``carry`` threads the
+    predictor state plus the per-tenant backlog and node-placement
+    ``[T]`` arrays.  ``avail_t`` is the step's usable node count
+    (``cfg.n_nodes`` for a healthy fleet); :func:`availability_point`
+    clamps the selected bin's operating point to it, so dead nodes are
+    unpowered and unprovisioned.
+
+    The scheduler (``sched`` = :func:`~repro.core.scheduler
+    .scheduler_values`) acts twice, both as traced values: it shapes
+    the provisioned *bin* (defer slack-tolerant tenants, cover overdue
+    backlog — :func:`~repro.core.scheduler.provision_bin`, the DVFS
+    co-optimization) and it splits the delivered capacity across
+    tenants (:func:`~repro.core.scheduler.schedule_step` — priority
+    admission, node bin-packing, migration cost).  Disabled, both
+    collapse to the aggregate controller: a step violates QoS when its
+    *demand* — offered work plus carried backlog — exceeds delivered
+    capacity, exactly the served-within-τ semantics the paper uses.
     """
-    mstate, backlog = carry
+    mstate, backlog_t, place = carry
+    w_agg = jnp.sum(w_t * spec.active, -1)
     predicted = pred_mod.predict(cfg.predictor, mstate)
-    actual = pred_mod.workload_to_bin(w_t, cfg.n_bins)
-    selected = jnp.where(cfg.use_oracle, actual, predicted)
+    actual = pred_mod.workload_to_bin(w_agg, cfg.n_bins)
+    base = jnp.where(cfg.use_oracle, actual, predicted)
+    shaped = sched_mod.provision_bin(spec, base, backlog_t, cfg.n_bins)
+    shaped = sched_mod.opportunistic_bin(
+        tables.power, tables.capacity, shaped,
+        jnp.sum(backlog_t * spec.active, -1))
+    selected = jnp.where(sched[0] > 0, shaped, base)
 
     n_act, cap, pwr = availability_point(tables, selected, avail_t)
 
     # QoS/backlog dynamics: offered work this step plus carried backlog,
-    # served up to delivered capacity.
-    served = jnp.minimum(cap, w_t + backlog)
-    new_backlog = w_t + backlog - served
-    violation = w_t + backlog > cap + 1e-9
+    # served up to delivered capacity — allocated across tenants by the
+    # scheduler (a proportional split when disabled).
+    demand = w_t + backlog_t
+    alloc = sched_mod.schedule_step(spec, sched, demand, cap, n_act, place)
+    total = jnp.sum(demand * spec.active, -1)
+    # Scheduler on: deferred work is parked backlog by design, so the
+    # aggregate QoS charge counts only the *admitted* (due) demand.
+    due = jnp.sum(jnp.maximum(demand - 0.8 * spec.slack(), 0.0)
+                  * spec.active, -1)
+    violation = jnp.where(sched[0] > 0, due, total) > cap + 1e-9
 
-    mstate = pred_mod.observe(cfg.predictor, mstate, w_t, predicted)
+    mstate = pred_mod.observe(cfg.predictor, mstate, w_agg, predicted)
     out = _StepOut(power=pwr, capacity=cap, violation=violation,
-                   backlog=new_backlog, predicted_bin=predicted,
+                   backlog=jnp.sum(alloc.backlog, -1),
+                   predicted_bin=predicted,
                    actual_bin=actual, v_core=tables.v_core[selected],
                    v_bram=tables.v_bram[selected],
                    f_rel=tables.f_rel[selected],
-                   n_active=n_act)
-    return (mstate, new_backlog), out
+                   n_active=n_act,
+                   tenant_served=alloc.served,
+                   tenant_backlog=alloc.backlog,
+                   tenant_violation=alloc.violation,
+                   tenant_starved=alloc.starved)
+    return (mstate, alloc.backlog, alloc.place), out
+
+
+def _default_cell_tenant() -> Tuple[sched_mod.TenantSpec, Array]:
+    """The aggregate-compatible tenant context: one default tenant,
+    scheduler off — reproduces the legacy scalar loop bit-for-bit."""
+    spec = sched_mod.TenantSpec(*[jnp.asarray(x)
+                                  for x in sched_mod.default_tenants(1)])
+    return spec, sched_mod.scheduler_values(sched_mod.SCHEDULERS["none"])
 
 
 def _scan_control_loop(tables: BinTables, cfg: ControllerConfig,
                        trace: Array, avail: Array) -> TraceResult:
     """The §V runtime loop as one ``lax.scan`` — shared by the
     per-platform :func:`simulate` and the batched fleet path.  ``avail``
-    is the per-step usable-node trace (same length as ``trace``)."""
-    init = (pred_mod.init_state(cfg.predictor), jnp.asarray(0.0))
-    (mstate, _), outs = jax.lax.scan(
-        lambda c, wa: _control_step(tables, cfg, c, wa[0], wa[1]),
+    is the per-step usable-node trace (same length as ``trace``).
+    Aggregate-only: the trace rides as a single default tenant with the
+    scheduler disabled (tenant planes go through the streaming path)."""
+    spec, sched = _default_cell_tenant()
+    init = (pred_mod.init_state(cfg.predictor), jnp.zeros(1), jnp.zeros(1))
+    (mstate, _, _), outs = jax.lax.scan(
+        lambda c, wa: _control_step(tables, cfg, c, wa[0][None], wa[1],
+                                    spec, sched),
         init, (trace, avail))
     return TraceResult(power=outs.power, capacity=outs.capacity,
                        violations=outs.violation, backlog=outs.backlog,
@@ -838,7 +913,9 @@ def simulate_fleet(tables: BinTables, traces: np.ndarray | Array,
     avail = _broadcast_avail(avail, lead, cfg.n_nodes, s)
     traces = jnp.asarray(np.ascontiguousarray(traces)).reshape((k, s))
     avail = jnp.asarray(np.ascontiguousarray(avail)).reshape((k, s))
-    cfg = dataclasses.replace(cfg, technique="proposed")
+    # Normalize the static jit key: the technique only changed the
+    # tables, and this aggregate path never acts on the scheduler.
+    cfg = dataclasses.replace(cfg, technique="proposed", scheduler="none")
     out = _simulate_fleet_jit(flat, traces, avail, cfg)
     return jax.tree_util.tree_map(
         lambda x: jnp.reshape(x, lead + x.shape[1:]), out)
@@ -862,15 +939,24 @@ def simulate_fleet(tables: BinTables, traces: np.ndarray | Array,
 
 
 class _StreamAcc(NamedTuple):
-    """Streaming scan carry: controller state + in-carry reductions."""
+    """Streaming scan carry: controller state + in-carry reductions.
+
+    ``backlog``/``place`` are per-tenant ``[T]`` carries; the ``t_*``
+    fields are per-tenant reduction sums ``[T]`` (aggregate callers ride
+    them with ``T = 1``)."""
 
     mstate: pred_mod.PredictorState
-    backlog: Array
+    backlog: Array       # [T] carried per-tenant backlog
+    place: Array         # [T] per-tenant node placement (bin-packing state)
     power_sum: Array     # Σ watts over valid steps
     viol_sum: Array      # Σ violations
-    backlog_sum: Array   # Σ backlog (the backlog integral)
-    offered_sum: Array   # Σ w_t
+    backlog_sum: Array   # Σ aggregate backlog (the backlog integral)
+    offered_sum: Array   # Σ aggregate w_t
     avail_sum: Array     # Σ usable nodes (the availability integral)
+    t_viol_sum: Array    # [T] Σ per-tenant QoS violations
+    t_starve_sum: Array  # [T] Σ per-tenant starvation steps
+    t_served_sum: Array  # [T] Σ per-tenant served work
+    t_offered_sum: Array  # [T] Σ per-tenant offered work
 
 
 class FleetSummary(NamedTuple):
@@ -898,58 +984,147 @@ class FleetSummary(NamedTuple):
     #: Post-warmup beyond-margin misses per cell (see
     #: ``Summary.margin_misprediction_rate``).
     margin_misses: np.ndarray = None
+    #: Per-tenant QoS accounting ``[..., T]`` (T = 1 for aggregate
+    #: runs): rate of steps whose carried backlog exceeded the tenant's
+    #: latency slack / rate of steps the tenant had demand but received
+    #: no service / served-over-offered work fraction / final carried
+    #: backlog.  Padding tenants report zeros.
+    tenant_qos_violation_rate: np.ndarray = None
+    tenant_starvation_rate: np.ndarray = None
+    tenant_served_fraction: np.ndarray = None
+    tenant_final_backlog: np.ndarray = None
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "emit"))
 def _fleet_stream_chunk_jit(tables: BinTables,
                             mstate: pred_mod.PredictorState,
-                            backlog: Array, chunk: Array, avail: Array,
-                            valid: Array, cfg: ControllerConfig,
+                            backlog: Array, place: Array, chunk: Array,
+                            avail: Array, valid: Array,
+                            spec: sched_mod.TenantSpec, sched: Array,
+                            cfg: ControllerConfig,
                             emit: Tuple[str, ...]) -> Tuple:
     """One fixed-shape streaming chunk over the flattened [K] fleet axis.
 
-    ``chunk`` and ``avail`` are [K, C] (the tail chunk zero-padded) —
-    availability always rides the chunk program (all-``n_nodes`` for
-    healthy fleets), so failure-bearing sweeps share the compiled
-    program; ``valid`` is a [C] mask; invalid steps pass the carry
-    through unchanged, so partial tail chunks reuse the same compiled
-    program.  Reduction sums restart at zero each chunk — the host
-    accumulates them in float64, keeping long-trace sums out of float32
-    range.
+    ``chunk`` is the tenant-resolved workload plane [K, C, T] and
+    ``avail`` is [K, C] (the tail chunk zero-padded) — availability
+    always rides the chunk program (all-``n_nodes`` for healthy
+    fleets), so failure-bearing sweeps share the compiled program;
+    ``backlog``/``place`` are the [K, T] per-tenant carries and
+    ``spec`` the per-cell tenant classes ([K, T] leaves).  The
+    scheduler vector ``sched`` and every ``spec`` leaf are traced
+    *values*: scheduler-on/off sweeps, priority/latency sweeps, and
+    tenant-count sweeps (at a padded width) all reuse this one
+    program — aggregate callers ride it with T = 1.  ``valid`` is a
+    [C] mask; invalid steps pass the carry through unchanged, so
+    partial tail chunks reuse the same compiled program.  Reduction
+    sums restart at zero each chunk — the host accumulates them in
+    float64, keeping long-trace sums out of float32 range.
     """
     _TRACE_COUNTS["stream"] += 1
 
-    def cell(tab, ms, bl, tr, av):
+    def cell(tab, ms, bl, pl, tr, av, sp):
         zero = jnp.asarray(0.0, jnp.float32)
-        acc0 = _StreamAcc(mstate=ms, backlog=bl, power_sum=zero,
+        zt = jnp.zeros_like(bl)
+        acc0 = _StreamAcc(mstate=ms, backlog=bl, place=pl, power_sum=zero,
                           viol_sum=zero, backlog_sum=zero, offered_sum=zero,
-                          avail_sum=zero)
+                          avail_sum=zero, t_viol_sum=zt, t_starve_sum=zt,
+                          t_served_sum=zt, t_offered_sum=zt)
 
         def step(a, inp):
             w_t, a_t, v = inp
-            (ms2, bl2), out = _control_step(tab, cfg, (a.mstate, a.backlog),
-                                            w_t, a_t)
+            (ms2, bl2, pl2), out = _control_step(
+                tab, cfg, (a.mstate, a.backlog, a.place), w_t, a_t, sp,
+                sched)
             new = _StreamAcc(
-                mstate=ms2, backlog=bl2,
+                mstate=ms2, backlog=bl2, place=pl2,
                 power_sum=a.power_sum + out.power,
                 viol_sum=a.viol_sum + out.violation.astype(jnp.float32),
-                backlog_sum=a.backlog_sum + bl2,
-                offered_sum=a.offered_sum + w_t,
-                avail_sum=a.avail_sum + a_t)
+                backlog_sum=a.backlog_sum + out.backlog,
+                offered_sum=a.offered_sum + jnp.sum(w_t * sp.active, -1),
+                avail_sum=a.avail_sum + a_t,
+                t_viol_sum=(a.t_viol_sum
+                            + out.tenant_violation.astype(jnp.float32)),
+                t_starve_sum=(a.t_starve_sum
+                              + out.tenant_starved.astype(jnp.float32)),
+                t_served_sum=a.t_served_sum + out.tenant_served,
+                t_offered_sum=a.t_offered_sum + w_t * sp.active)
             a2 = jax.tree.map(lambda n, o: jnp.where(v, n, o), new, a)
             return a2, tuple(getattr(out, e) for e in emit)
 
         return jax.lax.scan(step, acc0, (tr, av, valid))
 
-    return jax.vmap(cell, in_axes=(0, 0, 0, 0, 0))(tables, mstate, backlog,
-                                                   chunk, avail)
+    return jax.vmap(cell, in_axes=(0, 0, 0, 0, 0, 0, 0))(
+        tables, mstate, backlog, place, chunk, avail, spec)
+
+
+def _broadcast_tenant_traces(traces: np.ndarray, lead: Tuple[int, ...],
+                             n_tenants: int) -> np.ndarray:
+    """Expand a tenant plane to ``lead + (S, T)`` as a zero-copy view.
+
+    Accepts a single shared plane [S, T] or per-cell planes whose
+    leading axes match ``lead`` dim-for-dim (1s broadcast) — the tenant
+    variant of :func:`_broadcast_traces`, with the same
+    no-rank-extension rule for the leading axes.
+    """
+    traces = np.asarray(traces, np.float32)
+    if traces.ndim < 2 or traces.shape[-1] != n_tenants:
+        raise ValueError(
+            f"tenant plane must end in [S, T={n_tenants}] to match the "
+            f"tenant spec, got shape {traces.shape}")
+    if traces.ndim == 2:
+        return np.broadcast_to(traces, lead + traces.shape)
+    if (traces.ndim - 2 == len(lead)
+            and all(a == b or a == 1
+                    for a, b in zip(traces.shape[:-2], lead))):
+        return np.broadcast_to(traces, lead + traces.shape[-2:])
+    raise ValueError(
+        f"tenant plane leading axes {traces.shape[:-2]} must match the "
+        f"tables' leading axes {lead} dim-for-dim (1s broadcast), or "
+        "pass a single shared [S, T] plane")
+
+
+def _flatten_tenant_spec(spec: sched_mod.TenantSpec, lead: Tuple[int, ...],
+                         k: int, k_pad: int) -> sched_mod.TenantSpec:
+    """Broadcast spec leaves to ``lead + (T,)`` and flatten to [k_pad, T].
+
+    Accepts shared [T] leaves or per-cell ``lead + (T,)`` leaves (1s
+    broadcast); fleet-axis padding replays cell 0, matching the trace
+    rows.
+    """
+    t = spec.n_tenants
+
+    def one(x, name):
+        x = np.asarray(x, np.float32)
+        if x.ndim == 0 or x.shape[-1] != t:
+            raise ValueError(f"tenant spec leaf {name!r} must end in "
+                             f"[T={t}], got shape {x.shape}")
+        if x.ndim == 1:
+            x = np.broadcast_to(x, lead + x.shape)
+        elif (x.ndim - 1 == len(lead)
+                and all(a == b or a == 1
+                        for a, b in zip(x.shape[:-1], lead))):
+            x = np.broadcast_to(x, lead + x.shape[-1:])
+        else:
+            raise ValueError(
+                f"tenant spec leaf {name!r} leading axes {x.shape[:-1]} "
+                f"must match the tables' leading axes {lead} dim-for-dim "
+                "(1s broadcast), or pass shared [T] leaves")
+        flat = np.ascontiguousarray(x).reshape(k, t)
+        if k_pad != k:
+            flat = np.concatenate(
+                [flat, np.broadcast_to(flat[:1], (k_pad - k, t))])
+        return jnp.asarray(flat)
+
+    return sched_mod.TenantSpec(*[one(x, n) for n, x in
+                                  zip(spec._fields, spec)])
 
 
 def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
                           cfg: ControllerConfig, chunk_size: int = 1024,
                           emit: Sequence[str] = (),
                           shard: bool = True,
-                          avail: Optional[np.ndarray | Array] = None
+                          avail: Optional[np.ndarray | Array] = None,
+                          tenant_spec: Optional[sched_mod.TenantSpec] = None
                           ) -> FleetSummary:
     """Streaming :func:`simulate_fleet`: O(K) memory, any trace length.
 
@@ -994,6 +1169,22 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
     a device-count multiple with replayed rows that are dropped from
     every result.
 
+    **Tenants.**  ``tenant_spec`` (a
+    :class:`~repro.core.scheduler.TenantSpec` with shared ``[T]`` or
+    per-cell ``lead + (T,)`` leaves) switches ``traces`` to a
+    tenant-resolved plane — shared ``[S, T]`` or per-cell
+    ``[..., S, T]`` — whose device chunks are ``[K, C, T]``.  The
+    scheduler selected by ``cfg.scheduler`` then splits every step's
+    delivered capacity across tenants *inside* the chunk scan (and
+    shapes the provisioned bin — the DVFS co-optimization); per-tenant
+    QoS lands in the ``tenant_*`` FleetSummary fields.  Without a spec
+    the workload rides as one default tenant with the scheduler off —
+    bit-for-bit the legacy aggregate loop, through the same chunk
+    program at ``T = 1``.  Spec leaves and the scheduler knobs are
+    traced values, so scheduler-on/off and tenant-class sweeps never
+    retrace; tenant-*count* sweeps reuse the program at any common
+    padded width (:func:`~repro.core.scheduler.pad_tenants`).
+
     Matches the materialized path to float32 reduction accuracy (≤1e-5
     relative — see tests/test_fleet.py).
     """
@@ -1003,7 +1194,7 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
     emit = tuple(emit)
     emit_internal = tuple(alias.get(e, e) for e in emit)
     for e, ei in zip(emit, emit_internal):
-        if ei not in _StepOut._fields:
+        if ei not in _EMITTABLE:
             per_step = tuple(f for f in TraceResult._fields
                              if f not in ("mispredictions",
                                           "final_predictor"))
@@ -1013,15 +1204,28 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
     k = int(np.prod(lead, dtype=np.int64)) if lead else 1
     flat = BinTables(*[jnp.reshape(x, (k,) + x.shape[len(lead):])
                        for x in tables])
-    # Keep traces/availability in their lead + (S,) stride-0 broadcast
+    # Keep traces/availability in their lead + (S, …) stride-0 broadcast
     # form — a dense (K, S) reshape here would silently copy K·S floats
     # (numpy cannot express it as a view), breaking the O(K) memory
     # contract.  Only the per-chunk slices below ever materialize.
-    traces = _broadcast_traces(np.asarray(traces), lead)
-    s = traces.shape[-1]
+    spec_in = tenant_spec if tenant_spec is not None \
+        else sched_mod.default_tenants(1)
+    t = spec_in.n_tenants
+    if tenant_spec is None:
+        # Aggregate workload: ride the tenant plane as a single default
+        # tenant — the trailing axis is a stride-0 numpy view.
+        traces = _broadcast_traces(np.asarray(traces), lead)[..., None]
+    else:
+        traces = _broadcast_tenant_traces(np.asarray(traces), lead, t)
+    s = traces.shape[-2]
     avail_full = _broadcast_avail(avail, lead, cfg.n_nodes, s)
     c = max(1, min(int(chunk_size), s))
-    cfg = dataclasses.replace(cfg, technique="proposed")
+    scfg = cfg.scheduler if tenant_spec is not None \
+        else sched_mod.SCHEDULERS["none"]
+    sched_vals = sched_mod.scheduler_values(scfg)
+    # Normalize the static jit key: the technique only changed the
+    # tables, and the scheduler rides as values.
+    cfg = dataclasses.replace(cfg, technique="proposed", scheduler="none")
 
     mesh = shd.fleet_mesh() if shard else None
     k_pad = k
@@ -1038,21 +1242,29 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
         flat = BinTables(*[jnp.pad(x, pad[:x.ndim], mode="edge")
                            for x in flat])
 
+    spec = _flatten_tenant_spec(spec_in, lead, k, k_pad)
     mstate = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (k_pad,) + x.shape),
         pred_mod.init_state(cfg.predictor))
-    backlog = jnp.zeros((k_pad,), jnp.float32)
+    backlog = jnp.zeros((k_pad, t), jnp.float32)
+    place = jnp.zeros((k_pad, t), jnp.float32)
     if mesh is not None:
         rules = shd.fleet_rules(mesh)
         flat = shd.shard_fleet(flat, rules)
         mstate = shd.shard_fleet(mstate, rules)
         backlog = shd.shard_fleet(backlog, rules)
+        place = shd.shard_fleet(place, rules)
+        spec = shd.shard_fleet(spec, rules)
 
     power_sum = np.zeros(k_pad, np.float64)
     viol_sum = np.zeros(k_pad, np.float64)
     backlog_sum = np.zeros(k_pad, np.float64)
     offered_sum = np.zeros(k_pad, np.float64)
     avail_sum = np.zeros(k_pad, np.float64)
+    t_viol_sum = np.zeros((k_pad, t), np.float64)
+    t_starve_sum = np.zeros((k_pad, t), np.float64)
+    t_served_sum = np.zeros((k_pad, t), np.float64)
+    t_offered_sum = np.zeros((k_pad, t), np.float64)
 
     def chunked(rows, s0, n_valid):
         """One [k_pad, C] device chunk of a lead + (S,) row set.
@@ -1066,6 +1278,19 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
         if k_pad != k:
             raw = np.concatenate(
                 [raw, np.broadcast_to(raw[:1], (k_pad - k, raw.shape[-1]))])
+        out = jnp.asarray(raw)
+        return shd.shard_fleet(out, rules) if mesh is not None else out
+
+    def chunked_plane(rows, s0, n_valid):
+        """One [k_pad, C, T] device chunk of the lead + (S, T) plane."""
+        raw = np.ascontiguousarray(
+            rows[..., s0:s0 + c, :]).reshape((k, -1, t))
+        if n_valid < c:
+            raw = np.pad(raw, ((0, 0), (0, c - n_valid), (0, 0)))
+        if k_pad != k:
+            raw = np.concatenate(
+                [raw, np.broadcast_to(raw[:1],
+                                      (k_pad - k,) + raw.shape[1:])])
         out = jnp.asarray(raw)
         return shd.shard_fleet(out, rules) if mesh is not None else out
 
@@ -1083,19 +1308,23 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
     emitted = {e: [] for e in emit}
     for s0 in range(0, s, c):
         n_valid = min(c, s - s0)
-        chunk = chunked(traces, s0, n_valid)
+        chunk = chunked_plane(traces, s0, n_valid)
         av_chunk = (av_const if av_const is not None
                     else chunked(avail_full, s0, n_valid))
         valid = jnp.asarray(np.arange(c) < n_valid)
-        acc, ys = _fleet_stream_chunk_jit(flat, mstate, backlog, chunk,
-                                          av_chunk, valid, cfg,
-                                          emit_internal)
-        mstate, backlog = acc.mstate, acc.backlog
+        acc, ys = _fleet_stream_chunk_jit(flat, mstate, backlog, place,
+                                          chunk, av_chunk, valid, spec,
+                                          sched_vals, cfg, emit_internal)
+        mstate, backlog, place = acc.mstate, acc.backlog, acc.place
         power_sum += np.asarray(acc.power_sum, np.float64)
         viol_sum += np.asarray(acc.viol_sum, np.float64)
         backlog_sum += np.asarray(acc.backlog_sum, np.float64)
         offered_sum += np.asarray(acc.offered_sum, np.float64)
         avail_sum += np.asarray(acc.avail_sum, np.float64)
+        t_viol_sum += np.asarray(acc.t_viol_sum, np.float64)
+        t_starve_sum += np.asarray(acc.t_starve_sum, np.float64)
+        t_served_sum += np.asarray(acc.t_served_sum, np.float64)
+        t_offered_sum += np.asarray(acc.t_offered_sum, np.float64)
         for e, y in zip(emit, ys):
             emitted[e].append(np.asarray(y[:, :n_valid]))
 
@@ -1103,13 +1332,14 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
         x = np.asarray(x)[:k]
         return x.reshape(lead + x.shape[1:])
 
-    served = offered_sum - np.asarray(backlog, np.float64)
+    backlog_np = np.asarray(backlog, np.float64)
+    served = offered_sum - backlog_np.sum(-1)
     return FleetSummary(
         mean_power_w=cut(power_sum / s),
         qos_violation_rate=cut(viol_sum / s),
         served_fraction=cut(served / np.maximum(offered_sum, 1e-9)),
         mean_backlog=cut(backlog_sum / s),
-        final_backlog=cut(backlog),
+        final_backlog=cut(backlog_np.sum(-1)),
         offered=cut(offered_sum),
         mispredictions=cut(mstate.mispredictions),
         n_steps=s,
@@ -1117,7 +1347,12 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
         emitted={e: cut(np.concatenate(v, axis=-1))
                  for e, v in emitted.items()},
         mean_avail_nodes=cut(avail_sum / s),
-        margin_misses=cut(mstate.margin_misses))
+        margin_misses=cut(mstate.margin_misses),
+        tenant_qos_violation_rate=cut(t_viol_sum / s),
+        tenant_starvation_rate=cut(t_starve_sum / s),
+        tenant_served_fraction=cut(t_served_sum
+                                   / np.maximum(t_offered_sum, 1e-9)),
+        tenant_final_backlog=cut(backlog_np))
 
 
 def fleet_node_nominal_watts(params: char.PlatformParams,

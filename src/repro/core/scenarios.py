@@ -44,12 +44,19 @@ import numpy as np
 
 from repro.core import characterization as char
 from repro.core import controller as ctl
+from repro.core import scheduler as sched_mod
 from repro.core import traces
 from repro.core import workload as wl
 from repro.runtime import elastic
 
 #: (n_steps, rng) → raw trace (clipped to [0, 1] by Scenario.trace)
 TraceFn = Callable[[int, np.random.Generator], np.ndarray]
+
+#: (n_steps, rng) → (per-tenant component traces [T, S], TenantSpec [T])
+#: — the tenant-resolved twin of ``TraceFn``; the parts must sum to the
+#: scenario's aggregate ``build`` output (same generator draw order).
+TenantsFn = Callable[[int, np.random.Generator],
+                     Tuple[np.ndarray, sched_mod.TenantSpec]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +68,10 @@ class Scenario:
     build: TraceFn
     #: alive-node *fraction* schedule — only for node-failure scenarios
     nodes: Optional[TraceFn] = None
+    #: tenant decomposition — only for scenarios with named QoS classes;
+    #: mixtures (``traces.mix`` builders) decompose automatically and
+    #: everything else rides as a single default tenant.
+    tenants: Optional[TenantsFn] = None
 
     def _rng(self, seed: int, salt: str = "") -> np.random.Generator:
         return np.random.default_rng(
@@ -71,6 +82,62 @@ class Scenario:
         t = np.asarray(self.build(n_steps, self._rng(seed)), np.float32)
         assert t.shape == (n_steps,), (self.name, t.shape)
         return np.clip(t, 0.0, 1.0)
+
+    def n_tenants(self) -> int:
+        """Natural tenant count of this scenario's decomposition."""
+        if self.tenants is not None:
+            parts, _ = self.tenants(2, self._rng(0))
+            return int(np.asarray(parts).shape[0])
+        if isinstance(self.build, traces.MixedTrace):
+            return len(self.build.fns)
+        return 1
+
+    def tenant_plane(self, n_steps: int, seed: int = 0,
+                     n_tenants: Optional[int] = None
+                     ) -> Tuple[np.ndarray, sched_mod.TenantSpec]:
+        """Tenant-resolved workload plane ``([S, T], TenantSpec [T])``.
+
+        Resolution order: an explicit ``tenants`` decomposition; a
+        ``traces.mix`` builder (its weighted components become equal-
+        priority tenants with the mix weights as shares); otherwise the
+        aggregate trace as one default tenant.  Per-tenant demands are
+        clipped at zero and jointly rescaled where their sum exceeds
+        the fleet peak, so the plane's aggregate equals the clipped
+        :meth:`trace` (to float precision) — disabling the scheduler on
+        a tenant plane reproduces the aggregate campaign.  ``n_tenants``
+        pads the tenant axis with inert slots
+        (:func:`~repro.core.scheduler.pad_tenants`) so mixed-width
+        suites share one compiled chunk shape.
+        """
+        if self.tenants is not None:
+            parts, spec = self.tenants(n_steps, self._rng(seed))
+            parts = np.asarray(parts, np.float64)
+        elif isinstance(self.build, traces.MixedTrace):
+            parts = self.build.components(n_steps, self._rng(seed))
+            t = parts.shape[0]
+            spec = sched_mod.make_tenants([1.0] * t, [0.0] * t,
+                                          self.build.weights)
+        else:
+            parts = np.asarray(self.trace(n_steps, seed), np.float64)[None]
+            spec = sched_mod.default_tenants(1)
+        assert parts.shape[-1] == n_steps, (self.name, parts.shape)
+        # Joint rescale where the tenants together exceed the fleet
+        # peak: total offered demand stays the clipped aggregate trace.
+        parts = np.clip(parts, 0.0, None)
+        tot = parts.sum(0)
+        parts = parts * np.where(tot > 1.0, 1.0 / np.maximum(tot, 1e-9),
+                                 1.0)
+        plane = parts.T.astype(np.float32)                    # [S, T]
+        if n_tenants is not None:
+            t = plane.shape[1]
+            if t > n_tenants:
+                raise ValueError(
+                    f"scenario {self.name!r} has {t} tenants; cannot fit "
+                    f"a width-{n_tenants} plane — raise n_tenants")
+            if t < n_tenants:
+                spec = sched_mod.pad_tenants(spec, n_tenants)
+                plane = np.pad(plane, ((0, 0), (0, n_tenants - t)))
+        return plane, spec
 
     def node_schedule(self, n_steps: int, n_nodes: int,
                       seed: int = 0) -> np.ndarray:
@@ -119,17 +186,42 @@ def _diurnal(n: int, rng: np.random.Generator) -> np.ndarray:
                                       burst=0.25, seed=_sub_seed(rng))
 
 
-def _flash_crowd(n: int, rng: np.random.Generator) -> np.ndarray:
-    """Moderate diurnal base + sudden near-peak spikes with decay tails."""
+def _flash_crowd_parts(n: int, rng: np.random.Generator
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Flash-crowd components, same draw order as the aggregate ever
+    used: a steady interactive base (diurnal + noise) and the crowd
+    spikes with their decay tails."""
     t = np.arange(n)
     base = 0.25 * (1.0 + 0.5 * np.sin(2 * np.pi * t / max(n // 4, 2)))
-    out = base + 0.02 * rng.standard_normal(n)
+    steady = base + 0.02 * rng.standard_normal(n)
+    crowd = np.zeros(n)
     for _ in range(max(1, n // 512)):
         t0 = int(rng.integers(0, n))
         amp = rng.uniform(0.5, 0.75)
         dur = max(8, n // 64)
-        out[t0:] += amp * np.exp(-np.arange(n - t0) / dur)
-    return out
+        crowd[t0:] += amp * np.exp(-np.arange(n - t0) / dur)
+    return steady, crowd
+
+
+def _flash_crowd(n: int, rng: np.random.Generator) -> np.ndarray:
+    """Moderate diurnal base + sudden near-peak spikes with decay tails."""
+    steady, crowd = _flash_crowd_parts(n, rng)
+    return steady + crowd
+
+
+def _flash_crowd_tenants(n: int, rng: np.random.Generator
+                         ) -> Tuple[np.ndarray, sched_mod.TenantSpec]:
+    """Two QoS classes: the steady interactive base (high priority, no
+    latency slack) vs the crowd surge (lower priority, may ride as
+    backlog for up to 16 steps of its share) — the interactive-vs-burst
+    split of arXiv:2304.04488.  Shares come from the realized demand."""
+    steady, crowd = _flash_crowd_parts(n, rng)
+    parts = np.stack([steady, crowd])
+    means = np.maximum(np.clip(parts, 0.0, None).mean(-1), 1e-6)
+    spec = sched_mod.make_tenants(priority=[2.0, 1.0],
+                                  latency_target=[0.0, 16.0],
+                                  share=means / means.sum())
+    return parts, spec
 
 
 def _ramp(n: int, rng: np.random.Generator) -> np.ndarray:
@@ -144,19 +236,46 @@ def _decay(n: int, rng: np.random.Generator) -> np.ndarray:
             + 0.03 * rng.standard_normal(n))
 
 
-def _multi_tenant(n: int, rng: np.random.Generator) -> np.ndarray:
-    """Heterogeneous tenant mix (arXiv:2311.11015): one bursty
-    long-range-dependent tenant, one periodic, one flat batch floor —
-    Dirichlet-weighted so every seed draws a different mix."""
-    tenants = [
+def _multi_tenant_parts(n: int, rng: np.random.Generator):
+    """Weighted per-tenant component traces of the ``multi_tenant`` mix.
+
+    Returns ``(parts, weights)`` with ``parts`` a list of the three
+    weighted tenant traces (bursty / periodic / batch).  The generator
+    draw order is exactly the pre-tenant aggregate's, so
+    ``sum(parts)`` is bit-for-bit the historical trace.
+    """
+    streams = [
         wl.generate_trace(wl.WorkloadConfig(n_steps=n, mean_load=0.5,
                                             hurst=0.8, seed=_sub_seed(rng))),
         wl.generate_periodic_trace(n, period=max(n // 8, 2), mean_load=0.35,
                                    burst=0.2, seed=_sub_seed(rng)),
         np.clip(0.2 + 0.05 * rng.standard_normal(n), 0.0, 1.0),
     ]
-    weights = rng.dirichlet(np.full(len(tenants), 2.0))
-    return sum(w * t for w, t in zip(weights, tenants))
+    weights = rng.dirichlet(np.full(len(streams), 2.0))
+    return [w * t for w, t in zip(weights, streams)], weights
+
+
+def _multi_tenant(n: int, rng: np.random.Generator) -> np.ndarray:
+    """Heterogeneous tenant mix (arXiv:2311.11015): one bursty
+    long-range-dependent tenant, one periodic, one flat batch floor —
+    Dirichlet-weighted so every seed draws a different mix."""
+    parts, _ = _multi_tenant_parts(n, rng)
+    return sum(parts)
+
+
+def _multi_tenant_tenants(n: int, rng: np.random.Generator
+                          ) -> Tuple[np.ndarray, sched_mod.TenantSpec]:
+    """The mix's three QoS classes: bursty interactive traffic (high
+    priority, one step of latency tolerance — zero would charge a
+    violation for any epsilon of carried backlog, which no predictive
+    controller can meet), a periodic service with modest latency
+    headroom, and deferrable batch work — demand shares are the seed's
+    Dirichlet mix weights."""
+    parts, weights = _multi_tenant_parts(n, rng)
+    spec = sched_mod.make_tenants(priority=[2.0, 1.0, 0.0],
+                                  latency_target=[1.0, 8.0, 64.0],
+                                  share=weights)
+    return np.stack([np.asarray(p, np.float64) for p in parts]), spec
 
 
 def _failure_nodes(n: int, rng: np.random.Generator) -> np.ndarray:
@@ -175,11 +294,11 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
     Scenario("diurnal", "day/night periodic cycle with sporadic bursts",
              _diurnal),
     Scenario("flash_crowd", "diurnal base + sudden near-peak crowd spikes",
-             _flash_crowd),
+             _flash_crowd, tenants=_flash_crowd_tenants),
     Scenario("ramp", "slow load ramp 5% → 95%", _ramp),
     Scenario("decay", "exponential cooldown from near peak", _decay),
     Scenario("multi_tenant", "heterogeneous bursty/periodic/batch tenant mix",
-             _multi_tenant),
+             _multi_tenant, tenants=_multi_tenant_tenants),
     Scenario("node_failure", "bursty load + node-failure windows "
              "(per-step usable-nodes schedule clamps controller capacity)",
              _burse, nodes=_failure_nodes),
@@ -304,6 +423,49 @@ def build_suite(names: Optional[Sequence[str]] = None, n_steps: int = 2048,
     return names, traces, avail
 
 
+def build_tenant_suite(names: Optional[Sequence[str]] = None,
+                       n_steps: int = 2048, n_nodes: int = 8, seed: int = 0,
+                       n_tenants: Optional[int] = None
+                       ) -> Tuple[Tuple[str, ...], np.ndarray, np.ndarray,
+                                  sched_mod.TenantSpec]:
+    """Tenant-resolved :func:`build_suite`: stacks named scenarios into
+    ``(names, plane [N, S, T], avail [N, S], spec)`` with ``spec`` leaves
+    ``[N, T]``.
+
+    Every scenario's plane (:meth:`Scenario.tenant_plane`) is padded to
+    a common tenant width — ``n_tenants`` when given (must cover the
+    widest scenario), else the suite's natural maximum — with inert
+    zero-share slots, so mixed-width suites stream through one compiled
+    ``[K, C, T]`` chunk program and tenant-*count* sweeps at a fixed
+    width never retrace.
+    """
+    names = tuple(names) if names is not None else tuple(SCENARIOS)
+    built = [get_scenario(n).tenant_plane(n_steps, seed) for n in names]
+    width = max(p.shape[1] for p, _ in built)
+    if n_tenants is None:
+        n_tenants = width
+    elif n_tenants < width:
+        widest = [n for n, (p, _) in zip(names, built)
+                  if p.shape[1] == width]
+        raise ValueError(
+            f"n_tenants={n_tenants} cannot hold {widest[0]!r} "
+            f"({width} tenants); pass n_tenants >= {width}")
+    planes, specs = [], []
+    for plane, spec in built:
+        t = plane.shape[1]
+        if t < n_tenants:
+            spec = sched_mod.pad_tenants(spec, n_tenants)
+            plane = np.pad(plane, ((0, 0), (0, n_tenants - t)))
+        planes.append(plane)
+        specs.append(spec)
+    avail = np.stack([get_scenario(n).node_schedule(n_steps, n_nodes, seed)
+                      for n in names]).astype(np.float32)
+    spec = sched_mod.TenantSpec(
+        *[np.stack([np.asarray(getattr(s, f), np.float32) for s in specs])
+          for f in sched_mod.TenantSpec._fields])
+    return names, np.stack(planes), avail, spec
+
+
 # ---------------------------------------------------------------------------
 # Campaign: platforms × techniques × scenarios in one compiled program
 # ---------------------------------------------------------------------------
@@ -314,6 +476,7 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
                  techniques: Sequence[str] = ctl.DEFAULT_TECHNIQUES,
                  n_steps: int = 2048, seed: int = 0, chunk_size: int = 1024,
                  shard: bool = True,
+                 tenants: Optional[int | str] = None,
                  **cfg_kwargs) -> Dict[str, object]:
     """Sweep platforms × techniques × scenarios through the streaming
     fleet path in two compiled programs.
@@ -342,32 +505,61 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
     pass a constant all-``n_nodes`` row), so availability-bearing sweeps
     reuse the very same compiled chunk program.
 
-    Returns ``{"scenarios", "techniques", "n_steps", "table"}`` where
-    ``table[platform][technique][scenario]`` holds power_gain (vs the
-    *available* fleet) / power_gain_vs_configured / mean_power_w /
-    mean_avail_nodes / qos_violation_rate / served_fraction /
-    mean_backlog / misprediction_rate / margin_misprediction_rate
-    (post-warmup exact-bin and beyond-margin miss rates — the
-    gain-vs-misprediction sensitivity axes).
+    ``tenants`` switches the sweep to the tenant-resolved workload
+    plane: an int pads every scenario's decomposition
+    (:meth:`Scenario.tenant_plane`) to that common width (``"auto"``
+    uses the suite's natural maximum), the scheduler selected by
+    ``scheduler=...`` (a ``ControllerConfig`` kwarg: ``"none"`` /
+    ``"priority"`` / ``"fair_share"``) splits capacity per step inside
+    the chunk scan, and every cell additionally reports per-tenant
+    ``tenant_qos_violation_rate`` / ``tenant_starvation_rate`` /
+    ``tenant_served_fraction`` lists plus the active-tenant worst-case
+    ``worst_tenant_qos_violation``.  ``tenants=None`` is the aggregate
+    sweep, byte-compatible with every pre-tenant campaign.
+
+    Returns ``{"scenarios", "techniques", "n_steps", "scheduler",
+    "tenants", "table"}`` where ``table[platform][technique][scenario]``
+    holds power_gain (vs the *available* fleet) /
+    power_gain_vs_configured / mean_power_w / mean_avail_nodes /
+    qos_violation_rate / served_fraction / mean_backlog /
+    misprediction_rate / margin_misprediction_rate (post-warmup
+    exact-bin and beyond-margin miss rates — the gain-vs-misprediction
+    sensitivity axes).
     """
     missing = [p.name for p in platforms if p.params is None]
     if missing:
         raise ValueError(f"platforms lack PlatformParams: {missing}")
     cfg = ctl.ControllerConfig(**cfg_kwargs)
-    names, traces, avail = build_suite(scenario_names, n_steps=n_steps,
-                                       n_nodes=cfg.n_nodes, seed=seed)
+    if tenants is not None and not (tenants == "auto"
+                                    or (isinstance(tenants, int)
+                                        and tenants >= 1)):
+        raise ValueError(f"tenants must be None, 'auto', or an int >= 1, "
+                         f"got {tenants!r}")
+    spec = None
+    if tenants is None:
+        names, traces, avail = build_suite(scenario_names, n_steps=n_steps,
+                                           n_nodes=cfg.n_nodes, seed=seed)
+    else:
+        width = None if tenants == "auto" else int(tenants)
+        names, traces, avail, spec = build_tenant_suite(
+            scenario_names, n_steps=n_steps, n_nodes=cfg.n_nodes,
+            seed=seed, n_tenants=width)
     params = char.stack_platform_params([p.params for p in platforms])
     tables = ctl.fleet_bin_tables(params, cfg, techniques)     # [P, T, M]
     n_scen = len(names)
     # Scenario axis rides the tables' leading axes: broadcast [P, T, M] →
     # [P, T, N, M] (free) and feed per-scenario traces + availability as
-    # [1, 1, N, S].
+    # [1, 1, N, S] (tenant planes as [1, 1, N, S, T], spec leaves as
+    # [1, 1, N, T]).
     tab_n = ctl.BinTables(*[jnp.broadcast_to(
         x[:, :, None], x.shape[:2] + (n_scen,) + x.shape[2:])
         for x in tables])
+    if spec is not None:
+        spec = sched_mod.TenantSpec(*[x[None, None] for x in spec])
     summary = ctl.simulate_fleet_stream(tab_n, traces[None, None], cfg,
                                         chunk_size=chunk_size, shard=shard,
-                                        avail=avail[None, None])
+                                        avail=avail[None, None],
+                                        tenant_spec=spec)
     node_nom_w = ctl.fleet_node_nominal_watts(params, cfg)     # [P]
     nominal_cfg_w = node_nom_w * cfg.n_nodes                   # [P]
     n_scored = max(n_steps - cfg.predictor.warmup_steps, 1)
@@ -380,7 +572,7 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
             for k, scen in enumerate(names):
                 mean_w = float(summary.mean_power_w[i, j, k])
                 mean_avail = float(summary.mean_avail_nodes[i, j, k])
-                table[plat.name][tech][scen] = {
+                cell = {
                     "power_gain": float(node_nom_w[i]) * mean_avail / mean_w,
                     "power_gain_vs_configured":
                         float(nominal_cfg_w[i]) / mean_w,
@@ -396,5 +588,22 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
                     "margin_misprediction_rate":
                         float(summary.margin_misses[i, j, k]) / n_scored,
                 }
+                if spec is not None:
+                    active = np.asarray(spec.active)[0, 0, k] > 0
+                    t_viol = summary.tenant_qos_violation_rate[i, j, k]
+                    cell["tenant_qos_violation_rate"] = [
+                        float(x) for x in t_viol]
+                    cell["tenant_starvation_rate"] = [
+                        float(x) for x in
+                        summary.tenant_starvation_rate[i, j, k]]
+                    cell["tenant_served_fraction"] = [
+                        float(x) for x in
+                        summary.tenant_served_fraction[i, j, k]]
+                    cell["worst_tenant_qos_violation"] = float(
+                        t_viol[active].max()) if active.any() else 0.0
+                table[plat.name][tech][scen] = cell
     return {"scenarios": names, "techniques": tuple(techniques),
-            "n_steps": n_steps, "table": table}
+            "n_steps": n_steps, "scheduler": cfg.scheduler.name,
+            "tenants": (None if spec is None
+                        else int(np.asarray(spec.active).shape[-1])),
+            "table": table}

@@ -1,0 +1,392 @@
+"""Power-aware multi-tenant scheduling, co-optimized with DVFS (§V loop).
+
+Campaigns historically treated workload as one aggregate utilization
+signal.  Real datacenter fleets serve heterogeneous *tenant* streams
+with distinct QoS classes — interactive traffic that must be served
+within the step, periodic services with some latency headroom, batch
+work that tolerates long deferral ("Power Aware Scheduling of Tasks on
+FPGAs in Data Centers", arXiv 2311.11015; "Hybrid Computing for
+Interactive Datacenter Applications", arXiv 2304.04488).  This module
+supplies the tenant plane's vocabulary and the per-step scheduling math
+the §V control loop runs *inside* its streaming chunk scan:
+
+* :class:`TenantSpec` — a pytree of per-tenant QoS classes (priority,
+  latency target, demand share, padding mask).  Leaves are plain
+  arrays, so specs ride the fleet programs as **values**: sweeping
+  priorities, targets, or shares never retraces.
+* :class:`SchedulerConfig` + a name registry (``none`` / ``priority`` /
+  ``fair_share``) — selected via ``ControllerConfig(scheduler=...)``,
+  ``run_campaign(scheduler=...)``, or ``scripts/campaign.py
+  --scheduler``.  All runtime knobs are folded into a tiny value vector
+  (:func:`scheduler_values`), so scheduler-on/off sweeps and parameter
+  sweeps reuse one compiled chunk program.
+* :func:`provision_bin` — the DVFS co-optimization: given the
+  predictor's bin and the per-tenant backlog state, defer
+  slack-tolerant (batch) work within each tenant's latency budget and
+  pull forward overdue work, then re-bin the shaped demand.  The shaped
+  bin indexes the *same* synthesis-time tables the aggregate controller
+  uses — for the ``hybrid`` technique that bin's entry is already the
+  node-count **gear argmin**, so the scheduler's deferral decision and
+  the DVFS/gear choice are jointly consistent without a second
+  optimizer.
+* :func:`schedule_step` — per-step placement as pure array ops:
+  priority-ordered admission (a cumulative-sum waterfill over the
+  priority-sorted tenant axis), capacity-proportional bin-packing of
+  the admitted work onto the step's active nodes, a migration cost
+  charged when a tenant's node share grows (FPGA reconfiguration is not
+  free), per-tenant backlog carries, and per-tenant QoS-violation /
+  starvation flags.  Never a host loop, never a new compiled program.
+
+With the scheduler disabled the per-tenant split degrades to the
+capacity-proportional share of the aggregate controller's served work —
+for a single default tenant that reproduces the aggregate loop
+bit-for-bit, which is what keeps every existing aggregate caller
+byte-compatible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+#: Guard for divisions by (possibly zero) demand/capacity totals.
+EPS = 1e-9
+
+_POLICIES = ("priority", "fair")
+
+
+# ---------------------------------------------------------------------------
+# Tenant QoS classes (a pytree of arrays — rides the fleet programs as values)
+# ---------------------------------------------------------------------------
+
+
+class TenantSpec(NamedTuple):
+    """Per-tenant QoS classes along a trailing tenant axis ``[..., T]``.
+
+    ``priority`` orders admission (higher served first);
+    ``latency_target`` is how many *steps of the tenant's own demand
+    share* may sit as backlog before the tenant's QoS is violated (0 =
+    interactive, must be served within the step; large = deferrable
+    batch); ``share`` is the tenant's expected fraction of fleet demand
+    (drives the deferral budget and the backlog tolerance's work-unit
+    scale); ``active`` masks padding slots (1.0 real tenant, 0.0 pad)
+    so tenant *counts* can be swept at a fixed compiled shape.
+    """
+
+    priority: Array        # [..., T] float32 — higher admitted first
+    latency_target: Array  # [..., T] float32 — tolerated backlog (steps × share)
+    share: Array           # [..., T] float32 — expected demand share
+    active: Array          # [..., T] float32 — 1.0 real / 0.0 padding
+
+    @property
+    def n_tenants(self) -> int:
+        return int(self.priority.shape[-1])
+
+    def slack(self) -> Array:
+        """Tolerated backlog per tenant in work units (fleet-peak·τ)."""
+        return self.latency_target * self.share
+
+
+def make_tenants(priority: Sequence[float], latency_target: Sequence[float],
+                 share: Sequence[float]) -> TenantSpec:
+    """Build a validated single-axis ``[T]`` spec from per-tenant lists.
+
+    ``share`` is normalized to sum to 1 over the given tenants.
+    """
+    pr = np.asarray(list(priority), np.float32)
+    lt = np.asarray(list(latency_target), np.float32)
+    sh = np.asarray(list(share), np.float64)
+    if not (pr.shape == lt.shape == sh.shape) or pr.ndim != 1 or pr.size == 0:
+        raise ValueError("priority/latency_target/share must be equal-length "
+                         f"non-empty 1-D sequences, got {pr.shape}, "
+                         f"{lt.shape}, {sh.shape}")
+    if (lt < 0).any():
+        raise ValueError("latency_target entries must be >= 0 steps")
+    if (sh < 0).any() or sh.sum() <= 0:
+        raise ValueError("share entries must be >= 0 with a positive sum")
+    sh = (sh / sh.sum()).astype(np.float32)
+    return TenantSpec(priority=pr, latency_target=lt, share=sh,
+                      active=np.ones_like(pr))
+
+
+def default_tenants(n: int = 1) -> TenantSpec:
+    """``n`` interchangeable tenants: equal priority/share, no slack.
+
+    ``default_tenants(1)`` is the aggregate-compatible spec every
+    tenant-unaware caller implicitly uses.
+    """
+    if n < 1:
+        raise ValueError(f"need at least one tenant (got {n})")
+    return make_tenants([1.0] * n, [0.0] * n, [1.0 / n] * n)
+
+
+def pad_tenants(spec: TenantSpec, n_tenants: int) -> TenantSpec:
+    """Pad a ``[T]`` spec with inert slots up to ``n_tenants``.
+
+    Padding tenants are inactive: zero share/demand, lowest priority,
+    masked out of every QoS reduction.  Padding is how tenant *counts*
+    sweep at one compiled shape — the zero-retrace witness pads 1-, 2-,
+    and 3-tenant scenarios to a common width.
+    """
+    t = spec.n_tenants
+    if n_tenants < t:
+        raise ValueError(f"cannot pad {t} tenants down to {n_tenants}")
+    if n_tenants == t:
+        return spec
+    pad = n_tenants - t
+    return TenantSpec(
+        priority=np.concatenate([np.asarray(spec.priority, np.float32),
+                                 np.full(pad, -1.0, np.float32)]),
+        latency_target=np.concatenate(
+            [np.asarray(spec.latency_target, np.float32),
+             np.zeros(pad, np.float32)]),
+        share=np.concatenate([np.asarray(spec.share, np.float32),
+                              np.zeros(pad, np.float32)]),
+        active=np.concatenate([np.asarray(spec.active, np.float32),
+                               np.zeros(pad, np.float32)]))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler configuration and registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Scheduler selection (hashable; runtime knobs become *values*).
+
+    The config itself never keys a jit cache: the fleet paths normalize
+    it out of the static ``ControllerConfig`` and feed
+    :func:`scheduler_values` as a traced input instead, so toggling the
+    scheduler or sweeping ``migration_cost`` reuses the compiled chunk
+    program (the on/off zero-retrace witness).
+    """
+
+    name: str = "none"
+    enabled: bool = False
+    policy: str = "priority"     # admission order: "priority" | "fair"
+    #: Capacity fraction lost when a tenant's node share grows by one
+    #: node (FPGA partial reconfiguration / state movement is not free).
+    migration_cost: float = 0.02
+
+    def __post_init__(self):
+        if self.policy not in _POLICIES:
+            raise ValueError(f"unknown scheduler policy {self.policy!r}; "
+                             f"choose from {_POLICIES}")
+        if self.migration_cost < 0:
+            raise ValueError(f"migration_cost {self.migration_cost} "
+                             "must be >= 0")
+
+
+SCHEDULERS: Dict[str, SchedulerConfig] = {
+    "none": SchedulerConfig(name="none", enabled=False),
+    "priority": SchedulerConfig(name="priority", enabled=True,
+                                policy="priority"),
+    "fair_share": SchedulerConfig(name="fair_share", enabled=True,
+                                  policy="fair"),
+}
+
+
+def available() -> Tuple[str, ...]:
+    """Registered scheduler names, sorted."""
+    return tuple(sorted(SCHEDULERS))
+
+
+def get(name: str) -> SchedulerConfig:
+    """Look up a registered scheduler (KeyError lists what exists)."""
+    if name not in SCHEDULERS:
+        raise KeyError(f"unknown scheduler {name!r}; "
+                       f"registered: {available()}")
+    return SCHEDULERS[name]
+
+
+def as_config(scheduler: Union[str, SchedulerConfig, None]) -> SchedulerConfig:
+    """Coerce a name / config / None to a :class:`SchedulerConfig`."""
+    if scheduler is None:
+        return SCHEDULERS["none"]
+    if isinstance(scheduler, str):
+        return get(scheduler)
+    if isinstance(scheduler, SchedulerConfig):
+        return scheduler
+    raise TypeError(f"cannot use {type(scheduler).__name__} as a scheduler "
+                    "(want a registered name or a SchedulerConfig)")
+
+
+def scheduler_values(cfg: SchedulerConfig) -> Array:
+    """The scheduler's runtime knobs as a ``[3]`` value vector.
+
+    ``[enabled, priority_policy, migration_cost]`` — traced inputs to
+    the chunk program, never part of its jit key.
+    """
+    return jnp.asarray([1.0 if cfg.enabled else 0.0,
+                        1.0 if cfg.policy == "priority" else 0.0,
+                        float(cfg.migration_cost)], jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# The per-step scheduling math (called from the §V control step)
+# ---------------------------------------------------------------------------
+
+
+def provision_bin(spec: TenantSpec, predicted_bin: Array, backlog_t: Array,
+                  n_bins: int) -> Array:
+    """Scheduler-shaped workload bin — the DVFS co-optimization.
+
+    Starting from the predictor's provisioned level (the predicted
+    bin's upper edge), *defer* the share of demand belonging to tenants
+    with unused latency slack (batch work that may ride as backlog) and
+    *pull forward* any backlog already beyond a tenant's tolerance.
+    The shaped demand re-bins into the same synthesis-time tables — for
+    ``hybrid`` that entry is the per-bin node-count gear argmin, so
+    deferral directly buys a lower gear/voltage instead of merely
+    letting backlog accumulate.
+    """
+    w_hat = (predicted_bin.astype(jnp.float32) + 1.0) / n_bins
+    d_hat = (w_hat * spec.share + backlog_t) * spec.active
+    # Defer at most 80 % of each tenant's slack: deferred work parks as
+    # backlog at that level (a stable fixed point), and the remaining
+    # 20 % is headroom so workload noise doesn't bounce deferred
+    # tenants across their own violation boundary.  Backlog beyond the
+    # deferral cap is admitted — overdue work pulls forward without a
+    # separate term.
+    defer = jnp.minimum(d_hat, 0.8 * spec.slack()) * spec.active
+    target = jnp.clip(jnp.sum(d_hat - defer, -1), 0.0, 1.0)
+    b = jnp.floor(target * n_bins).astype(jnp.int32)
+    return jnp.clip(b, 0, n_bins - 1)
+
+
+def opportunistic_bin(power_tab: Array, capacity_tab: Array, shaped: Array,
+                      deferred_backlog: Array) -> Array:
+    """Valley-fill: drain parked backlog at the tables' cheapest gear.
+
+    ``power_tab``/``capacity_tab`` are the synthesis-time per-bin
+    operating tables ``[M]``; their ratio is watts per unit of
+    delivered work, and its argmin is the platform's energy-optimal
+    operating point (for ``hybrid`` that entry already folds in the
+    node-count gear).  When enough deferred backlog is parked to fill
+    the capacity gap, provisioning jumps *up* from the shaped bin to
+    that optimum: the extra capacity serves deferred work at the
+    cheapest possible energy per unit (the opportunistic half of the
+    co-optimization — deferral shaves peaks, this fills valleys), then
+    the drained backlog re-arms the deferral budget for the next burst.
+    Without sufficient backlog the shaped bin stands.
+    """
+    eff = power_tab / jnp.maximum(capacity_tab, EPS)
+    b_star = jnp.argmin(eff).astype(shaped.dtype)
+    gap = capacity_tab[b_star] - capacity_tab[shaped]
+    take = (deferred_backlog >= gap) & (b_star > shaped)
+    return jnp.where(take, b_star, shaped)
+
+
+class SchedStep(NamedTuple):
+    """Per-tenant outcome of one scheduling step (all ``[T]``)."""
+
+    served: Array     # work served this step
+    backlog: Array    # carried-over per-tenant backlog
+    place: Array      # node share assigned (capacity-proportional packing)
+    violation: Array  # bool — backlog exceeds the tenant's latency slack
+    starved: Array    # bool — had demand, received (essentially) no service
+
+
+def schedule_step(spec: TenantSpec, sched: Array, d: Array, cap: Array,
+                  n_act: Array, place_prev: Array) -> SchedStep:
+    """Allocate one step's delivered capacity across tenants (array ops).
+
+    ``d`` is per-tenant demand (offered work + carried backlog) ``[T]``,
+    ``cap`` the step's delivered fleet capacity, ``n_act`` its active
+    nodes, ``place_prev`` the previous step's node shares, and ``sched``
+    the :func:`scheduler_values` vector.
+
+    Scheduler **on** (``sched[0]``): each tenant's slack-deferred share
+    (the same ``min(d, 0.8·slack)`` rule :func:`provision_bin` shapes
+    the DVFS bin with, so the capacity the deferral *removed* is
+    withheld from the deferring tenant itself — never passed down the
+    priority order) is parked as backlog; the *admitted* remainder goes
+    through priority-ordered admission — a cumulative-sum waterfill
+    along the priority-sorted tenant axis (``fair_share`` uses the
+    admitted-demand-proportional split instead) — then
+    capacity-proportional packing onto the ``n_act`` active nodes with
+    a migration charge when a tenant's node share *grows* (moving a
+    tenant onto additional nodes costs
+    ``migration_cost × grown-nodes``-worth of capacity).
+
+    Scheduler **off**: every tenant receives its demand-proportional
+    share of the aggregate controller's served work; for one tenant the
+    split is the identity (``d/d == 1`` exactly in IEEE), so aggregate
+    callers reproduce the legacy loop bit-for-bit.
+
+    Both branches are computed and blended by value, so on/off sweeps
+    share one compiled program.
+    """
+    on, use_prio, mig = sched[0], sched[1], sched[2]
+    d = d * spec.active
+    total = jnp.sum(d, -1)
+    served_total = jnp.minimum(cap, total)
+    # Proportional split of the aggregate controller's served work.  The
+    # ratio path is exact for one tenant (total is the single demand, so
+    # ratio == d/d == 1.0 in IEEE); near-zero totals fall back to the
+    # elementwise min so a single tenant reproduces the legacy
+    # ``min(cap, w + backlog)`` bit-for-bit there too.
+    ratio = d / jnp.maximum(total, EPS)
+    prop = jnp.where(total > EPS, served_total * ratio, jnp.minimum(cap, d))
+
+    # Deferral mirrors provision_bin: slack-tolerant work is withheld
+    # from admission (each tenant eats its own deferral as backlog)
+    # instead of shrinking the pool every lower-priority tenant draws
+    # from.
+    d_adm = d - jnp.minimum(d, 0.8 * spec.slack()) * spec.active
+    adm_total = jnp.sum(d_adm, -1)
+
+    # Priority waterfill: serve sorted admitted demands until capacity
+    # runs out.
+    prio_eff = spec.priority - 1e9 * (1.0 - spec.active)
+    order = jnp.argsort(-prio_eff)
+    d_sorted = d_adm[order]
+    cum_before = jnp.cumsum(d_sorted) - d_sorted
+    fill = jnp.clip(cap - cum_before, 0.0, d_sorted)
+    water = fill[jnp.argsort(order)]
+    fair = (jnp.minimum(cap, adm_total) * d_adm
+            / jnp.maximum(adm_total, EPS))
+    alloc = jnp.where(use_prio > 0, water, fair)
+
+    # Opportunistic drain: capacity left after every admitted demand is
+    # served (gear quantization headroom, or a valley-fill bin bump)
+    # flows to the *deferred* work, again in priority order — deferral
+    # postpones work only while capacity is scarce, it never idles a
+    # gear that is already paid for.
+    deferred = d - d_adm
+    spare = jnp.maximum(cap - jnp.sum(alloc, -1), 0.0)
+    def_sorted = deferred[order]
+    cum_def = jnp.cumsum(def_sorted) - def_sorted
+    drain_prio = jnp.clip(spare - cum_def, 0.0, def_sorted)[
+        jnp.argsort(order)]
+    def_total = jnp.sum(deferred, -1)
+    drain_fair = (jnp.minimum(spare, def_total) * deferred
+                  / jnp.maximum(def_total, EPS))
+    alloc = alloc + jnp.where(use_prio > 0, drain_prio, drain_fair)
+
+    # Capacity-proportional bin-packing: a tenant's node share is its
+    # allocated fraction of the active nodes; growing it migrates the
+    # tenant onto new nodes, which costs capacity.  Placement is sticky
+    # (a kept node is free to keep; shrink decays 5 %/step) with a
+    # quarter-node deadband, so per-step workload noise doesn't ring the
+    # reconfiguration bell — only genuine ramps pay migration.
+    needed = n_act * alloc / jnp.maximum(cap, EPS)
+    grow = jnp.maximum(needed - place_prev - 0.25, 0.0)
+    mig_loss = mig * grow * cap / jnp.maximum(n_act, 1.0)
+    served_sched = jnp.maximum(alloc - mig_loss, 0.0)
+    place = jnp.maximum(needed, place_prev * 0.95)
+
+    served = jnp.where(on > 0, served_sched, prop)
+    backlog = jnp.where(on > 0, d - served_sched, d - prop)
+    place_out = jnp.where(on > 0, place, place_prev)
+    violation = (backlog > spec.slack() + 1e-9) & (spec.active > 0)
+    starved = (d > 1e-6) & (served <= 1e-9) & (spec.active > 0)
+    return SchedStep(served=served, backlog=backlog, place=place_out,
+                     violation=violation, starved=starved)

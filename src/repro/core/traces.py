@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Callable, Dict, Optional, Sequence, Union
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -366,8 +366,36 @@ def _child(rng: np.random.Generator) -> np.random.Generator:
     return np.random.default_rng(int(rng.integers(2 ** 31)))
 
 
+@dataclasses.dataclass(frozen=True)
+class MixedTrace:
+    """A :func:`mix` blend — a ``TraceFn`` that *exposes its components*.
+
+    Calling the instance builds the aggregate ``Σ wᵢ·traceᵢ`` exactly as
+    the pre-tenant ``mix`` closure did (same child-generator draw order,
+    same accumulation order — bit-for-bit).  :meth:`components` builds
+    the weighted per-component traces ``[T, n]`` from the same seed
+    instead, which is what lets ``scenarios.Scenario.tenant_plane`` turn
+    any registered mixture into a tenant-resolved workload plane without
+    a dedicated tenant builder.
+    """
+
+    fns: Tuple[TraceFn, ...]
+    weights: np.ndarray  # [T] normalized
+
+    def components(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        """Weighted component traces ``[T, n]`` (float64, unclipped)."""
+        return np.stack([wi * np.asarray(fn(n, _child(rng)), np.float64)
+                         for wi, fn in zip(self.weights, self.fns)])
+
+    def __call__(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        out = np.zeros(n, np.float64)
+        for wi, fn in zip(self.weights, self.fns):
+            out += wi * np.asarray(fn(n, _child(rng)), np.float64)
+        return np.clip(out, 0.0, 1.0).astype(np.float32)
+
+
 def mix(components: Sequence[Component],
-        weights: Optional[Sequence[float]] = None) -> TraceFn:
+        weights: Optional[Sequence[float]] = None) -> MixedTrace:
     """Blend workload components sample-by-sample: ``Σ wᵢ·traceᵢ``.
 
     Weights are normalized to sum to 1 and the result is clipped to
@@ -378,8 +406,13 @@ def mix(components: Sequence[Component],
     per seed.  Components may be replayed sources, scenario names, or
     raw builders — e.g. a replayed Azure day blended with a synthetic
     flash crowd: ``mix([azure_source, "flash_crowd"], [0.7, 0.3])``.
+
+    Returns a :class:`MixedTrace`: a plain ``TraceFn`` to every existing
+    caller, but one whose per-component traces are recoverable
+    (``.components(n, rng)``) so mixture scenarios double as
+    multi-tenant workload planes.
     """
-    fns = [as_trace_fn(c) for c in components]
+    fns = tuple(as_trace_fn(c) for c in components)
     if not fns:
         raise ValueError("mix needs at least one component")
     w = (np.full(len(fns), 1.0 / len(fns)) if weights is None
@@ -387,15 +420,7 @@ def mix(components: Sequence[Component],
     if w.shape != (len(fns),) or (w < 0).any() or w.sum() <= 0:
         raise ValueError(f"weights must be {len(fns)} non-negative values "
                          "with a positive sum")
-    w = w / w.sum()
-
-    def build(n: int, rng: np.random.Generator) -> np.ndarray:
-        out = np.zeros(n, np.float64)
-        for wi, fn in zip(w, fns):
-            out += wi * np.asarray(fn(n, _child(rng)), np.float64)
-        return np.clip(out, 0.0, 1.0).astype(np.float32)
-
-    return build
+    return MixedTrace(fns=fns, weights=w / w.sum())
 
 
 def splice(components: Sequence[Component],

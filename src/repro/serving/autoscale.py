@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import controller as ctl
 from repro.core import predictors as pred_mod
+from repro.core import scheduler as sched_mod
 from repro.core import workload as wl
 from repro.serving.batching import ContinuousBatcher, Request
 
@@ -75,7 +76,8 @@ class DvfsServingSimulator:
                          seed: int = 0,
                          closed_loop: bool = True,
                          workload_signal: str = "occupancy",
-                         node_schedule: Optional[np.ndarray] = None
+                         node_schedule: Optional[np.ndarray] = None,
+                         tenants: Optional[sched_mod.TenantSpec] = None
                          ) -> Dict[str, object]:
         """Drive a ContinuousBatcher from a Poisson request process with
         the §V controller *in the loop*.
@@ -138,6 +140,19 @@ class DvfsServingSimulator:
         partial τ interval is folded into the counters at fractional
         weight rather than discarded.
 
+        ``tenants`` — an optional
+        :class:`~repro.core.scheduler.TenantSpec` (the same pytree the
+        fleet scheduler consumes): each arriving request is assigned a
+        tenant class with probability proportional to the spec's
+        ``share``, free slots admit the highest-``priority`` queued
+        request first (FIFO within a class — the serving twin of the
+        fleet scheduler's priority waterfill), and the result gains
+        measured per-class latency ``tenant_latency_p50`` /
+        ``tenant_latency_p99`` plus ``tenant_submitted`` /
+        ``tenant_completed`` counts, each a length-T list.  ``None``
+        keeps today's single-queue FIFO behavior, including its RNG
+        stream.
+
         Returns the :class:`~repro.core.controller.Summary` (including
         measured latency p50/p99 in decode steps) plus per-interval
         occupancy/frequency/power/workload arrays, τ weights, and
@@ -148,6 +163,24 @@ class DvfsServingSimulator:
                              " choose 'occupancy', 'demand', or 'arrival'")
         rng = np.random.default_rng(seed)
         batcher = ContinuousBatcher(batch_size=batch_size)
+        tenant_shares = None
+        if tenants is not None:
+            n_ten = tenants.n_tenants
+            share = np.asarray(tenants.share, np.float64).reshape(n_ten)
+            share = share * (np.asarray(tenants.active,
+                                        np.float64).reshape(n_ten) > 0)
+            if share.sum() <= 0:
+                raise ValueError("tenants must have at least one active "
+                                 "class with share > 0")
+            tenant_shares = share / share.sum()
+            prio = np.asarray(tenants.priority, np.float64).reshape(n_ten)
+            batcher.tenant_priority = {t: float(prio[t])
+                                       for t in range(n_ten)}
+            # Class draws come from a dedicated stream so the arrival
+            # process (sizes, counts) stays bit-identical to the
+            # single-tenant run — tenant mode changes who a request
+            # belongs to, never the offered load.
+            rng_tenant = np.random.default_rng(seed + 0x7E4A47)
         tables = ctl.build_bin_tables(self.platform, self.cfg)
         f_rel = np.asarray(tables.f_rel)
         pcfg = self.cfg.predictor
@@ -257,8 +290,11 @@ class DvfsServingSimulator:
         for lam in arrival_rate_per_step:
             for _ in range(rng.poisson(lam)):
                 n_tok = max(1, int(rng.exponential(mean_new_tokens)))
+                ten = (int(rng_tenant.choice(len(tenant_shares),
+                                             p=tenant_shares))
+                       if tenant_shares is not None else 0)
                 batcher.submit(Request(rid=rid, prompt_len=128,
-                                       max_new_tokens=n_tok))
+                                       max_new_tokens=n_tok, tenant=ten))
                 offered_tokens += n_tok
                 interval_tokens[0] += n_tok
                 rid += 1
@@ -292,6 +328,27 @@ class DvfsServingSimulator:
                           for r in batcher.finished], np.float64)
         p50 = float(np.percentile(lat, 50)) if lat.size else float("nan")
         p99 = float(np.percentile(lat, 99)) if lat.size else float("nan")
+        tenant_stats = None
+        if tenants is not None:
+            n_ten = tenants.n_tenants
+            t_lat = [[] for _ in range(n_ten)]
+            for r in batcher.finished:
+                t_lat[r.tenant].append(r.finished_step - r.arrived_step)
+            t_sub = [0] * n_ten
+            for r in (list(batcher.finished) + list(batcher.queue)
+                      + [s for s in batcher.slots if s is not None]):
+                t_sub[r.tenant] += 1
+
+            def pct(x, q):
+                return (float(np.percentile(np.asarray(x, np.float64), q))
+                        if x else float("nan"))
+
+            tenant_stats = {
+                "tenant_latency_p50": [pct(x, 50) for x in t_lat],
+                "tenant_latency_p99": [pct(x, 99) for x in t_lat],
+                "tenant_submitted": t_sub,
+                "tenant_completed": [len(x) for x in t_lat],
+            }
         served_tokens = (sum(min(r.decoded, r.max_new_tokens)
                              for r in batcher.finished)
                          + sum(min(s.decoded, s.max_new_tokens)
@@ -324,7 +381,7 @@ class DvfsServingSimulator:
             nominal_power_configured_w=nominal_cfg_w,
             power_gain_vs_configured=nominal_cfg_w / mean_w,
         )
-        return {"summary": summary,
+        out = {"summary": summary,
                 "occupancy_tau": np.asarray(occ_tau),
                 "workload_tau": np.asarray(workload_tau),
                 "arrival_fraction_tau": np.asarray(arrival_tau),
@@ -340,6 +397,9 @@ class DvfsServingSimulator:
                 "offered_tokens": offered_tokens,
                 "served_tokens": served_tokens,
                 "drain_steps": drain_steps}
+        if tenant_stats is not None:
+            out.update(tenant_stats)
+        return out
 
     def workload_trace_source(self, result: Dict[str, object],
                               name: str = "request_driven"):

@@ -30,6 +30,9 @@ class Request:
     started_step: Optional[int] = None
     finished_step: Optional[int] = None
     decoded: int = 0
+    #: Tenant class index (0 in single-tenant runs) — the serving twin
+    #: of the fleet engine's tenant axis.
+    tenant: int = 0
 
 
 @dataclasses.dataclass
@@ -39,6 +42,11 @@ class ContinuousBatcher:
     slots: List[Optional[Request]] = dataclasses.field(default_factory=list)
     step_idx: int = 0
     finished: List[Request] = dataclasses.field(default_factory=list)
+    #: Optional tenant-class → priority map: when set, free slots admit
+    #: the highest-priority queued request (FIFO within a class — the
+    #: serving twin of the fleet scheduler's priority waterfill) instead
+    #: of strict FIFO.  ``None`` keeps today's single-queue behavior.
+    tenant_priority: Optional[Dict[int, float]] = None
 
     def __post_init__(self):
         if not self.slots:
@@ -48,10 +56,29 @@ class ContinuousBatcher:
         req.arrived_step = self.step_idx
         self.queue.append(req)
 
+    def queued_by_tenant(self) -> Dict[int, int]:
+        """Current queue depth per tenant class."""
+        out: Dict[int, int] = {}
+        for r in self.queue:
+            out[r.tenant] = out.get(r.tenant, 0) + 1
+        return out
+
+    def _pop_next(self) -> Request:
+        if not self.tenant_priority:
+            return self.queue.popleft()
+        best, best_p = 0, None
+        for j, r in enumerate(self.queue):
+            p = self.tenant_priority.get(r.tenant, 0.0)
+            if best_p is None or p > best_p:
+                best, best_p = j, p
+        req = self.queue[best]
+        del self.queue[best]
+        return req
+
     def _admit(self):
         for i, s in enumerate(self.slots):
             if s is None and self.queue:
-                req = self.queue.popleft()
+                req = self._pop_next()
                 req.started_step = self.step_idx
                 self.slots[i] = req
 

@@ -1,0 +1,217 @@
+"""Per-tenant workload plane + power-aware scheduling (PR 8).
+
+Covers the tenant decomposition's aggregate parity, the
+scheduler-off byte-compat contract, priority-tenant starvation
+freedom, the tenant-axis zero-retrace witnesses, and the
+registry/validation surface.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import controller as ctl
+from repro.core import scenarios as scn
+from repro.core import scheduler as sched_mod
+from repro.core.accelerators import ACCELERATORS
+
+N_STEPS = 384
+CHUNK = 128
+
+
+def _platform():
+    return ctl.fpga_platform(ACCELERATORS["tabla"])
+
+
+def _campaign(**kw):
+    kw.setdefault("scenario_names", ("multi_tenant",))
+    kw.setdefault("techniques", ("hybrid",))
+    kw.setdefault("n_steps", N_STEPS)
+    kw.setdefault("chunk_size", CHUNK)
+    plat = _platform()
+    out = scn.run_campaign([plat], **kw)
+    return {s: out["table"][plat.name][kw["techniques"][0]][s]
+            for s in out["scenarios"]}
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: tenant decomposition keeps the aggregate numerically identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["multi_tenant", "flash_crowd", "cloud_mix"])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_tenant_plane_aggregate_parity(name, seed):
+    if name == "cloud_mix" and name not in scn.SCENARIOS:
+        pytest.skip("no bundled traces")
+    s = scn.get_scenario(name)
+    trace = s.trace(N_STEPS, seed)
+    plane, spec = s.tenant_plane(N_STEPS, seed)
+    assert plane.shape == (N_STEPS, spec.n_tenants)
+    np.testing.assert_allclose(plane.sum(-1), trace, atol=1e-5)
+    assert (np.asarray(spec.active) > 0).all()
+    assert abs(float(np.asarray(spec.share).sum()) - 1.0) < 1e-5
+
+
+def test_multi_tenant_components_not_preaggregated():
+    plane, spec = scn.get_scenario("multi_tenant").tenant_plane(N_STEPS, 0)
+    assert spec.n_tenants == 3
+    # Three genuinely distinct component streams, not an aggregate copy.
+    for a in range(3):
+        for b in range(a + 1, 3):
+            assert np.abs(plane[:, a] - plane[:, b]).max() > 1e-3
+
+
+def test_tenant_plane_default_single_tenant_pads():
+    s = scn.get_scenario("burse")
+    trace = s.trace(N_STEPS, 0)
+    plane, spec = s.tenant_plane(N_STEPS, 0, n_tenants=3)
+    np.testing.assert_array_equal(plane[:, 0], trace.astype(np.float32))
+    assert np.asarray(spec.active).tolist() == [1.0, 0.0, 0.0]
+    assert np.abs(plane[:, 1:]).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3a: scheduler off reproduces the aggregate campaign exactly
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_off_reproduces_aggregate_campaign():
+    agg = _campaign()["multi_tenant"]
+    ten = _campaign(tenants=3, scheduler="none")["multi_tenant"]
+    # Bin-quantized metrics are robust to the float32 tenant
+    # decomposition (plane parity ~1e-7) and must match exactly; the
+    # continuous ratios track that parity.
+    for key in ("mean_power_w", "qos_violation_rate", "misprediction_rate"):
+        assert ten[key] == agg[key], key
+    for key in ("served_fraction", "mean_backlog"):
+        assert ten[key] == pytest.approx(agg[key], rel=1e-6, abs=1e-6), key
+    # And the per-tenant columns exist only on the tenant run.
+    assert "tenant_qos_violation_rate" in ten
+    assert "tenant_qos_violation_rate" not in agg
+
+
+def test_single_default_tenant_stream_matches_aggregate_bitwise():
+    from repro.core import characterization as char
+    plat = _platform()
+    params = char.stack_platform_params([plat.params])
+    cfg = ctl.ControllerConfig(technique="hybrid")
+    tables = ctl.fleet_bin_tables(params, cfg, techniques=("hybrid",))
+    trace = scn.get_scenario("burse").trace(N_STEPS, 0)
+    agg = ctl.simulate_fleet_stream(tables, trace[None, None], cfg,
+                                    chunk_size=CHUNK)
+    spec = sched_mod.TenantSpec(
+        *[np.asarray(x)[None, None] for x in sched_mod.default_tenants(1)])
+    ten = ctl.simulate_fleet_stream(tables, trace[None, None, :, None], cfg,
+                                    chunk_size=CHUNK, tenant_spec=spec)
+    assert float(agg.mean_power_w[0, 0]) == float(ten.mean_power_w[0, 0])
+    assert (float(agg.qos_violation_rate[0, 0])
+            == float(ten.qos_violation_rate[0, 0]))
+    assert float(agg.final_backlog[0, 0]) == float(ten.final_backlog[0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3b: the priority tenant never starves under flash_crowd
+# ---------------------------------------------------------------------------
+
+
+def test_priority_tenant_never_starves_flash_crowd():
+    cell = _campaign(scenario_names=("flash_crowd",), tenants=2,
+                     scheduler="priority")["flash_crowd"]
+    starve = cell["tenant_starvation_rate"]
+    assert starve[0] == 0.0, f"priority tenant starved: {starve}"
+    assert cell["tenant_served_fraction"][0] > 0.95
+
+
+def test_cooptimized_scheduler_beats_dvfs_only_on_multi_tenant():
+    sched = _campaign(tenants=3, scheduler="priority")["multi_tenant"]
+    plain = _campaign(tenants=3, scheduler="none")["multi_tenant"]
+    assert sched["mean_power_w"] < plain["mean_power_w"]
+    assert (sched["worst_tenant_qos_violation"]
+            <= plain["worst_tenant_qos_violation"] + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 5: zero-retrace witnesses across scheduler on/off + tenant width
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_onoff_zero_retrace():
+    _campaign(tenants=3, scheduler="priority")   # compile
+    before = ctl.fleet_trace_counts()["stream"]
+    _campaign(tenants=3, scheduler="none")
+    _campaign(tenants=3, scheduler="fair_share")
+    delta = ctl.fleet_trace_counts()["stream"] - before
+    assert delta == 0, f"scheduler on/off sweep retraced {delta}x"
+
+
+def test_tenant_width_zero_retrace():
+    # Different scenarios padded to one width share the chunk program.
+    _campaign(tenants=4, scheduler="priority")   # compile at width 4
+    before = ctl.fleet_trace_counts()["stream"]
+    _campaign(scenario_names=("flash_crowd",), tenants=4,
+              scheduler="priority")
+    _campaign(scenario_names=("burse",), tenants=4, scheduler="priority")
+    delta = ctl.fleet_trace_counts()["stream"] - before
+    assert delta == 0, f"tenant-width sweep retraced {delta}x"
+
+
+# ---------------------------------------------------------------------------
+# Registry, spec validation, CLI-facing errors
+# ---------------------------------------------------------------------------
+
+
+def test_registry_surface():
+    assert sched_mod.available() == ("fair_share", "none", "priority")
+    assert sched_mod.get("priority").enabled
+    assert not sched_mod.get("none").enabled
+    with pytest.raises(KeyError, match="registered"):
+        sched_mod.get("bogus")
+    assert sched_mod.as_config(None).name == "none"
+    assert sched_mod.as_config("fair_share").policy == "fair"
+
+
+def test_controller_config_validates_scheduler_eagerly():
+    cfg = ctl.ControllerConfig(scheduler="priority")
+    assert cfg.scheduler.enabled
+    with pytest.raises(KeyError, match="bogus"):
+        ctl.ControllerConfig(scheduler="bogus")
+    with pytest.raises(TypeError):
+        ctl.ControllerConfig(scheduler=3.14)
+
+
+def test_make_and_pad_tenants_validation():
+    with pytest.raises(ValueError, match="equal-length"):
+        sched_mod.make_tenants([1.0], [0.0, 1.0], [1.0])
+    with pytest.raises(ValueError, match=">= 0 steps"):
+        sched_mod.make_tenants([1.0], [-1.0], [1.0])
+    with pytest.raises(ValueError, match="positive sum"):
+        sched_mod.make_tenants([1.0, 1.0], [0.0, 0.0], [0.0, 0.0])
+    spec = sched_mod.make_tenants([2.0, 1.0], [0.0, 8.0], [3.0, 1.0])
+    np.testing.assert_allclose(np.asarray(spec.share), [0.75, 0.25])
+    padded = sched_mod.pad_tenants(spec, 4)
+    assert padded.n_tenants == 4
+    assert np.asarray(padded.active).tolist() == [1.0, 1.0, 0.0, 0.0]
+    with pytest.raises(ValueError, match="pad"):
+        sched_mod.pad_tenants(spec, 1)
+
+
+def test_run_campaign_validates_tenants():
+    with pytest.raises(ValueError, match="tenants"):
+        scn.run_campaign([_platform()], scenario_names=("burse",),
+                         techniques=("hybrid",), n_steps=64,
+                         chunk_size=64, tenants=-2)
+
+
+def test_campaign_cli_rejects_unknown_scheduler():
+    # The CLI module lives outside the package; exercise it as a script.
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    r = subprocess.run([sys.executable, "scripts/campaign.py",
+                       "--scheduler", "bogus"], cwd=root, env=env,
+                       capture_output=True, text=True)
+    assert r.returncode != 0
+    assert "unknown --scheduler" in r.stderr
