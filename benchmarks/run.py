@@ -357,27 +357,61 @@ def bench_failure():
     from repro.core import scenarios as scn
     platforms = [ctl.fpga_platform(ACCELERATORS[n])
                  for n in ("tabla", "stripes")]
-    techniques = ("proposed", "power_gating", "hybrid")
+    techniques = ("proposed", "power_gating", "hybrid", "headroom")
+    fail_scens = ("node_failure", "rack_failure", "cascade", "flaky_fleet")
     chunk = max(min(N_STEPS, 512), 1)
     kw = dict(techniques=techniques, n_steps=N_STEPS, chunk_size=chunk)
-    scn.run_campaign(platforms, scenario_names=("burse", "diurnal"), **kw)
+    # Healthy warm-up sweep of the same fleet shape (same scenario
+    # count), so the failure-bearing sweep below must be a pure reuse.
+    scn.run_campaign(platforms, scenario_names=(
+        "burse", "diurnal", "flash_crowd", "ramp", "decay"), **kw)
     before = ctl.fleet_trace_counts()["stream"]
     t0 = time.perf_counter()
     out = scn.run_campaign(platforms,
-                           scenario_names=("burse", "node_failure"), **kw)
+                           scenario_names=("burse",) + fail_scens, **kw)
     dt = time.perf_counter() - t0
     delta = ctl.fleet_trace_counts()["stream"] - before
-    cells = len(platforms) * len(techniques) * 2
+    cells = len(platforms) * len(techniques) * (1 + len(fail_scens))
     rows = []
+
+    def mean_cell(tech, scen):
+        cell = [out["table"][p.name][tech][scen] for p in platforms]
+        return {k: float(np.mean([c[k] for c in cell]))
+                for k in ("power_gain", "power_gain_vs_configured",
+                          "mean_avail_nodes", "qos_violation_rate")}
+
     for tech in techniques:
-        cell = [out["table"][p.name][tech]["node_failure"]
-                for p in platforms]
+        c = mean_cell(tech, "node_failure")
         rows.append((f"failure/node_failure/{tech}",
                      dt / cells / N_STEPS * 1e6,
-                     f"gain={np.mean([c['power_gain'] for c in cell]):.2f}x"
-                     f";vs_cfg={np.mean([c['power_gain_vs_configured'] for c in cell]):.2f}x"
-                     f";avail={np.mean([c['mean_avail_nodes'] for c in cell]):.2f}"
-                     f";qos_viol={np.mean([c['qos_violation_rate'] for c in cell]):.3f}"))
+                     f"gain={c['power_gain']:.2f}x"
+                     f";vs_cfg={c['power_gain_vs_configured']:.2f}x"
+                     f";avail={c['mean_avail_nodes']:.2f}"
+                     f";qos_viol={c['qos_violation_rate']:.3f}"))
+    # Correlated failure models: the headroom-vs-hybrid trade per shape.
+    for scen in fail_scens[1:]:
+        h, y = mean_cell("hybrid", scen), mean_cell("headroom", scen)
+        rows.append((f"failure/{scen}", None,
+                     f"hyb={h['power_gain']:.2f}x"
+                     f"/q{h['qos_violation_rate']:.3f}"
+                     f";hr={y['power_gain']:.2f}x"
+                     f"/q{y['qos_violation_rate']:.3f}"
+                     f";avail={y['mean_avail_nodes']:.2f}"))
+    # Pareto front over (power_gain ↑, qos_violation ↓) per failure
+    # scenario (platform-mean cells — the campaign also reports
+    # per-platform fronts in run_campaign()["pareto"]).
+    for scen in fail_scens:
+        front = scn.pareto_front({t: mean_cell(t, scen)
+                                  for t in techniques})
+        rows.append((f"failure/pareto/{scen}", None,
+                     "front=" + ",".join(front)))
+    # The ISSUE-9 acceptance gate: headroom must hold QoS violation
+    # under 0.5 on node_failure while keeping gain >= 2.5x.
+    g = mean_cell("headroom", "node_failure")
+    gate_ok = g["qos_violation_rate"] < 0.5 and g["power_gain"] >= 2.5
+    rows.append(("failure/headroom_gate", None,
+                 f"qos_viol={g['qos_violation_rate']:.3f}"
+                 f";gain={g['power_gain']:.2f}x;ok={int(gate_ok)}"))
     rows.append(("failure/stream_reuse", None,
                  f"retraces={delta};chunk={chunk}"))
     return rows

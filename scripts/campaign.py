@@ -64,6 +64,17 @@ def main(argv=None) -> int:
                     "(default: all)")
     ap.add_argument("--techniques", type=str,
                     default="proposed,power_gating,hybrid")
+    ap.add_argument("--failure-model", type=str, default="none",
+                    help="overlay a correlated failure model onto every "
+                    "swept scenario: one of "
+                    f"{['none'] + sorted(scn.FAILURE_MODELS)}; each "
+                    "scenario <s> is swept as <s>+<model> (workload "
+                    "unchanged, node schedule from the model)")
+    ap.add_argument("--headroom-frac", type=float, default=0.5,
+                    help="failure depth the 'headroom' technique "
+                    "provisions spare capacity for: the availability-"
+                    "forecast bump plans delivery for up to "
+                    "ceil(frac*n_nodes) lost nodes")
     ap.add_argument("--platforms", type=str, default="all",
                     help="comma list of accelerator names, 'tpu', or 'all'")
     ap.add_argument("--n-nodes", type=int, default=8)
@@ -129,6 +140,14 @@ def main(argv=None) -> int:
     if args.scheduler != "none" and args.tenants == 0:
         raise SystemExit("error: --scheduler needs a tenant-resolved "
                          "workload plane; pass --tenants N (N >= 1)")
+    if args.failure_model != "none" \
+            and args.failure_model not in scn.FAILURE_MODELS:
+        raise SystemExit(f"error: unknown --failure-model "
+                         f"{args.failure_model!r}; choose from "
+                         f"{['none'] + sorted(scn.FAILURE_MODELS)}")
+    if not 0.0 <= args.headroom_frac < 1.0:
+        raise SystemExit("error: --headroom-frac must be in [0, 1) "
+                         f"(got {args.headroom_frac:g})")
 
     if args.list_schedulers:
         for name in sched_mod.available():
@@ -159,6 +178,13 @@ def main(argv=None) -> int:
     techniques = tuple(t for t in args.techniques.split(",") if t)
     if registered is not None and names is not None:
         names += (registered.name,)
+    if args.failure_model != "none":
+        # Overlay: every swept scenario keeps its workload but takes its
+        # node schedule from the named correlated failure model
+        # (registered as derived <scenario>+<model> scenarios).
+        base = names if names is not None else tuple(sorted(scn.SCENARIOS))
+        names = tuple(scn.with_failure_model(s, args.failure_model).name
+                      for s in base)
 
     if args.cache_dir:
         from repro.core import aot
@@ -185,7 +211,8 @@ def main(argv=None) -> int:
                            seed=args.seed, chunk_size=args.chunk,
                            n_nodes=args.n_nodes, predictor=args.predictor,
                            tenants=args.tenants or None,
-                           scheduler=args.scheduler)
+                           scheduler=args.scheduler,
+                           headroom_frac=args.headroom_frac)
     dt = time.perf_counter() - t0
     cells = len(platforms) * len(techniques) * len(out["scenarios"])
     tenant_note = (f", tenants={args.tenants}, scheduler={args.scheduler}"
@@ -213,7 +240,8 @@ def main(argv=None) -> int:
                 + (f"/w{row[t][scen]['worst_tenant_qos_violation']:.2f}"
                    if args.tenants else "")
                 for t in techniques)
-            print(f"{plat.name:16s} {cells_s}")
+            front = ",".join(out["pareto"][plat.name][scen])
+            print(f"{plat.name:16s} {cells_s}   pareto[{front}]")
         if args.tenants:
             print("   (w = worst per-tenant QoS-violation rate across "
                   "active tenant classes)")

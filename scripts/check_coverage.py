@@ -1,0 +1,90 @@
+"""Coverage CI gate: enforce a line-coverage floor on the control plane.
+
+Reads a coverage.py JSON report (``pytest --cov=repro
+--cov-report=json:coverage.json``) and aggregates line coverage into two
+groups:
+
+1. **gated** — files under ``repro/core/`` and ``repro/runtime/`` (the
+   controller, scenario library, predictors, and fault machinery this
+   repo's claims rest on).  Their combined line coverage must meet
+   ``--floor`` or the script exits non-zero.
+2. **report-only** — everything else (kernels, benchmarks glue).  Their
+   coverage is printed for visibility but never fails the build: Pallas
+   kernel interpret-mode branches and CLI plumbing are exercised by the
+   bench smoke, not the tier-1 suite.
+
+  PYTHONPATH=src python -m pytest -q --cov=repro \
+      --cov-report=json:coverage.json
+  python scripts/check_coverage.py coverage.json --floor 80
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_PREFIXES = ("repro/core/", "repro/runtime/")
+
+
+def _group(path: str) -> str:
+    norm = path.replace("\\", "/")
+    for pre in GATED_PREFIXES:
+        if f"/{pre}" in f"/{norm}":
+            return "gated"
+    return "report-only"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report", help="coverage.py JSON report path")
+    ap.add_argument("--floor", type=float, default=80.0,
+                    help="minimum combined line coverage (%%) for files "
+                    "under repro/core/ and repro/runtime/")
+    args = ap.parse_args(argv)
+
+    with open(args.report) as f:
+        data = json.load(f)
+    files = data.get("files", {})
+    if not files:
+        print(f"error: no per-file entries in {args.report}")
+        return 1
+
+    totals = {"gated": [0, 0], "report-only": [0, 0]}
+    worst = []
+    for path, entry in sorted(files.items()):
+        s = entry["summary"]
+        covered, stmts = s["covered_lines"], s["num_statements"]
+        group = _group(path)
+        totals[group][0] += covered
+        totals[group][1] += stmts
+        if group == "gated" and stmts:
+            worst.append((100.0 * covered / stmts, path))
+
+    def pct(pair):
+        covered, stmts = pair
+        return 100.0 * covered / stmts if stmts else 100.0
+
+    gated = pct(totals["gated"])
+    print(f"gated (repro/core + repro/runtime): {gated:6.2f}% "
+          f"({totals['gated'][0]}/{totals['gated'][1]} lines, "
+          f"floor {args.floor:g}%)")
+    print(f"report-only (everything else):      "
+          f"{pct(totals['report-only']):6.2f}% "
+          f"({totals['report-only'][0]}/{totals['report-only'][1]} lines)")
+    for p, path in sorted(worst)[:5]:
+        print(f"  lowest gated: {p:6.2f}%  {path}")
+
+    if totals["gated"][1] == 0:
+        print("error: report contains no gated files — wrong --cov target?")
+        return 1
+    if gated < args.floor:
+        print(f"FAIL: gated coverage {gated:.2f}% is below the "
+              f"{args.floor:g}% floor")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,7 +23,6 @@ Nothing here runs at import time: call sites opt in explicitly.
 
 from __future__ import annotations
 
-import dataclasses
 import os
 import time
 from typing import Dict, Optional, Sequence, Tuple
@@ -111,21 +110,26 @@ def warm_fleet_programs(params: char.PlatformParams,
         k *= int(dim)
     c = max(1, int(chunk_size))
     f32 = jnp.float32
-    flat = ctl.BinTables(*[jax.ShapeDtypeStruct((k, m), f32)
-                           for _ in ctl.BinTables._fields])
+    # Per-bin [K, M] fields, except the per-cell scalar headroom [K].
+    flat = ctl.BinTables(*[jax.ShapeDtypeStruct(
+        (k,) if f == "headroom" else (k, m), f32)
+        for f in ctl.BinTables._fields])
     # state_spec is already abstract (no concrete state materializes on
     # the cold path) — only the fleet axis K is prepended here.
-    mstate = jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct((k,) + x.shape, x.dtype),
-        pred_mod.state_spec(cfg.predictor))
+    def _cell_states(pcfg):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((k,) + x.shape, x.dtype),
+            pred_mod.state_spec(pcfg))
+
+    mstate = _cell_states(cfg.predictor)
+    astate = _cell_states(cfg.avail_predictor)
     q = max(1, int(n_tenants))
     spec = sched_mod.TenantSpec(*[jax.ShapeDtypeStruct((k, q), f32)
                                   for _ in sched_mod.TenantSpec._fields])
-    run_cfg = dataclasses.replace(cfg, technique="proposed",
-                                  scheduler="none")
+    run_cfg = ctl._runtime_cfg(cfg)
     t0 = time.perf_counter()
     ctl._fleet_stream_chunk_jit.lower(
-        flat, mstate, jax.ShapeDtypeStruct((k, q), f32),
+        flat, mstate, astate, jax.ShapeDtypeStruct((k, q), f32),
         jax.ShapeDtypeStruct((k, q), f32),
         jax.ShapeDtypeStruct((k, c, q), f32),
         jax.ShapeDtypeStruct((k, c), f32),

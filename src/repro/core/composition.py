@@ -230,7 +230,8 @@ def search_fleet_composition(
             f_rel=cell(per_node["f_rel"]),
             n_active=jnp.broadcast_to(cnt, shape),
             node_power=cell(per_node["node_power"]),
-            gated_power=jnp.zeros(shape))
+            gated_power=jnp.zeros(shape),
+            headroom=jnp.zeros(shape[:-1]))
         u = (scale_h[:, None, None, None]
              * scen_traces[None, None, :, :]).astype(np.float32)
         avail = (counts_h[:, :, None, None]

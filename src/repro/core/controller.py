@@ -43,7 +43,7 @@ from repro.parallel import sharding as shd
 Array = jax.Array
 
 TECHNIQUES = ("proposed", "core_only", "bram_only", "freq_only",
-              "power_gating", "nominal", "hybrid")
+              "power_gating", "nominal", "hybrid", "headroom")
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +172,22 @@ class ControllerConfig:
     #: string becomes ``PredictorConfig(kind=...)`` with defaults.
     predictor: pred_mod.PredictorConfig | str = dataclasses.field(
         default_factory=pred_mod.PredictorConfig)
+    #: Availability forecaster for the ``headroom`` technique: a second
+    #: predictor plane over the node schedule (``avail / n_nodes``),
+    #: reusing the same ``core/predictors`` registry.  Resolved and
+    #: bin-synced like ``predictor`` (``n_bins`` becomes ``n_nodes`` so
+    #: bins map 1:1 onto usable-node counts).  The plane rides every
+    #: cell's scan carry — which technique *acts* on the forecast is a
+    #: traced table value, so headroom-on/off sweeps share one program.
+    avail_predictor: pred_mod.PredictorConfig | str = "persistence"
+    #: Failure depth the ``headroom`` technique provisions spare
+    #: capacity for: the runtime bump plans delivery for up to
+    #: ``ceil(frac·n_nodes)`` lost nodes — covering the forecast outage
+    #: exactly while it is shallower, and refusing to chase deeper
+    #: outages at full power (violations there are unavoidable anyway).
+    #: Raising it trades power for QoS robustness.  The runtime loop
+    #: reads the traced ``BinTables.headroom`` value, never this field.
+    headroom_frac: float = 0.5
     #: Multi-tenant scheduler selection: a ``SchedulerConfig`` or a
     #: registered name (``"none"``, ``"priority"``, ``"fair_share"``) —
     #: a bare string is resolved through the ``core.scheduler`` registry.
@@ -211,6 +227,25 @@ class ControllerConfig:
         object.__setattr__(self, "predictor", dataclasses.replace(
             pcfg, n_bins=self.n_bins,
             margin_bins=int(np.floor(self.margin * self.n_bins + 1e-9))))
+        if not 0.0 <= self.headroom_frac < 1.0:
+            raise ValueError(f"headroom_frac {self.headroom_frac} must be "
+                             "in [0, 1)")
+        if int(np.ceil(self.headroom_frac * self.n_nodes - 1e-9)) \
+                >= self.n_nodes:
+            raise ValueError(
+                f"headroom_frac {self.headroom_frac} plans for the whole "
+                f"fleet lost (ceil(frac·{self.n_nodes}) = {self.n_nodes}) "
+                "— the reserve must leave at least one planned node; "
+                "lower it")
+        acfg = self.avail_predictor
+        if isinstance(acfg, str):
+            acfg = pred_mod.PredictorConfig(kind=acfg)
+        # The availability plane's bins are usable-node counts: bin b of
+        # n_nodes covers fraction ((b, b+1]/n] — forecast_fraction maps
+        # a predicted bin straight back to b+1 nodes.  No margin: the
+        # spare gears ARE the margin.
+        object.__setattr__(self, "avail_predictor", dataclasses.replace(
+            acfg, n_bins=self.n_nodes, margin_bins=0))
 
 
 class BinTables(NamedTuple):
@@ -224,6 +259,12 @@ class BinTables(NamedTuple):
     dead nodes contribute nothing, and at full availability the
     decomposition reproduces ``power`` exactly
     (``power = n_active·node_power + (n_nodes - n_active)·gated_power``).
+
+    ``headroom`` is a per-cell *scalar* (no bin axis): the spare-capacity
+    fraction this cell's technique reserved at build time, 0 for every
+    technique but ``headroom``.  The runtime loop keys its
+    failure-anticipating bin bump on ``headroom > 0`` as a traced value,
+    so headroom-on and -off cells share one compiled program.
     """
 
     capacity: Array   # [M] relative throughput delivered at this bin's point
@@ -234,10 +275,11 @@ class BinTables(NamedTuple):
     n_active: Array   # [M] powered-on nodes at this bin's point
     node_power: Array   # [M] watts per powered-on node (incl. its PLLs)
     gated_power: Array  # [M] residual watts per gated-but-alive node
+    headroom: Array     # [] per-cell reserved spare-capacity fraction
 
 
 def _grids_for(technique: str, v_step: float) -> volt_mod.VoltageGrids:
-    if technique in ("proposed", "hybrid"):
+    if technique in ("proposed", "hybrid", "headroom"):
         return volt_mod.VoltageGrids.default(v_step)
     if technique == "core_only":
         return volt_mod.VoltageGrids.core_only(v_step)
@@ -280,6 +322,13 @@ def _hybrid_gears(cfg: ControllerConfig) -> Tuple[Array, Array, Array]:
     return gears, f_node, f_need <= 1.0 + 1e-9
 
 
+def _headroom_spare(cfg: ControllerConfig) -> int:
+    """Failure depth ``headroom`` provisions for: ``ceil(frac·n_nodes)``
+    nodes' worth of spare capacity (the runtime bump plans delivery for
+    up to that many lost nodes)."""
+    return int(np.ceil(cfg.headroom_frac * cfg.n_nodes - 1e-9))
+
+
 def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables:
     """Precompute the optimal operating point for every workload bin."""
     m = cfg.n_bins
@@ -296,7 +345,8 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
                          f_rel=jnp.ones(m),
                          n_active=jnp.full(m, float(cfg.n_nodes)),
                          node_power=jnp.full(m, node_w + pll_watts),
-                         gated_power=jnp.zeros(m))
+                         gated_power=jnp.zeros(m),
+                         headroom=jnp.asarray(0.0))
 
     if cfg.technique == "power_gating":
         # Conventional baseline (paper §III): scale the number of *active*
@@ -316,13 +366,16 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
                          n_active=jnp.asarray(n_active, jnp.float32),
                          node_power=jnp.full(m, node_w + pll_watts),
                          gated_power=jnp.full(
-                             m, cfg.gated_power_frac * node_w))
+                             m, cfg.gated_power_frac * node_w),
+                         headroom=jnp.asarray(0.0))
 
-    if cfg.technique == "hybrid":
+    if cfg.technique in ("hybrid", "headroom"):
         # Joint node-scaling + DVFS: sweep how many nodes stay powered on
         # (a "gear") and jointly voltage-scale the active ones at the
         # gear's per-node frequency; gated nodes draw the residual
         # gated_power_frac.  Per bin, pick the gear minimizing total power.
+        # ``headroom`` shares the same rows — its reserve is a *runtime*
+        # policy (``_headroom_bump``), flagged by the headroom field.
         gears, f_node, gear_ok = _hybrid_gears(cfg)
         g_n = gears.shape[0]
         grids = _grids_for(cfg.technique, cfg.v_step)
@@ -344,7 +397,9 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
             v_bram=pts.v_bram.reshape(g_n, m)[gi, cols],
             f_rel=f_sel, n_active=gears[gi],
             node_power=node_w[gi, cols] + pll_watts,
-            gated_power=jnp.full(m, cfg.gated_power_frac * nom_w))
+            gated_power=jnp.full(m, cfg.gated_power_frac * nom_w),
+            headroom=jnp.asarray(cfg.headroom_frac
+                                 if cfg.technique == "headroom" else 0.0))
 
     # DVFS techniques: joint / single-rail / frequency-only.
     levels = volt_mod.bin_frequency_levels(m, cfg.margin, cfg.f_floor)
@@ -358,7 +413,8 @@ def build_bin_tables(platform: PlatformSpec, cfg: ControllerConfig) -> BinTables
                      v_bram=pts.v_bram, f_rel=levels,
                      n_active=jnp.full(m, float(cfg.n_nodes)),
                      node_power=node_w + pll_watts,
-                     gated_power=jnp.zeros(m))
+                     gated_power=jnp.zeros(m),
+                     headroom=jnp.asarray(0.0))
 
 
 # ---------------------------------------------------------------------------
@@ -466,7 +522,43 @@ def availability_point(tables: BinTables, selected,
     return n_act, cap, pwr
 
 
-_Carry = Tuple[pred_mod.PredictorState, Array, Array]
+_Carry = Tuple[pred_mod.PredictorState, pred_mod.PredictorState, Array,
+               Array]
+
+
+def _headroom_bump(tables: BinTables, cfg: ControllerConfig,
+                   astate: pred_mod.PredictorState, selected: Array,
+                   backlog_agg: Array) -> Array:
+    """Failure-anticipating bin bump (the ``headroom`` runtime policy).
+
+    Forecast next-step availability from the second predictor plane
+    (``â`` usable nodes), then find the *lowest* bin whose
+    availability-degraded delivery still covers the selected bin's
+    demand plus carried backlog — pre-spinning to a higher gear before
+    (and while) nodes are gone, and draining the backlog that otherwise
+    keeps violating QoS long after repair.  The provisioning depth is
+    bounded by the reserve: delivery is planned for at most
+    ``ceil(headroom_frac·n_nodes)`` lost nodes, so shallow outages are
+    covered exactly while deeper ones (where violations are unavoidable
+    at any operating point) don't burn full fleet power.  Everything is
+    traced; cells with ``tables.headroom == 0`` get their ``selected``
+    back unchanged, so the one chunk program serves every technique.
+    """
+    m = cfg.n_bins
+    a_hat = jnp.clip(pred_mod.forecast_fraction(cfg.avail_predictor, astate)
+                     * cfg.n_nodes, 1.0, float(cfg.n_nodes))
+    spare = jnp.ceil(tables.headroom * cfg.n_nodes - 1e-9)
+    a_res = jnp.clip(a_hat, cfg.n_nodes - spare, float(cfg.n_nodes))
+    needed = jnp.minimum((selected + 1.0) / m + backlog_agg,
+                         jnp.max(tables.capacity))
+    delivered = tables.capacity * (jnp.minimum(tables.n_active, a_res)
+                                   / jnp.maximum(tables.n_active, 1.0))
+    cand = jnp.where(delivered >= needed - 1e-9, jnp.arange(m), m)
+    bump = jnp.minimum(jnp.min(cand), m - 1).astype(selected.dtype)
+    # The bump only ever raises the bin — capacity plateaus (clipped top
+    # levels) must not let it *lower* provisioning below the selection.
+    return jnp.where(tables.headroom > 0,
+                     jnp.maximum(selected, bump), selected)
 
 
 def _control_step(tables: BinTables, cfg: ControllerConfig,
@@ -479,11 +571,17 @@ def _control_step(tables: BinTables, cfg: ControllerConfig,
     Shared by the materializing scan and the streaming chunk scan.
     ``w_t`` is the step's per-tenant offered work ``[T]`` (aggregate
     callers pass a single default tenant); ``carry`` threads the
-    predictor state plus the per-tenant backlog and node-placement
-    ``[T]`` arrays.  ``avail_t`` is the step's usable node count
-    (``cfg.n_nodes`` for a healthy fleet); :func:`availability_point`
-    clamps the selected bin's operating point to it, so dead nodes are
-    unpowered and unprovisioned.
+    workload and availability predictor states plus the per-tenant
+    backlog and node-placement ``[T]`` arrays.  ``avail_t`` is the
+    step's usable node count (``cfg.n_nodes`` for a healthy fleet);
+    :func:`availability_point` clamps the selected bin's operating point
+    to it, so dead nodes are unpowered and unprovisioned.
+
+    The availability plane mirrors the workload one: a second
+    ``PredictorState`` (``cfg.avail_predictor``) trains online on
+    ``avail_t / n_nodes`` in *every* cell, and :func:`_headroom_bump`
+    raises the provisioned bin for cells whose tables reserved headroom
+    — a traced decision, so the plane costs no extra programs.
 
     The scheduler (``sched`` = :func:`~repro.core.scheduler
     .scheduler_values`) acts twice, both as traced values: it shapes
@@ -496,16 +594,17 @@ def _control_step(tables: BinTables, cfg: ControllerConfig,
     *demand* — offered work plus carried backlog — exceeds delivered
     capacity, exactly the served-within-τ semantics the paper uses.
     """
-    mstate, backlog_t, place = carry
+    mstate, astate, backlog_t, place = carry
     w_agg = jnp.sum(w_t * spec.active, -1)
+    backlog_agg = jnp.sum(backlog_t * spec.active, -1)
     predicted = pred_mod.predict(cfg.predictor, mstate)
     actual = pred_mod.workload_to_bin(w_agg, cfg.n_bins)
     base = jnp.where(cfg.use_oracle, actual, predicted)
     shaped = sched_mod.provision_bin(spec, base, backlog_t, cfg.n_bins)
     shaped = sched_mod.opportunistic_bin(
-        tables.power, tables.capacity, shaped,
-        jnp.sum(backlog_t * spec.active, -1))
+        tables.power, tables.capacity, shaped, backlog_agg)
     selected = jnp.where(sched[0] > 0, shaped, base)
+    selected = _headroom_bump(tables, cfg, astate, selected, backlog_agg)
 
     n_act, cap, pwr = availability_point(tables, selected, avail_t)
 
@@ -522,6 +621,12 @@ def _control_step(tables: BinTables, cfg: ControllerConfig,
     violation = jnp.where(sched[0] > 0, due, total) > cap + 1e-9
 
     mstate = pred_mod.observe(cfg.predictor, mstate, w_agg, predicted)
+    # Availability bins are node counts: observe a count of ``a`` as bin
+    # ``a − 1`` (the half-step keeps floor() off the bin edge), so the
+    # forecast's upper edge maps back to exactly ``a`` usable nodes.
+    astate = pred_mod.observe(
+        cfg.avail_predictor, astate, (avail_t - 0.5) / cfg.n_nodes,
+        pred_mod.predict(cfg.avail_predictor, astate))
     out = _StepOut(power=pwr, capacity=cap, violation=violation,
                    backlog=jnp.sum(alloc.backlog, -1),
                    predicted_bin=predicted,
@@ -533,7 +638,7 @@ def _control_step(tables: BinTables, cfg: ControllerConfig,
                    tenant_backlog=alloc.backlog,
                    tenant_violation=alloc.violation,
                    tenant_starved=alloc.starved)
-    return (mstate, alloc.backlog, alloc.place), out
+    return (mstate, astate, alloc.backlog, alloc.place), out
 
 
 def _default_cell_tenant() -> Tuple[sched_mod.TenantSpec, Array]:
@@ -552,8 +657,10 @@ def _scan_control_loop(tables: BinTables, cfg: ControllerConfig,
     Aggregate-only: the trace rides as a single default tenant with the
     scheduler disabled (tenant planes go through the streaming path)."""
     spec, sched = _default_cell_tenant()
-    init = (pred_mod.init_state(cfg.predictor), jnp.zeros(1), jnp.zeros(1))
-    (mstate, _, _), outs = jax.lax.scan(
+    init = (pred_mod.init_state(cfg.predictor),
+            pred_mod.init_state(cfg.avail_predictor),
+            jnp.zeros(1), jnp.zeros(1))
+    (mstate, _, _, _), outs = jax.lax.scan(
         lambda c, wa: _control_step(tables, cfg, c, wa[0][None], wa[1],
                                     spec, sched),
         init, (trace, avail))
@@ -660,6 +767,20 @@ DEFAULT_TECHNIQUES = ("proposed", "core_only", "bram_only", "freq_only",
 _TRACE_COUNTS = {"tables": 0, "simulate": 0, "stream": 0}
 
 
+def _runtime_cfg(cfg: ControllerConfig) -> ControllerConfig:
+    """Normalize the static jit key for the shared runtime programs.
+
+    The technique only changed the *tables*, the scheduler rides as
+    values, and headroom's build-time fraction lives in the traced
+    ``BinTables.headroom`` — none may fragment the jit cache.  The
+    predictor configs stay: families compile per-kind by design.  Used
+    by :func:`simulate_fleet`, :func:`simulate_fleet_stream`, and the
+    AOT warmers (``core.aot``), which must agree byte-for-byte.
+    """
+    return dataclasses.replace(cfg, technique="proposed", scheduler="none",
+                               headroom_frac=0.0)
+
+
 def fleet_trace_counts() -> Dict[str, int]:
     """Process-lifetime (re)trace counters for the three fleet programs.
 
@@ -710,22 +831,24 @@ def _sweep_rows(cfg: ControllerConfig, techniques: Sequence[str]
                 ) -> Tuple[volt_mod.VoltageGrids, Array, Array, Array]:
     """Masked sweep rows for :func:`_fleet_dvfs_tables_jit`.
 
-    One row per DVFS technique; the hybrid node-count axis is expressed
-    as extra rows (full grid mask, per-gear frequencies), so everything
-    stays inside the one shape-keyed jitted program.  Returns
+    One row per DVFS technique; the hybrid/headroom node-count axis is
+    expressed as extra rows (full grid mask, per-gear frequencies), so
+    everything stays inside the one shape-keyed jitted program — both
+    gear techniques *share* the same G rows and differ only in which
+    gear the (host-side) selection step may pick.  Returns
     ``(grids, levels [M], row_masks [R, C, B], row_levels [R, M])`` —
     shared by :func:`fleet_bin_tables` and the AOT warmer
     (``core.aot.warm_fleet_programs``), so ahead-of-time compiles see
     byte-identical shapes to the live path.
     """
     dvfs = [t for t in techniques
-            if t not in ("nominal", "power_gating", "hybrid")]
+            if t not in ("nominal", "power_gating", "hybrid", "headroom")]
     grids = volt_mod.VoltageGrids.default(cfg.v_step)
     levels = volt_mod.bin_frequency_levels(cfg.n_bins, cfg.margin,
                                            cfg.f_floor)
     row_masks = [volt_mod.technique_grid_mask(t, grids) for t in dvfs]
     row_levels = [levels] * len(dvfs)
-    if "hybrid" in techniques:
+    if "hybrid" in techniques or "headroom" in techniques:
         gears, f_node, _ = _hybrid_gears(cfg)
         full_mask = volt_mod.technique_grid_mask("hybrid", grids)
         row_masks += [full_mask] * gears.shape[0]
@@ -749,11 +872,11 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
 
     per_tech: Dict[str, BinTables] = {}
     dvfs = [t for t in techniques
-            if t not in ("nominal", "power_gating", "hybrid")]
-    hybrid = "hybrid" in techniques
-    if dvfs or hybrid:
+            if t not in ("nominal", "power_gating", "hybrid", "headroom")]
+    geared = [t for t in ("hybrid", "headroom") if t in techniques]
+    if dvfs or geared:
         grids, levels, row_masks, row_levels = _sweep_rows(cfg, techniques)
-        if hybrid:
+        if geared:
             gears, f_node, gear_ok = _hybrid_gears(cfg)
         pts = _fleet_dvfs_tables_jit(params, row_masks, row_levels,
                                      grids.core, grids.bram)
@@ -766,9 +889,14 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
                 power=(node_w[:, i] + pll_watts) * cfg.n_nodes,
                 v_core=pts.v_core[:, i], v_bram=pts.v_bram[:, i],
                 f_rel=jnp.broadcast_to(levels, (n_p, m)), n_active=n_full,
-                node_power=node_w[:, i] + pll_watts, gated_power=zeros)
-        if hybrid:
-            h_w = node_w[:, len(dvfs):]                       # [P, G, M]
+                node_power=node_w[:, i] + pll_watts, gated_power=zeros,
+                headroom=jnp.zeros(n_p))
+        # hybrid and headroom share the same G gear rows of the one
+        # sweep; headroom's reserve is a *runtime* policy, flagged to
+        # ``_headroom_bump`` by the headroom field — no extra compiled
+        # work, identical operating tables.
+        h_w = node_w[:, len(dvfs):]                           # [P, G, M]
+        for t in geared:
             nom_w = _fleet_nominal_watts_jit(params)          # [P]
             total = (gears[None, :, None] * (h_w + pll_watts)
                      + (cfg.n_nodes - gears[None, :, None])
@@ -781,7 +909,7 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
 
             f_sel = pick(jnp.broadcast_to(f_node[None], h_w.shape))
             n_sel = gears[gi]
-            per_tech["hybrid"] = BinTables(
+            per_tech[t] = BinTables(
                 capacity=(n_sel / cfg.n_nodes) * f_sel * (1.0 - stall),
                 power=pick(total),
                 v_core=pick(pts.v_core[:, len(dvfs):]),
@@ -789,7 +917,9 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
                 f_rel=f_sel, n_active=n_sel,
                 node_power=pick(h_w) + pll_watts,
                 gated_power=jnp.broadcast_to(
-                    (cfg.gated_power_frac * nom_w)[:, None], (n_p, m)))
+                    (cfg.gated_power_frac * nom_w)[:, None], (n_p, m)),
+                headroom=jnp.full(n_p, cfg.headroom_frac
+                                  if t == "headroom" else 0.0))
 
     if "nominal" in techniques or "power_gating" in techniques:
         node_w = _fleet_nominal_watts_jit(params)  # [P]
@@ -805,7 +935,8 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
                 n_active=jnp.full((n_p, m), float(cfg.n_nodes)),
                 node_power=jnp.broadcast_to((node_w + pll_watts)[:, None],
                                             (n_p, m)),
-                gated_power=jnp.zeros((n_p, m)))
+                gated_power=jnp.zeros((n_p, m)),
+                headroom=jnp.zeros(n_p))
         if "power_gating" in techniques:
             edges = (np.arange(m) + 1.0) / m
             n_active = jnp.asarray(np.minimum(np.ceil(edges * cfg.n_nodes),
@@ -820,7 +951,8 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
                 node_power=jnp.broadcast_to((node_w + pll_watts)[:, None],
                                             (n_p, m)),
                 gated_power=jnp.broadcast_to(
-                    (cfg.gated_power_frac * node_w)[:, None], (n_p, m)))
+                    (cfg.gated_power_frac * node_w)[:, None], (n_p, m)),
+                headroom=jnp.zeros(n_p))
 
     return BinTables(*[jnp.stack([getattr(per_tech[t], f) for t in techniques],
                                  axis=1)
@@ -915,7 +1047,7 @@ def simulate_fleet(tables: BinTables, traces: np.ndarray | Array,
     avail = jnp.asarray(np.ascontiguousarray(avail)).reshape((k, s))
     # Normalize the static jit key: the technique only changed the
     # tables, and this aggregate path never acts on the scheduler.
-    cfg = dataclasses.replace(cfg, technique="proposed", scheduler="none")
+    cfg = _runtime_cfg(cfg)
     out = _simulate_fleet_jit(flat, traces, avail, cfg)
     return jax.tree_util.tree_map(
         lambda x: jnp.reshape(x, lead + x.shape[1:]), out)
@@ -946,6 +1078,7 @@ class _StreamAcc(NamedTuple):
     them with ``T = 1``)."""
 
     mstate: pred_mod.PredictorState
+    astate: pred_mod.PredictorState   # availability-plane forecaster
     backlog: Array       # [T] carried per-tenant backlog
     place: Array         # [T] per-tenant node placement (bin-packing state)
     power_sum: Array     # Σ watts over valid steps
@@ -998,6 +1131,7 @@ class FleetSummary(NamedTuple):
 @functools.partial(jax.jit, static_argnames=("cfg", "emit"))
 def _fleet_stream_chunk_jit(tables: BinTables,
                             mstate: pred_mod.PredictorState,
+                            astate: pred_mod.PredictorState,
                             backlog: Array, place: Array, chunk: Array,
                             avail: Array, valid: Array,
                             spec: sched_mod.TenantSpec, sched: Array,
@@ -1022,21 +1156,22 @@ def _fleet_stream_chunk_jit(tables: BinTables,
     """
     _TRACE_COUNTS["stream"] += 1
 
-    def cell(tab, ms, bl, pl, tr, av, sp):
+    def cell(tab, ms, ast, bl, pl, tr, av, sp):
         zero = jnp.asarray(0.0, jnp.float32)
         zt = jnp.zeros_like(bl)
-        acc0 = _StreamAcc(mstate=ms, backlog=bl, place=pl, power_sum=zero,
+        acc0 = _StreamAcc(mstate=ms, astate=ast, backlog=bl, place=pl,
+                          power_sum=zero,
                           viol_sum=zero, backlog_sum=zero, offered_sum=zero,
                           avail_sum=zero, t_viol_sum=zt, t_starve_sum=zt,
                           t_served_sum=zt, t_offered_sum=zt)
 
         def step(a, inp):
             w_t, a_t, v = inp
-            (ms2, bl2, pl2), out = _control_step(
-                tab, cfg, (a.mstate, a.backlog, a.place), w_t, a_t, sp,
-                sched)
+            (ms2, ast2, bl2, pl2), out = _control_step(
+                tab, cfg, (a.mstate, a.astate, a.backlog, a.place), w_t,
+                a_t, sp, sched)
             new = _StreamAcc(
-                mstate=ms2, backlog=bl2, place=pl2,
+                mstate=ms2, astate=ast2, backlog=bl2, place=pl2,
                 power_sum=a.power_sum + out.power,
                 viol_sum=a.viol_sum + out.violation.astype(jnp.float32),
                 backlog_sum=a.backlog_sum + out.backlog,
@@ -1053,8 +1188,8 @@ def _fleet_stream_chunk_jit(tables: BinTables,
 
         return jax.lax.scan(step, acc0, (tr, av, valid))
 
-    return jax.vmap(cell, in_axes=(0, 0, 0, 0, 0, 0, 0))(
-        tables, mstate, backlog, place, chunk, avail, spec)
+    return jax.vmap(cell, in_axes=(0, 0, 0, 0, 0, 0, 0, 0))(
+        tables, mstate, astate, backlog, place, chunk, avail, spec)
 
 
 def _broadcast_tenant_traces(traces: np.ndarray, lead: Tuple[int, ...],
@@ -1225,7 +1360,7 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
     sched_vals = sched_mod.scheduler_values(scfg)
     # Normalize the static jit key: the technique only changed the
     # tables, and the scheduler rides as values.
-    cfg = dataclasses.replace(cfg, technique="proposed", scheduler="none")
+    cfg = _runtime_cfg(cfg)
 
     mesh = shd.fleet_mesh() if shard else None
     k_pad = k
@@ -1246,12 +1381,16 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
     mstate = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (k_pad,) + x.shape),
         pred_mod.init_state(cfg.predictor))
+    astate = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (k_pad,) + x.shape),
+        pred_mod.init_state(cfg.avail_predictor))
     backlog = jnp.zeros((k_pad, t), jnp.float32)
     place = jnp.zeros((k_pad, t), jnp.float32)
     if mesh is not None:
         rules = shd.fleet_rules(mesh)
         flat = shd.shard_fleet(flat, rules)
         mstate = shd.shard_fleet(mstate, rules)
+        astate = shd.shard_fleet(astate, rules)
         backlog = shd.shard_fleet(backlog, rules)
         place = shd.shard_fleet(place, rules)
         spec = shd.shard_fleet(spec, rules)
@@ -1312,10 +1451,12 @@ def simulate_fleet_stream(tables: BinTables, traces: np.ndarray | Array,
         av_chunk = (av_const if av_const is not None
                     else chunked(avail_full, s0, n_valid))
         valid = jnp.asarray(np.arange(c) < n_valid)
-        acc, ys = _fleet_stream_chunk_jit(flat, mstate, backlog, place,
-                                          chunk, av_chunk, valid, spec,
-                                          sched_vals, cfg, emit_internal)
-        mstate, backlog, place = acc.mstate, acc.backlog, acc.place
+        acc, ys = _fleet_stream_chunk_jit(flat, mstate, astate, backlog,
+                                          place, chunk, av_chunk, valid,
+                                          spec, sched_vals, cfg,
+                                          emit_internal)
+        mstate, astate = acc.mstate, acc.astate
+        backlog, place = acc.backlog, acc.place
         power_sum += np.asarray(acc.power_sum, np.float64)
         viol_sum += np.asarray(acc.viol_sum, np.float64)
         backlog_sum += np.asarray(acc.backlog_sum, np.float64)

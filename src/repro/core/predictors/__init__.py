@@ -32,6 +32,7 @@ from repro.core.predictors.base import (  # noqa: F401
     available,
     bin_upper_edge,
     evaluate_trace,
+    forecast_fraction,
     get,
     init_state,
     observe,
@@ -79,6 +80,7 @@ __all__ = [
     "bin_upper_edge",
     "config_for_trace",
     "evaluate_trace",
+    "forecast_fraction",
     "get",
     "init_state",
     "observe",

@@ -287,6 +287,19 @@ def observe(cfg: PredictorConfig, state: PredictorState, w: Array,
         margin_misses=state.margin_misses + margin_miss.astype(jnp.int32))
 
 
+def forecast_fraction(cfg: PredictorConfig,
+                      state: PredictorState) -> Array:
+    """Next step's forecast as a fraction in (0, 1]: the predicted bin's
+    upper edge.
+
+    The availability plane's forecast helper: a predictor trained on
+    ``avail / n_nodes`` yields ``â = forecast_fraction(...) · n_nodes``
+    usable nodes — warmup pins the top bin, so a cold forecaster assumes
+    a healthy fleet (the pre-PR-9 behavior).
+    """
+    return bin_upper_edge(predict(cfg, state), cfg.n_bins)
+
+
 def state_spec(cfg: PredictorConfig) -> PredictorState:
     """Abstract :class:`PredictorState` shapes for one family.
 

@@ -48,6 +48,7 @@ from repro.core import scheduler as sched_mod
 from repro.core import traces
 from repro.core import workload as wl
 from repro.runtime import elastic
+from repro.runtime import fault as fault_mod
 
 #: (n_steps, rng) → raw trace (clipped to [0, 1] by Scenario.trace)
 TraceFn = Callable[[int, np.random.Generator], np.ndarray]
@@ -72,10 +73,15 @@ class Scenario:
     #: mixtures (``traces.mix`` builders) decompose automatically and
     #: everything else rides as a single default tenant.
     tenants: Optional[TenantsFn] = None
+    #: RNG-salting name (defaults to ``name``) — derived overlay
+    #: scenarios (:func:`with_failure_model`) pass their base's name so
+    #: the workload realization is literally the base's, per seed.
+    seed_name: Optional[str] = None
 
     def _rng(self, seed: int, salt: str = "") -> np.random.Generator:
+        base = self.seed_name if self.seed_name is not None else self.name
         return np.random.default_rng(
-            [seed, zlib.crc32((self.name + salt).encode())])
+            [seed, zlib.crc32((base + salt).encode())])
 
     def trace(self, n_steps: int, seed: int = 0) -> np.ndarray:
         """Workload fractions w_t ∈ [0, 1], deterministic per seed."""
@@ -288,6 +294,40 @@ def _failure_nodes(n: int, rng: np.random.Generator) -> np.ndarray:
     return np.clip(frac, 0.1, 1.0)
 
 
+# Correlated failure models (runtime.fault.FailureModel): every model's
+# MTTF rescales to a fraction of the requested trace length (nodes_fn
+# mttf_frac), so 64-step CI smokes and million-step campaigns both see a
+# handful of failure windows.  The models carry their own reference
+# fleet size and emit alive *fractions*; Scenario.node_schedule
+# re-quantizes to the campaign's n_nodes through elastic.shrink_mesh_plan.
+
+#: Rack-blast regime: most of the failure rate lands on whole racks
+#: (a rack event kills every member node), wear-out hazard, ~12-step
+#: lognormal repairs.
+RACK_FAILURE_MODEL = fault_mod.FailureModel(
+    n_nodes=8, n_racks=4, weibull_k=1.5, rack_fraction=0.9,
+    repair_mu=2.5, repair_sigma=0.6)
+
+#: Cascade regime: exponential MTTF but a pending repair quadruples
+#: every hazard — failures cluster into correlated bursts that can
+#: stack racks on top of nodes.
+CASCADE_MODEL = fault_mod.FailureModel(
+    n_nodes=8, n_racks=4, weibull_k=1.0, rack_fraction=0.5,
+    cascade_factor=4.0, repair_mu=2.8, repair_sigma=0.5)
+
+#: Flaky-fleet regime: frequent independent single-node failures with
+#: quick repairs — churn, not blast radius.
+FLAKY_FLEET_MODEL = fault_mod.FailureModel(
+    n_nodes=8, n_racks=8, weibull_k=1.0, rack_fraction=0.0,
+    repair_mu=1.2, repair_sigma=0.5)
+
+FAILURE_MODELS: Dict[str, fault_mod.FailureModel] = {
+    "rack_failure": RACK_FAILURE_MODEL,
+    "cascade": CASCADE_MODEL,
+    "flaky_fleet": FLAKY_FLEET_MODEL,
+}
+
+
 SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
     Scenario("burse", "paper §VI-B bursty self-similar (H=0.76, IDC=500)",
              _burse),
@@ -302,7 +342,69 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
     Scenario("node_failure", "bursty load + node-failure windows "
              "(per-step usable-nodes schedule clamps controller capacity)",
              _burse, nodes=_failure_nodes),
+    Scenario("rack_failure", "bursty load + correlated rack-blast "
+             "failures (Weibull wear-out, lognormal repairs)",
+             _burse, nodes=RACK_FAILURE_MODEL.nodes_fn(mttf_frac=1 / 3)),
+    Scenario("cascade", "bursty load + cascading failures (a pending "
+             "repair multiplies every hazard — correlated bursts)",
+             _burse, nodes=CASCADE_MODEL.nodes_fn(mttf_frac=1 / 3)),
+    Scenario("flaky_fleet", "bursty load + frequent independent "
+             "single-node failures with quick repairs (churn)",
+             _burse, nodes=FLAKY_FLEET_MODEL.nodes_fn(mttf_frac=1 / 8)),
 )}
+
+
+def with_failure_model(name: str,
+                       model: str | fault_mod.FailureModel,
+                       mttf_frac: Optional[float] = 1 / 3,
+                       suffix: Optional[str] = None,
+                       overwrite: bool = True) -> Scenario:
+    """Overlay a correlated failure model onto any registered scenario.
+
+    Registers (and returns) a derived scenario ``<name>+<model>`` whose
+    workload is ``name``'s and whose node schedule comes from ``model``
+    (a :data:`FAILURE_MODELS` key or a
+    :class:`~repro.runtime.fault.FailureModel`) — the campaign CLI's
+    ``--failure-model`` path: stress any workload shape under rack
+    blasts, cascades, or churn without touching its trace.
+    """
+    base = get_scenario(name)
+    if isinstance(model, str):
+        if model not in FAILURE_MODELS:
+            raise KeyError(f"unknown failure model {model!r}; "
+                           f"available: {sorted(FAILURE_MODELS)}")
+        suffix = suffix or model
+        model = FAILURE_MODELS[model]
+    return register_scenario(Scenario(
+        f"{name}+{suffix or 'failures'}",
+        f"{base.description} + correlated failures ({suffix or 'model'})",
+        base.build, nodes=model.nodes_fn(mttf_frac=mttf_frac),
+        tenants=base.tenants,
+        seed_name=base.seed_name if base.seed_name is not None
+        else base.name), overwrite=overwrite)
+
+
+def pareto_front(cells: Dict[str, Dict[str, float]]) -> Tuple[str, ...]:
+    """Non-dominated techniques over (power_gain ↑, qos_violation ↓).
+
+    ``cells`` maps technique → campaign cell dict; a technique is kept
+    iff no other strictly beats it on one axis while matching-or-beating
+    it on the other.  Returned in descending power-gain order — the
+    power-vs-robustness trade campaigns report per (platform, scenario).
+    """
+    def dominated(t: str) -> bool:
+        g, q = cells[t]["power_gain"], cells[t]["qos_violation_rate"]
+        for o, c in cells.items():
+            if o == t:
+                continue
+            og, oq = c["power_gain"], c["qos_violation_rate"]
+            if og >= g - 1e-12 and oq <= q + 1e-12 and (og > g + 1e-12
+                                                       or oq < q - 1e-12):
+                return True
+        return False
+
+    front = [t for t in cells if not dominated(t)]
+    return tuple(sorted(front, key=lambda t: -cells[t]["power_gain"]))
 
 
 def get_scenario(name: str) -> Scenario:
@@ -602,8 +704,17 @@ def run_campaign(platforms: Sequence[ctl.PlatformSpec],
                     cell["worst_tenant_qos_violation"] = float(
                         t_viol[active].max()) if active.any() else 0.0
                 table[plat.name][tech][scen] = cell
+    # Pareto reporting: per (platform, scenario), the non-dominated
+    # techniques over (power_gain ↑, qos_violation_rate ↓) — the
+    # power-vs-robustness trade failure campaigns track in benchmarks.
+    pareto: Dict[str, Dict[str, Tuple[str, ...]]] = {}
+    for plat in platforms:
+        pareto[plat.name] = {}
+        for scen in names:
+            pareto[plat.name][scen] = pareto_front(
+                {t: table[plat.name][t][scen] for t in techniques})
     return {"scenarios": names, "techniques": tuple(techniques),
             "n_steps": n_steps, "scheduler": cfg.scheduler.name,
             "tenants": (None if spec is None
                         else int(np.asarray(spec.active).shape[-1])),
-            "table": table}
+            "table": table, "pareto": pareto}

@@ -210,9 +210,11 @@ def technique_grid_mask(technique: str, grids: VoltageGrids) -> Array:
     """Boolean [C, B] mask of grid points a technique may select."""
     c, b = grids.core.shape[0], grids.bram.shape[0]
     mask = jnp.zeros((c, b), bool)
-    if technique in ("proposed", "hybrid"):
-        # hybrid scales both rails on its active nodes; the node-count
-        # axis is handled by the controller's gear sweep, not the mask.
+    if technique in ("proposed", "hybrid", "headroom"):
+        # hybrid/headroom scale both rails on their active nodes; the
+        # node-count axis is handled by the controller's gear sweep, not
+        # the mask (headroom's reserve is a runtime bin bump, not a
+        # grid restriction).
         return jnp.ones((c, b), bool)
     if technique == "core_only":
         return mask.at[:, -1].set(True)      # V_bram pinned at nominal

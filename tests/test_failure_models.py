@@ -1,0 +1,290 @@
+"""Correlated failure models + availability-aware (headroom) DVFS tests.
+
+Property tests (hypothesis) pin the :class:`repro.runtime.fault
+.FailureModel` process to its contract — alive floor, rack blast radius,
+repair windows, determinism, node_schedule dtype/range — and the
+campaign-level tests witness that the failure scenarios and the
+``headroom`` technique ride the existing fleet programs: streamed
+summaries match the materialized engine to ≤1e-5 and same-shaped
+failure sweeps add zero compiled programs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # property tests need hypothesis (pip install -r requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs it
+    HAVE_HYPOTHESIS = False
+
+from repro.core import characterization as char
+from repro.core import controller as ctl
+from repro.core import scenarios as scn
+from repro.core.accelerators import ACCELERATORS
+from repro.runtime import fault
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def failure_models(draw):
+        """Valid FailureModel configs spanning the interesting regimes."""
+        n_nodes = draw(st.integers(min_value=1, max_value=12))
+        n_racks = draw(st.integers(min_value=1, max_value=n_nodes))
+        return fault.FailureModel(
+            n_nodes=n_nodes, n_racks=n_racks,
+            mttf_steps=draw(st.sampled_from([4.0, 16.0, 64.0])),
+            weibull_k=draw(st.sampled_from([0.7, 1.0, 1.8])),
+            repair_mu=draw(st.sampled_from([0.0, 1.5, 2.5])),
+            repair_sigma=draw(st.sampled_from([0.0, 0.6])),
+            rack_fraction=draw(st.sampled_from([0.0, 0.5, 0.9, 1.0])),
+            cascade_factor=draw(st.sampled_from([1.0, 4.0])),
+            alive_floor=draw(st.integers(min_value=1, max_value=n_nodes)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(model=failure_models(), seed=st.integers(0, 1000),
+           n_steps=st.integers(1, 128))
+    def test_node_schedule_contract(model, seed, n_steps):
+        """Every emitted schedule satisfies the availability contract:
+        integer dtype, shape [S], alive_floor ≤ avail ≤ n_nodes — even
+        when overlapping rack events would take the raw alive count
+        below the floor (short MTTF + long repairs force deep
+        overlaps)."""
+        sched = model.node_schedule(n_steps, seed)
+        assert sched.shape == (n_steps,)
+        assert np.issubdtype(sched.dtype, np.integer)
+        assert (sched >= model.alive_floor).all()
+        assert (sched >= 1).all()
+        assert (sched <= model.n_nodes).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(model=failure_models(), seed=st.integers(0, 1000))
+    def test_blast_radius_within_rack_membership(model, seed):
+        """A rack event never kills nodes outside its rack; a node event
+        kills exactly its own node."""
+        racks = model.rack_members()
+        trace = model.sample(96, seed)
+        for ev in trace.events:
+            if ev.kind == "rack":
+                assert set(ev.members) <= {int(i) for i in racks[ev.entity]}
+            else:
+                assert ev.members == (ev.entity,)
+                assert 0 <= ev.entity < model.n_nodes
+
+    @settings(max_examples=25, deadline=None)
+    @given(model=failure_models(), seed=st.integers(0, 1000))
+    def test_repair_windows_reconstruct_alive_matrix(model, seed):
+        """The alive matrix is exactly the complement of the union of
+        event down-windows: a node is dead iff some event covering it is
+        pending, and repair monotonically restores it the step its last
+        covering window ends."""
+        n_steps = 96
+        trace = model.sample(n_steps, seed)
+        dead = np.zeros((n_steps, model.n_nodes), bool)
+        for ev in trace.events:
+            end = min(ev.repair_end, n_steps)
+            dead[ev.step:end, list(ev.members)] = True
+        np.testing.assert_array_equal(trace.alive, ~dead)
+        # monotone restore: each event's members are up at repair_end
+        # unless another pending window still covers them
+        for ev in trace.events:
+            if ev.repair_end < n_steps:
+                for node in ev.members:
+                    assert trace.alive[ev.repair_end, node] == \
+                        (not dead[ev.repair_end, node])
+
+    @settings(max_examples=25, deadline=None)
+    @given(model=failure_models(), seed=st.integers(0, 1000))
+    def test_sampling_deterministic_per_seed(model, seed):
+        a = model.sample(64, seed)
+        b = model.sample(64, seed)
+        np.testing.assert_array_equal(a.alive, b.alive)
+        assert a.events == b.events
+        np.testing.assert_array_equal(model.node_schedule(64, seed),
+                                      model.node_schedule(64, seed))
+
+
+def test_different_seeds_differ():
+    model = fault.FailureModel(n_nodes=8, mttf_steps=32.0)
+    assert not np.array_equal(model.node_schedule(512, 0),
+                              model.node_schedule(512, 1))
+
+
+def test_failure_model_validation():
+    with pytest.raises(ValueError, match="n_racks"):
+        fault.FailureModel(n_nodes=4, n_racks=5)
+    with pytest.raises(ValueError, match="cascade_factor"):
+        fault.FailureModel(cascade_factor=0.5)
+    with pytest.raises(ValueError, match="alive_floor"):
+        fault.FailureModel(n_nodes=4, n_racks=2, alive_floor=5)
+    with pytest.raises(ValueError, match="rack_fraction"):
+        fault.FailureModel(rack_fraction=1.5)
+
+
+def test_cascade_factor_clusters_failures():
+    """With identical seeds, the cascade regime (hazards multiplied
+    while repairs pend) produces at least as many failure events and a
+    strictly lower mean availability than the independent process."""
+    base = fault.FailureModel(n_nodes=8, n_racks=4, mttf_steps=64.0,
+                              repair_mu=2.0)
+    casc = fault.FailureModel(n_nodes=8, n_racks=4, mttf_steps=64.0,
+                              repair_mu=2.0, cascade_factor=6.0)
+    n_ev = np.mean([len(base.sample(1024, s).events) for s in range(4)])
+    n_ev_c = np.mean([len(casc.sample(1024, s).events) for s in range(4)])
+    assert n_ev_c > n_ev
+    av = np.mean([base.alive_fraction(1024, s).mean() for s in range(4)])
+    av_c = np.mean([casc.alive_fraction(1024, s).mean() for s in range(4)])
+    assert av_c < av
+
+
+def test_named_failure_scenarios_registered_and_degraded():
+    """rack_failure / cascade / flaky_fleet are registered scenarios
+    whose node schedules satisfy the contract, actually dip, and
+    recover."""
+    for name in ("rack_failure", "cascade", "flaky_fleet"):
+        sc = scn.get_scenario(name)
+        alive = sc.node_schedule(1024, n_nodes=8, seed=0)
+        assert alive.shape == (1024,), name
+        assert np.issubdtype(alive.dtype, np.integer), name
+        assert (alive >= 1).all() and (alive <= 8).all(), name
+        assert alive.min() < 8, name       # failures happen
+        assert alive.max() == 8, name      # and the fleet recovers
+        np.testing.assert_array_equal(
+            alive, sc.node_schedule(1024, n_nodes=8, seed=0))
+
+
+def test_with_failure_model_overlay():
+    """with_failure_model keeps the base workload and swaps in the
+    model's node schedule (the campaign --failure-model path)."""
+    derived = scn.with_failure_model("diurnal", "rack_failure")
+    assert derived.name == "diurnal+rack_failure"
+    assert derived.name in scn.SCENARIOS
+    np.testing.assert_array_equal(
+        derived.trace(256, seed=3),
+        scn.get_scenario("diurnal").trace(256, seed=3))
+    alive = derived.node_schedule(512, n_nodes=8, seed=0)
+    assert (alive >= 1).all() and (alive <= 8).all()
+    assert alive.min() < 8
+    with pytest.raises(KeyError, match="unknown failure model"):
+        scn.with_failure_model("burse", "no_such_model")
+
+
+def test_pareto_front_non_dominated():
+    cells = {
+        "a": {"power_gain": 3.0, "qos_violation_rate": 0.5},   # front
+        "b": {"power_gain": 2.0, "qos_violation_rate": 0.2},   # front
+        "c": {"power_gain": 1.5, "qos_violation_rate": 0.4},   # dominated
+        "d": {"power_gain": 2.0, "qos_violation_rate": 0.3},   # dominated
+        "e": {"power_gain": 1.0, "qos_violation_rate": 0.0},   # front
+    }
+    assert scn.pareto_front(cells) == ("a", "b", "e")
+    # ties survive: identical cells dominate nobody
+    assert scn.pareto_front({
+        "x": {"power_gain": 2.0, "qos_violation_rate": 0.1},
+        "y": {"power_gain": 2.0, "qos_violation_rate": 0.1},
+    }) == ("x", "y")
+
+
+def test_headroom_tables_share_hybrid_rows_and_flag_reserve():
+    """headroom shares hybrid's gear rows exactly -- its reserve is a
+    runtime policy (the availability-forecast bump), not a table change;
+    only the per-cell headroom field, the traced policy flag, differs."""
+    cfg = ctl.ControllerConfig(headroom_frac=0.5)
+    params = char.stack_platform_params(
+        [ctl.fpga_platform(ACCELERATORS["tabla"]).params])
+    tables = ctl.fleet_bin_tables(params, cfg,
+                                  ("proposed", "hybrid", "headroom"))
+    np.testing.assert_allclose(np.asarray(tables.headroom),
+                               [[0.0, 0.0, 0.5]])
+    assert ctl._headroom_spare(cfg) == 4
+    for field in ("capacity", "power", "n_active", "v_core", "v_bram",
+                  "f_rel", "node_power", "gated_power"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(tables, field))[0, 1],
+            np.asarray(getattr(tables, field))[0, 2], err_msg=field)
+    assert np.asarray(tables.n_active)[0, 1].max() == cfg.n_nodes
+
+
+def test_headroom_frac_validation():
+    with pytest.raises(ValueError):
+        ctl.ControllerConfig(headroom_frac=1.0)
+    with pytest.raises(ValueError):
+        ctl.ControllerConfig(headroom_frac=-0.1)
+    with pytest.raises(ValueError):
+        ctl.ControllerConfig(n_nodes=2, headroom_frac=0.9)
+
+
+def test_headroom_cuts_qos_violations_under_failures():
+    """Acceptance direction at test scale: on a failure scenario the
+    headroom technique trades some power gain for a materially lower
+    QoS-violation rate than the pure proposed controller."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    out = scn.run_campaign(platforms, scenario_names=("node_failure",),
+                           techniques=("proposed", "headroom"),
+                           n_steps=768, chunk_size=256)
+    cell = out["table"][platforms[0].name]
+    prop = cell["proposed"]["node_failure"]
+    hr = cell["headroom"]["node_failure"]
+    assert hr["qos_violation_rate"] < prop["qos_violation_rate"]
+    assert hr["power_gain"] > 1.0
+    # campaign reports the (gain, qos) front per platform × scenario
+    front = out["pareto"][platforms[0].name]["node_failure"]
+    assert set(front) <= {"proposed", "headroom"}
+    assert "headroom" in front
+
+
+def test_failure_campaign_streaming_matches_materialized():
+    """Streamed campaign summaries for the correlated-failure scenarios
+    (headroom included) equal the materialized simulate_fleet reductions
+    to ≤1e-5 — the new scenarios and technique ride the same programs."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    techniques = ("proposed", "headroom")
+    names, traces, avail = scn.build_suite(
+        ("burse", "rack_failure", "cascade"), n_steps=192)
+    cfg = ctl.ControllerConfig()
+    params = char.stack_platform_params([p.params for p in platforms])
+    tables = ctl.fleet_bin_tables(params, cfg, techniques)
+    tab_n = ctl.BinTables(*[jnp.broadcast_to(
+        x[:, :, None], x.shape[:2] + (len(names),) + x.shape[2:])
+        for x in tables])
+    res = ctl.simulate_fleet(tab_n, traces[None, None], cfg,
+                             avail=avail[None, None])  # [P,T,N,S]
+
+    out = scn.run_campaign(platforms, scenario_names=names,
+                           techniques=techniques, n_steps=192,
+                           chunk_size=50)
+    for j, tech in enumerate(techniques):
+        for k, scen in enumerate(names):
+            cell = out["table"][platforms[0].name][tech][scen]
+            power = np.asarray(res.power)[0, j, k]
+            np.testing.assert_allclose(cell["mean_power_w"], power.mean(),
+                                       rtol=1e-5, err_msg=(tech, scen))
+            np.testing.assert_allclose(
+                cell["qos_violation_rate"],
+                np.asarray(res.violations)[0, j, k].mean(), atol=1e-7,
+                err_msg=(tech, scen))
+            np.testing.assert_allclose(cell["mean_avail_nodes"],
+                                       avail[k].mean(), rtol=1e-6)
+    # the correlated scenarios really were degraded
+    for scen in ("rack_failure", "cascade"):
+        cell = out["table"][platforms[0].name]["proposed"][scen]
+        assert cell["mean_avail_nodes"] < cfg.n_nodes
+
+
+def test_failure_sweep_zero_retrace():
+    """Zero-retrace witness: after a healthy same-shaped sweep, sweeping
+    the correlated-failure scenarios (and a --failure-model overlay)
+    with the headroom technique adds no compiled fleet programs."""
+    platforms = [ctl.fpga_platform(ACCELERATORS["tabla"])]
+    kw = dict(techniques=("proposed", "headroom"), n_steps=160,
+              chunk_size=64)
+    scn.run_campaign(platforms,
+                     scenario_names=("burse", "diurnal", "ramp"), **kw)
+    before = ctl.fleet_trace_counts()
+    scn.run_campaign(platforms, scenario_names=(
+        "rack_failure", "cascade", "flaky_fleet"), seed=3, **kw)
+    overlay = scn.with_failure_model("ramp", "cascade")
+    scn.run_campaign(platforms, scenario_names=(
+        "burse", "node_failure", overlay.name), seed=4, **kw)
+    assert ctl.fleet_trace_counts() == before

@@ -64,6 +64,21 @@ def test_partial_checkpoint_never_loads(tmp_path):
     assert ckpt.list_steps() == [5]
 
 
+def test_fault_injector_fires_same_node_at_each_scheduled_step():
+    """Regression: ``_fired`` is keyed by (step, node) — the same node
+    scheduled at two different steps fires at both, and a restart that
+    replays an already-fired step does not re-raise."""
+    inj = FaultInjector(fail_at={3: 1, 9: 1})
+    with pytest.raises(NodeFailure):
+        inj.check(3)
+    inj.check(3)              # replayed step: already fired, no re-raise
+    with pytest.raises(NodeFailure) as e:
+        inj.check(9)          # same node, later step: fires again
+    assert e.value.node == 1 and e.value.step == 9
+    inj.check(9)
+    assert inj._fired == {(3, 1), (9, 1)}
+
+
 def test_run_with_restarts_recovers(tmp_path):
     ckpt = CheckpointManager(str(tmp_path))
 
