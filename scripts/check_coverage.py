@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 
 GATED_PREFIXES = ("repro/core/", "repro/runtime/")
 
@@ -43,8 +42,16 @@ def main(argv=None) -> int:
                     "under repro/core/ and repro/runtime/")
     args = ap.parse_args(argv)
 
-    with open(args.report) as f:
-        data = json.load(f)
+    try:
+        with open(args.report) as f:
+            data = json.load(f)
+    except OSError as e:
+        print(f"error: cannot read {args.report}: {e}")
+        return 1
+    except json.JSONDecodeError as e:
+        print(f"error: {args.report} is not valid JSON ({e}) — "
+              f"was pytest run with --cov-report=json:{args.report}?")
+        return 1
     files = data.get("files", {})
     if not files:
         print(f"error: no per-file entries in {args.report}")
@@ -53,7 +60,12 @@ def main(argv=None) -> int:
     totals = {"gated": [0, 0], "report-only": [0, 0]}
     worst = []
     for path, entry in sorted(files.items()):
-        s = entry["summary"]
+        s = entry.get("summary", {})
+        if "covered_lines" not in s or "num_statements" not in s:
+            print(f"error: {args.report} entry for {path} is missing "
+                  f"summary.covered_lines/num_statements — coverage.py "
+                  f"schema changed?")
+            return 1
         covered, stmts = s["covered_lines"], s["num_statements"]
         group = _group(path)
         totals[group][0] += covered

@@ -101,8 +101,10 @@ def run_blocks(md_path: str, blocks, timeout: float) -> list:
     dt = time.perf_counter() - t0
     if proc.returncode != 0:
         tail = (proc.stderr or proc.stdout).strip().splitlines()[-12:]
+        detail = ("\n".join("    " + l for l in tail)
+                  or "    (no output — interpreter died before printing)")
         return [f"code blocks failed (rc={proc.returncode}, {dt:.1f}s):\n"
-                + "\n".join("    " + l for l in tail)]
+                + detail]
     print(f"  {len(blocks)} python block(s) ran clean in {dt:.1f}s")
     return []
 

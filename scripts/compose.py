@@ -22,11 +22,11 @@ import argparse
 import json
 import time
 
+from campaign import build_platforms  # sibling script, not a package
+
 from repro.core import composition as comp
 from repro.core import controller as ctl
 from repro.core import scenarios as scn
-
-from campaign import build_platforms  # noqa: E402 — sibling script
 
 
 def main(argv=None) -> int:

@@ -10,8 +10,6 @@ Then transplant the printed constants into characterization.py.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
 import json
 import sys
 
@@ -22,7 +20,6 @@ sys.path.insert(0, "src")
 from repro.core import accelerators as acc_mod
 from repro.core import characterization as char
 from repro.core import controller as ctl
-from repro.core import predictors as pred_mod
 from repro.core import workload as wl
 
 V_CORE_NOM, V_BRAM_NOM, V_CRASH, V_STEP = 0.80, 0.95, 0.50, 0.025

@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""jaxlint CLI: enforce the repo's JAX contracts statically.
+
+  PYTHONPATH=src python scripts/lint.py src/repro --fail-on error
+  PYTHONPATH=src python scripts/lint.py src/repro --format json
+  PYTHONPATH=src python scripts/lint.py --list-rules
+
+Exit status is 0 when no diagnostic at or above ``--fail-on`` severity
+survives suppression, 1 otherwise, 2 on usage errors.  Suppress a
+reviewed false positive inline with ``# jaxlint: disable=JL00x`` plus a
+justification comment (see docs/ARCHITECTURE.md §10).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.analysis import jaxlint  # noqa: E402  (path bootstrap above)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to lint "
+                    "(default: src/repro)")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="output format")
+    ap.add_argument("--fail-on", choices=jaxlint.SEVERITIES,
+                    default="error",
+                    help="exit non-zero when a diagnostic at or above "
+                    "this severity survives (default: error)")
+    ap.add_argument("--select", metavar="RULES",
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--disable", metavar="RULES",
+                    help="comma-separated rule ids to skip")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in jaxlint.all_rules():
+            print(f"{rule.id}  {rule.name:<22} [{rule.severity:<7}] "
+                  f"{rule.summary}")
+        return 0
+
+    split = (lambda s: [r.strip() for r in s.split(",") if r.strip()])
+    try:
+        report = jaxlint.lint_paths(
+            args.paths or ["src/repro"],
+            select=split(args.select) if args.select else None,
+            disable=split(args.disable) if args.disable else None)
+    except (FileNotFoundError, KeyError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    print(report.render(args.format))
+    return 1 if report.failed(args.fail_on) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,7 +4,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import common, transformer

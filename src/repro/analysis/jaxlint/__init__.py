@@ -1,0 +1,68 @@
+"""jaxlint — repo-aware static analysis for the JAX contracts.
+
+The repo's performance story rests on invariants nothing used to
+machine-check: the **zero-retrace contract** (fleet programs keyed only
+on shapes + static config), **pytree-registered containers**, stride-0
+**O(K) trace views** in the streaming path, and **pure, compile-safe**
+code inside the compiled bodies.  ``jaxlint`` walks the AST (no
+imports, no jax needed), infers which functions execute under a JAX
+trace, taints traced values, and reports ``file:line`` diagnostics with
+rule ids and fix hints — see ``rules.py`` for the eight shipped rules
+and docs/ARCHITECTURE.md §10 for the contract story.
+
+Static analysis is paired with a *dynamic* sentinel: the pytest plugin
+(``pytest_plugin.py``, loaded by ``tests/conftest.py``) fails any test
+marked ``@pytest.mark.zero_retrace`` that traces a new XLA program
+after its warmup — per-test enforcement of what the two hand-rolled
+witness tests used to check globally.
+
+Usage::
+
+    python scripts/lint.py src/repro --fail-on error
+    python scripts/lint.py src/repro --format json
+    # inline, e.g. for doc examples:
+    from repro.analysis import jaxlint
+    report = jaxlint.lint_source(snippet, filename="demo.py")
+"""
+
+from repro.analysis.jaxlint.diagnostics import (
+    SEVERITIES,
+    Diagnostic,
+    parse_suppressions,
+)
+from repro.analysis.jaxlint.engine import (
+    LintReport,
+    iter_python_files,
+    lint_file,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.jaxlint.registry import (
+    ZERO_RETRACE_REGISTRY,
+    docstring_satisfies_contract,
+)
+from repro.analysis.jaxlint.rules import (
+    Rule,
+    all_rules,
+    available,
+    get,
+    register,
+)
+
+__all__ = [
+    "SEVERITIES",
+    "Diagnostic",
+    "LintReport",
+    "Rule",
+    "ZERO_RETRACE_REGISTRY",
+    "all_rules",
+    "available",
+    "docstring_satisfies_contract",
+    "get",
+    "iter_python_files",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "parse_suppressions",
+    "register",
+]

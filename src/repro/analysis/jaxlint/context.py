@@ -1,0 +1,585 @@
+"""Per-module analysis context: compiled regions + traced-value taint.
+
+``jaxlint`` rules need two module-level facts that plain AST walking
+does not give them:
+
+1. **Which functions execute under a JAX trace** ("compiled").  A
+   function is compiled when it is (a) decorated with a tracing
+   transform (``@jax.jit``, ``@partial(jax.jit, ...)``, ``@jax.vmap``,
+   ...), (b) passed *into* a transform or a ``lax`` control-flow
+   combinator (``lax.scan(body, ...)``, ``jax.vmap(f)``, ...), or
+   (c) called from a compiled function with traced arguments (the
+   module-local call-graph closure).
+
+2. **Which expressions hold traced values** ("tainted").  Seeds are
+   the compiled function's parameters (minus ``static_argnums`` /
+   ``static_argnames``) plus anything returned by an array namespace
+   (``jnp.*`` / ``lax.*`` / ``jax.random.*``); taint propagates through
+   assignments, arithmetic, indexing, and method calls, and *dies* at
+   trace-time-static accessors (``x.shape``, ``x.ndim``, ``x.dtype``,
+   ``len(x)``, ``x is None``) — exactly the expressions JAX evaluates
+   at trace time, so branching on them is legal.
+
+Both analyses are deliberately conservative *heuristics*: they run on
+one module at a time (no cross-file imports), skip ``lambda`` bodies,
+and approximate data flow (any tainted operand taints the result;
+call-site taint unions across call sites).  False positives are
+expected to be rare and are silenced inline with a justified
+``# jaxlint: disable=RULE`` (see ``diagnostics.py``); false negatives
+are caught by the dynamic sentinel (``sentinel.py``).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+#: Decorators that put the decorated function under a JAX trace.
+TRANSFORM_DECORATORS = {
+    "jax.jit", "jax.vmap", "jax.pmap", "jax.checkpoint", "jax.remat",
+}
+
+#: Callables whose *function arguments* execute under a JAX trace.
+TRANSFORM_CALLS = TRANSFORM_DECORATORS | {
+    "jax.grad", "jax.value_and_grad", "jax.eval_shape", "jax.linearize",
+    "jax.lax.scan", "jax.lax.fori_loop", "jax.lax.while_loop",
+    "jax.lax.cond", "jax.lax.switch", "jax.lax.map",
+    "jax.lax.associative_scan", "jax.lax.custom_root",
+}
+
+#: Namespaces whose calls return traced arrays inside a compiled body.
+ARRAY_NAMESPACES = (
+    "jax.numpy", "jax.lax", "jax.nn", "jax.scipy", "jax.random",
+    "jax.tree", "jax.tree_util",
+)
+
+#: Attribute accesses that are static at trace time (safe to branch on).
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval",
+                "weak_type", "itemsize", "nbytes"}
+
+#: Annotation heads marking a parameter as a Python container (pytree
+#: node) rather than an array: its *structure* is static under a trace.
+CONTAINER_ANNOTATIONS = {
+    "dict", "Dict", "Mapping", "MutableMapping", "defaultdict",
+    "OrderedDict", "list", "List", "Sequence", "MutableSequence",
+    "tuple", "Tuple", "NamedTuple", "set", "Set", "FrozenSet",
+    "frozenset", "Iterable", "Iterator", "Collection",
+}
+
+#: Methods that iterate a dict's static structure, never array values.
+DICT_VIEW_METHODS = {"items", "keys", "values"}
+
+#: Host-only namespaces (rule JL002/JL005 consume these).
+HOST_NUMERIC_NAMESPACES = ("numpy", "math")
+IMPURE_NAMESPACES = ("time", "random", "numpy.random", "datetime",
+                     "secrets", "os.urandom")
+
+
+def iter_scoped(node: ast.AST) -> Iterator[ast.AST]:
+    """Walk ``node`` without descending into nested function/class
+    scopes (their bodies are analyzed as their own functions)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        yield child
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(child))
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One function scope and what the analyses concluded about it."""
+
+    node: ast.AST                    # FunctionDef | AsyncFunctionDef
+    qualname: str
+    name: str
+    parent: Optional[str]            # enclosing function qualname
+    class_name: Optional[str]        # owning class, for method lookup
+    compiled: bool = False
+    compile_reason: str = ""         # human-readable provenance
+    scan_body: bool = False          # passed to lax.scan/fori/while
+    static_params: Set[str] = dataclasses.field(default_factory=set)
+    seeds: Set[str] = dataclasses.field(default_factory=set)
+    tainted: Set[str] = dataclasses.field(default_factory=set)
+    #: tainted names that are Python *containers of* tracers (dicts,
+    #: lists, tuples): their elements are traced but their structure —
+    #: truthiness, length, key iteration — is static at trace time.
+    containers: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    node: ast.ClassDef
+    name: str
+    is_dataclass: bool
+    array_fields: List[Tuple[str, int]]  # (field name, line)
+
+
+class ModuleContext:
+    """Everything the rules need about one parsed module."""
+
+    def __init__(self, source: str, filename: str):
+        self.source = source
+        self.filename = filename
+        self.tree = ast.parse(source, filename=filename)
+        self.aliases: Dict[str, str] = {}
+        self.functions: Dict[str, FunctionInfo] = {}
+        self._by_name: Dict[str, List[FunctionInfo]] = {}
+        self.classes: List[ClassInfo] = []
+        self.pytree_registered: Set[str] = set()
+        self._collect_imports()
+        self._collect_defs()
+        self._mark_compiled_roots()
+        self._propagate()
+
+    # -- imports ------------------------------------------------------
+
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    self.aliases[alias.asname or alias.name.split(".")[0]] \
+                        = alias.name if alias.asname else \
+                        alias.name.split(".")[0]
+                    if alias.asname:
+                        self.aliases[alias.asname] = alias.name
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for alias in node.names:
+                    self.aliases[alias.asname or alias.name] = \
+                        f"{node.module}.{alias.name}"
+
+    def resolve(self, expr: ast.AST) -> Optional[str]:
+        """Dotted import path of ``expr`` (``jnp.where`` →
+        ``jax.numpy.where``), or ``None`` for non-name expressions."""
+        if isinstance(expr, ast.Name):
+            return self.aliases.get(expr.id, expr.id)
+        if isinstance(expr, ast.Attribute):
+            base = self.resolve(expr.value)
+            return f"{base}.{expr.attr}" if base else None
+        return None
+
+    @staticmethod
+    def in_namespace(path: Optional[str],
+                     namespaces: Sequence[str]) -> bool:
+        if not path:
+            return False
+        return any(path == ns or path.startswith(ns + ".")
+                   for ns in namespaces)
+
+    # -- function table -----------------------------------------------
+
+    def _collect_defs(self) -> None:
+        ctx = self
+
+        class Collector(ast.NodeVisitor):
+            def __init__(self):
+                self.stack: List[str] = []
+                self.class_stack: List[str] = []
+
+            def _visit_fn(self, node):
+                qual = ".".join(self.stack + [node.name])
+                info = FunctionInfo(
+                    node=node, qualname=qual, name=node.name,
+                    parent=".".join(self.stack) or None,
+                    class_name=self.class_stack[-1]
+                    if self.class_stack else None)
+                ctx.functions[qual] = info
+                ctx._by_name.setdefault(node.name, []).append(info)
+                self.stack.append(node.name)
+                self.generic_visit(node)
+                self.stack.pop()
+
+            visit_FunctionDef = _visit_fn
+            visit_AsyncFunctionDef = _visit_fn
+
+            def visit_ClassDef(self, node):
+                ctx._collect_class(node)
+                self.stack.append(node.name)
+                self.class_stack.append(node.name)
+                self.generic_visit(node)
+                self.class_stack.pop()
+                self.stack.pop()
+
+        Collector().visit(self.tree)
+
+    def _collect_class(self, node: ast.ClassDef) -> None:
+        is_dc = False
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            path = self.resolve(target)
+            if path in ("dataclasses.dataclass", "dataclass"):
+                is_dc = True
+            if path in ("jax.tree_util.register_pytree_node_class",
+                        "jax.tree_util.register_static"):
+                self.pytree_registered.add(node.name)
+        array_fields = []
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                ann = ast.unparse(stmt.annotation)
+                # jax arrays only: host-side np.ndarray value objects
+                # never cross a jit boundary and need no registration
+                if any(tok in ann for tok in
+                       ("Array", "jnp.", "jax.numpy")) and \
+                        "np.ndarray" not in ann:
+                    array_fields.append((stmt.target.id, stmt.lineno))
+        self.classes.append(ClassInfo(node, node.name, is_dc,
+                                      array_fields))
+
+    # -- compiled-region inference ------------------------------------
+
+    def _decorator_transform(self, dec: ast.AST):
+        """(transform path, jit kwargs) if ``dec`` traces the function."""
+        path = self.resolve(dec)
+        if path in TRANSFORM_DECORATORS:
+            return path, {}
+        if isinstance(dec, ast.Call):
+            fpath = self.resolve(dec.func)
+            if fpath in TRANSFORM_DECORATORS:
+                return fpath, {k.arg: k.value for k in dec.keywords}
+            if fpath in ("functools.partial", "partial") and dec.args:
+                inner = self.resolve(dec.args[0])
+                if inner in TRANSFORM_DECORATORS:
+                    return inner, {k.arg: k.value for k in dec.keywords}
+        return None, {}
+
+    @staticmethod
+    def _static_param_names(info: FunctionInfo, kwargs) -> Set[str]:
+        names: Set[str] = set()
+        params = info.params
+        nums = kwargs.get("static_argnums")
+        if isinstance(nums, ast.Constant) and isinstance(nums.value, int):
+            nums = [nums.value]
+        elif isinstance(nums, (ast.Tuple, ast.List)):
+            nums = [e.value for e in nums.elts
+                    if isinstance(e, ast.Constant)]
+        else:
+            nums = []
+        for i in nums:
+            if isinstance(i, int) and 0 <= i < len(params):
+                names.add(params[i])
+        argnames = kwargs.get("static_argnames")
+        if isinstance(argnames, ast.Constant) and \
+                isinstance(argnames.value, str):
+            names.add(argnames.value)
+        elif isinstance(argnames, (ast.Tuple, ast.List)):
+            names.update(e.value for e in argnames.elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, str))
+        return names
+
+    def _mark(self, info: FunctionInfo, reason: str,
+              statics: Set[str] = frozenset(),
+              scan_body: bool = False) -> None:
+        if not info.compiled:
+            info.compiled = True
+            info.compile_reason = reason
+        info.static_params.update(statics)
+        info.scan_body = info.scan_body or scan_body
+        seeds = {p for p in info.params
+                 if p not in info.static_params
+                 and p not in ("self", "cls")}
+        info.seeds.update(seeds)
+
+    def _lookup_callee(self, call: ast.Call,
+                       caller: Optional[FunctionInfo] = None
+                       ) -> Optional[FunctionInfo]:
+        """Resolve a call target to a module-local function, if any."""
+        func = call.func
+        if isinstance(func, ast.Attribute) and \
+                isinstance(func.value, ast.Name) and \
+                func.value.id in ("self", "cls") and caller is not None:
+            cands = [f for f in self._by_name.get(func.attr, ())
+                     if f.class_name and
+                     f.class_name == caller.class_name]
+            return cands[0] if len(cands) == 1 else None
+        if isinstance(func, ast.Name) and \
+                func.id not in self.aliases:
+            cands = self._by_name.get(func.id, ())
+            return cands[0] if len(cands) == 1 else None
+        return None
+
+    def _fn_arg_infos(self, call: ast.Call) -> List[FunctionInfo]:
+        """Module-local functions passed as arguments to ``call``."""
+        out = []
+        for arg in list(call.args) + [k.value for k in call.keywords]:
+            if isinstance(arg, ast.Name) and arg.id not in self.aliases:
+                cands = self._by_name.get(arg.id, ())
+                if len(cands) == 1:
+                    out.append(cands[0])
+        return out
+
+    def _mark_compiled_roots(self) -> None:
+        # (a) decorated with a transform
+        for info in self.functions.values():
+            for dec in info.node.decorator_list:
+                path, kwargs = self._decorator_transform(dec)
+                if path:
+                    statics = self._static_param_names(info, kwargs)
+                    self._mark(info, f"decorated @{path}", statics)
+        # (b) passed into a transform / lax combinator anywhere
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = self.resolve(node.func)
+            if path not in TRANSFORM_CALLS:
+                continue
+            scan_like = path in ("jax.lax.scan", "jax.lax.fori_loop",
+                                 "jax.lax.while_loop")
+            for fn in self._fn_arg_infos(node):
+                self._mark(fn, f"passed to {path}", scan_body=scan_like)
+            # jax.jit(f, static_argnums=...) value form
+            if path == "jax.jit" and node.args:
+                fns = self._fn_arg_infos(node)
+                if len(fns) == 1:
+                    statics = self._static_param_names(
+                        fns[0], {k.arg: k.value for k in node.keywords})
+                    self._mark(fns[0], "wrapped by jax.jit(...)", statics)
+
+    # -- taint --------------------------------------------------------
+
+    def _propagate(self) -> None:
+        """Module-level fixpoint: per-function taint + call-site
+        propagation into module-local callees."""
+        for _ in range(20):
+            changed = False
+            for info in self.functions.values():
+                if not info.compiled:
+                    continue
+                # closure seeds: free names tainted in the parent scope
+                if info.parent and info.parent in self.functions:
+                    parent = self.functions[info.parent]
+                    local = set(info.params)
+                    for name in parent.tainted:
+                        if name not in local and name not in info.seeds:
+                            info.seeds.add(name)
+                new = self._function_taint(info)
+                if new != info.tainted:
+                    info.tainted = new
+                    changed = True
+                changed |= self._propagate_calls(info)
+            if not changed:
+                break
+
+    def _function_taint(self, info: FunctionInfo) -> Set[str]:
+        tainted = set(info.seeds) | set(info.tainted)
+        containers = set(info.containers)
+        a = info.node.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if p.annotation is not None and \
+                    _annotation_head(p.annotation) in \
+                    CONTAINER_ANNOTATIONS:
+                containers.add(p.arg)
+        for _ in range(4):  # in-function fixpoint for reassignment chains
+            before = (len(tainted), len(containers))
+            for node in iter_scoped(info.node):
+                if isinstance(node, ast.Assign):
+                    if self.expr_tainted(node.value, tainted):
+                        for t in node.targets:
+                            tainted.update(_target_names(t))
+                    if _is_container_expr(node.value) and \
+                            len(node.targets) == 1:
+                        containers.update(_target_names(node.targets[0]))
+                elif isinstance(node, ast.AnnAssign) and node.value:
+                    if self.expr_tainted(node.value, tainted):
+                        tainted.update(_target_names(node.target))
+                    if _is_container_expr(node.value) or \
+                            _annotation_head(node.annotation) in \
+                            CONTAINER_ANNOTATIONS:
+                        containers.update(_target_names(node.target))
+                elif isinstance(node, ast.AugAssign):
+                    if self.expr_tainted(node.value, tainted) or \
+                            self.expr_tainted(node.target, tainted):
+                        tainted.update(_target_names(node.target))
+                elif isinstance(node, (ast.For, ast.AsyncFor)):
+                    if self.expr_tainted(node.iter, tainted):
+                        tainted.update(_target_names(node.target))
+            if (len(tainted), len(containers)) == before:
+                break
+        info.containers = containers
+        return tainted
+
+    # -- container structure vs. array values -------------------------
+
+    def truth_test_is_static(self, info: FunctionInfo,
+                             test: ast.AST) -> bool:
+        """Is a truthiness test trace-time static despite taint?  True
+        for bare (possibly negated) container names — ``if acc:`` asks
+        about dict *structure*, which jit fixes at trace time."""
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return self.truth_test_is_static(info, test.operand)
+        return isinstance(test, ast.Name) and test.id in info.containers
+
+    def iteration_is_static(self, info: FunctionInfo,
+                            it: ast.AST) -> bool:
+        """Is iterating ``it`` trace-time static despite taint?  True
+        for container names, display literals, and dict views — Python
+        loops over those have static trip counts and yield whole
+        tracers, unlike element-wise iteration of a traced array."""
+        if isinstance(it, ast.Name):
+            return it.id in info.containers
+        if isinstance(it, (ast.List, ast.Tuple, ast.Set, ast.Dict)):
+            return True
+        if isinstance(it, ast.Call):
+            if isinstance(it.func, ast.Attribute) and \
+                    it.func.attr in DICT_VIEW_METHODS:
+                return True  # arrays have no .items()/.keys()/.values()
+            path = self.resolve(it.func)
+            if path in ("range", "enumerate", "zip", "sorted",
+                        "reversed"):
+                return all(self.iteration_is_static(info, a) or
+                           not self.expr_tainted(a, info.tainted)
+                           for a in it.args)
+        return False
+
+    def _propagate_calls(self, info: FunctionInfo) -> bool:
+        """Push call-site argument taint into module-local callees."""
+        changed = False
+        for node in iter_scoped(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = self._lookup_callee(node, caller=info)
+            if callee is None or callee is info:
+                continue
+            params = [p for p in callee.params if p not in ("self", "cls")]
+            tainted_args: Set[str] = set()
+            for i, arg in enumerate(node.args):
+                if i < len(params) and \
+                        self.expr_tainted(arg, info.tainted):
+                    tainted_args.add(params[i])
+            for kw in node.keywords:
+                if kw.arg and kw.arg in params and \
+                        self.expr_tainted(kw.value, info.tainted):
+                    tainted_args.add(kw.arg)
+            if not tainted_args:
+                continue
+            if not callee.compiled:
+                callee.compiled = True
+                callee.compile_reason = (
+                    f"called from compiled {info.qualname}() "
+                    f"with traced argument(s)")
+                changed = True
+            if not tainted_args <= callee.seeds:
+                callee.seeds.update(tainted_args)
+                changed = True
+        return changed
+
+    def expr_tainted(self, expr: ast.AST, tainted: Set[str]) -> bool:
+        """Does ``expr`` (heuristically) hold a traced value?"""
+        if isinstance(expr, ast.Name):
+            return expr.id in tainted
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in STATIC_ATTRS:
+                return False
+            return self.expr_tainted(expr.value, tainted)
+        if isinstance(expr, ast.Subscript):
+            return self.expr_tainted(expr.value, tainted)
+        if isinstance(expr, ast.Call):
+            path = self.resolve(expr.func)
+            if self.in_namespace(path, ARRAY_NAMESPACES):
+                return True
+            if path in ("len", "isinstance", "hash", "id", "getattr",
+                        "hasattr", "type"):
+                return False
+            if path in ("bool", "int", "float", "complex", "str",
+                        "repr", "format"):
+                return False  # host coercion; flagged as its own rule
+            if isinstance(expr.func, ast.Attribute) and \
+                    self.expr_tainted(expr.func.value, tainted):
+                return True  # method on a traced value
+            return any(self.expr_tainted(a, tainted) for a in expr.args) \
+                or any(self.expr_tainted(k.value, tainted)
+                       for k in expr.keywords)
+        if isinstance(expr, ast.BinOp):
+            return self.expr_tainted(expr.left, tainted) or \
+                self.expr_tainted(expr.right, tainted)
+        if isinstance(expr, ast.UnaryOp):
+            return self.expr_tainted(expr.operand, tainted)
+        if isinstance(expr, ast.BoolOp):
+            return any(self.expr_tainted(v, tainted) for v in expr.values)
+        if isinstance(expr, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot))
+                   for op in expr.ops):
+                return False  # identity tests are trace-time static
+            return self.expr_tainted(expr.left, tainted) or \
+                any(self.expr_tainted(c, tainted)
+                    for c in expr.comparators)
+        if isinstance(expr, ast.IfExp):
+            return any(self.expr_tainted(e, tainted)
+                       for e in (expr.test, expr.body, expr.orelse))
+        if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.expr_tainted(e, tainted) for e in expr.elts)
+        if isinstance(expr, ast.Dict):
+            return any(self.expr_tainted(e, tainted)
+                       for e in list(expr.keys) + list(expr.values)
+                       if e is not None)
+        if isinstance(expr, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            return any(self.expr_tainted(g.iter, tainted)
+                       for g in expr.generators)
+        if isinstance(expr, ast.Starred):
+            return self.expr_tainted(expr.value, tainted)
+        if isinstance(expr, ast.NamedExpr):
+            return self.expr_tainted(expr.value, tainted)
+        return False
+
+    # -- convenience for rules ----------------------------------------
+
+    def compiled_functions(self) -> Iterator[FunctionInfo]:
+        for info in self.functions.values():
+            if info.compiled:
+                yield info
+
+
+def _annotation_head(ann: ast.AST) -> str:
+    """Leading identifier of an annotation (``Dict[str, Array]`` →
+    ``Dict``; ``typing.Mapping[...]`` → ``Mapping``)."""
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value.split("[", 1)[0].split(".")[-1].strip()
+    if isinstance(ann, ast.Subscript):
+        return _annotation_head(ann.value)
+    if isinstance(ann, ast.Attribute):
+        return ann.attr
+    if isinstance(ann, ast.Name):
+        return ann.id
+    return ""
+
+
+def _is_container_expr(expr: ast.AST) -> bool:
+    """Does ``expr`` construct a Python container (static structure)?"""
+    if isinstance(expr, (ast.Dict, ast.List, ast.Tuple, ast.Set,
+                         ast.DictComp, ast.ListComp, ast.SetComp)):
+        return True
+    if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Name) \
+            and expr.func.id in ("dict", "list", "tuple", "set",
+                                 "frozenset"):
+        return True
+    return False
+
+
+def _target_names(target: ast.AST) -> Set[str]:
+    """Names bound by an assignment target (tuples unpacked)."""
+    if isinstance(target, ast.Name):
+        return {target.id}
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: Set[str] = set()
+        for e in target.elts:
+            out.update(_target_names(e))
+        return out
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value)
+    return set()

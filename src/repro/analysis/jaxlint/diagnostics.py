@@ -1,0 +1,134 @@
+"""Diagnostic model, suppression comments, and output formatting.
+
+A :class:`Diagnostic` is one finding: ``file:line:col``, the rule id
+(``JL0xx``), a severity, a one-line message, and a fix hint.  The
+engine (``engine.py``) collects them per file, drops the ones silenced
+by suppression comments, and renders the survivors as human text or a
+stable JSON document (``--format text|json`` on ``scripts/lint.py``).
+
+Suppression grammar (mirrors the usual linter conventions):
+
+* ``# jaxlint: disable=JL001`` — silence the named rule(s, comma
+  separated) on *this physical line*;
+* ``# jaxlint: disable-next=JL001`` — same, for the following line;
+* ``# jaxlint: disable-file=JL001`` — silence for the whole file
+  (anywhere in the file, conventionally in the module docstring area);
+* ``disable=all`` silences every rule at that scope.
+
+Suppressions should carry a justification comment — the test suite's
+self-check keeps ``src/repro`` clean, so every suppression in tree is a
+reviewed false positive.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Iterable, List, Set, Tuple
+
+#: Severity ordering used by ``--fail-on`` (higher = more severe).
+SEVERITIES = ("note", "warning", "error")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding, pointing at ``file:line:col``."""
+
+    file: str
+    line: int
+    col: int
+    rule: str          # registered rule id, e.g. "JL001"
+    severity: str      # "error" | "warning" | "note"
+    message: str       # one line, concrete, names the offending code
+    hint: str = ""     # how to fix (or how to suppress if intentional)
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r} "
+                             f"(expected one of {SEVERITIES})")
+
+    def format_text(self) -> str:
+        out = (f"{self.file}:{self.line}:{self.col}: {self.rule} "
+               f"[{self.severity}] {self.message}")
+        if self.hint:
+            out += f"  (fix: {self.hint})"
+        return out
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*jaxlint:\s*(disable|disable-next|disable-file)\s*=\s*"
+    r"([A-Za-z0-9_,\s]+)")
+
+
+def parse_suppressions(source: str) -> Tuple[Dict[int, Set[str]], Set[str]]:
+    """Extract suppression comments from ``source``.
+
+    Returns ``(per_line, file_wide)`` where ``per_line`` maps a
+    1-indexed line number to the set of rule ids silenced there (the
+    sentinel ``"all"`` silences everything) and ``file_wide`` is the
+    set silenced for the whole file.
+    """
+    per_line: Dict[int, Set[str]] = {}
+    file_wide: Set[str] = set()
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        if "jaxlint" not in text:
+            continue
+        for kind, rules in _SUPPRESS_RE.findall(text):
+            ids = {r.strip().upper() if r.strip().lower() != "all" else "all"
+                   for r in rules.split(",") if r.strip()}
+            if kind == "disable":
+                per_line.setdefault(lineno, set()).update(ids)
+            elif kind == "disable-next":
+                per_line.setdefault(lineno + 1, set()).update(ids)
+            else:
+                file_wide.update(ids)
+    return per_line, file_wide
+
+
+def is_suppressed(diag: Diagnostic, per_line: Dict[int, Set[str]],
+                  file_wide: Set[str]) -> bool:
+    for scope in (file_wide, per_line.get(diag.line, ())):
+        if "all" in scope or diag.rule in scope:
+            return True
+    return False
+
+
+def severity_at_least(diag: Diagnostic, floor: str) -> bool:
+    return SEVERITIES.index(diag.severity) >= SEVERITIES.index(floor)
+
+
+def counts_by_severity(diags: Iterable[Diagnostic]) -> Dict[str, int]:
+    counts = {s: 0 for s in SEVERITIES}
+    for d in diags:
+        counts[d.severity] += 1
+    return counts
+
+
+def render_text(diags: List[Diagnostic], n_files: int,
+                n_suppressed: int) -> str:
+    lines = [d.format_text() for d in diags]
+    counts = counts_by_severity(diags)
+    lines.append(f"jaxlint: {n_files} file(s), "
+                 f"{counts['error']} error(s), "
+                 f"{counts['warning']} warning(s), "
+                 f"{counts['note']} note(s), "
+                 f"{n_suppressed} suppressed")
+    return "\n".join(lines)
+
+
+def render_json(diags: List[Diagnostic], n_files: int,
+                n_suppressed: int) -> str:
+    """Stable machine-readable report (schema asserted by the tests)."""
+    doc = {
+        "version": 1,
+        "tool": "jaxlint",
+        "files": n_files,
+        "suppressed": n_suppressed,
+        "counts": counts_by_severity(diags),
+        "diagnostics": [d.to_dict() for d in diags],
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)

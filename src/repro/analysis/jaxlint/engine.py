@@ -1,0 +1,143 @@
+"""The jaxlint engine: walk files, run rules, apply suppressions.
+
+Public API (re-exported from ``repro.analysis.jaxlint``):
+
+* :func:`lint_source` — lint one source string (tests, doc examples);
+* :func:`lint_file` — lint one file on disk;
+* :func:`lint_paths` — lint files/directory trees; returns a
+  :class:`LintReport` with sorted diagnostics and render helpers.
+
+The engine never imports the code it lints — analysis is purely
+syntactic (``ast``) — so it runs identically with or without jax
+installed and can lint broken/WIP modules.  Files that fail to parse
+produce a single ``error``-severity diagnostic rather than crashing
+the run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.jaxlint import rules as rules_mod
+from repro.analysis.jaxlint.context import ModuleContext
+from repro.analysis.jaxlint.diagnostics import (
+    Diagnostic,
+    is_suppressed,
+    parse_suppressions,
+    render_json,
+    render_text,
+    severity_at_least,
+)
+
+
+@dataclasses.dataclass
+class LintReport:
+    """Aggregated result of one lint run."""
+
+    diagnostics: List[Diagnostic]
+    suppressed: List[Diagnostic]
+    n_files: int
+
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == "error"]
+
+    def failed(self, fail_on: str = "error") -> bool:
+        return any(severity_at_least(d, fail_on)
+                   for d in self.diagnostics)
+
+    def render(self, fmt: str = "text") -> str:
+        if fmt == "text":
+            return render_text(self.diagnostics, self.n_files,
+                               len(self.suppressed))
+        if fmt == "json":
+            return render_json(self.diagnostics, self.n_files,
+                               len(self.suppressed))
+        raise ValueError(f"unknown format {fmt!r} "
+                         "(expected 'text' or 'json')")
+
+
+def _select_rules(select: Optional[Sequence[str]],
+                  disable: Optional[Sequence[str]]):
+    chosen = list(rules_mod.all_rules())
+    if select:
+        wanted = {s.upper() for s in select}
+        unknown = wanted - set(rules_mod.available())
+        if unknown:
+            raise KeyError(f"unknown rule(s) {sorted(unknown)} "
+                           f"(available: "
+                           f"{', '.join(rules_mod.available())})")
+        chosen = [r for r in chosen if r.id in wanted]
+    if disable:
+        dropped = {s.upper() for s in disable}
+        chosen = [r for r in chosen if r.id not in dropped]
+    return chosen
+
+
+def lint_source(source: str, filename: str = "<string>",
+                select: Optional[Sequence[str]] = None,
+                disable: Optional[Sequence[str]] = None) -> LintReport:
+    """Lint one source string; ``filename`` feeds diagnostics and the
+    zero-retrace registry's path matching."""
+    chosen = _select_rules(select, disable)
+    try:
+        ctx = ModuleContext(source, filename)
+    except SyntaxError as e:
+        diag = Diagnostic(file=filename, line=e.lineno or 1,
+                          col=e.offset or 0, rule="JL000",
+                          severity="error",
+                          message=f"syntax error: {e.msg}")
+        return LintReport([diag], [], 1)
+    per_line, file_wide = parse_suppressions(source)
+    kept: List[Diagnostic] = []
+    suppressed: List[Diagnostic] = []
+    for rule in chosen:
+        for diag in rule.check(ctx):
+            if is_suppressed(diag, per_line, file_wide):
+                suppressed.append(diag)
+            else:
+                kept.append(diag)
+    kept.sort(key=lambda d: (d.file, d.line, d.col, d.rule))
+    return LintReport(kept, suppressed, 1)
+
+
+def lint_file(path: str, select: Optional[Sequence[str]] = None,
+              disable: Optional[Sequence[str]] = None) -> LintReport:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    return lint_source(source, filename=path, select=select,
+                       disable=disable)
+
+
+def iter_python_files(paths: Iterable[str]) -> Tuple[str, ...]:
+    """Expand files/directories into a sorted tuple of ``.py`` paths."""
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, files in os.walk(p):
+                dirnames[:] = [d for d in sorted(dirnames)
+                               if d != "__pycache__"]
+                out.extend(os.path.join(dirpath, f)
+                           for f in sorted(files) if f.endswith(".py"))
+        elif p.endswith(".py"):
+            out.append(p)
+        else:
+            raise FileNotFoundError(
+                f"{p}: not a directory or .py file")
+    return tuple(sorted(set(out)))
+
+
+def lint_paths(paths: Iterable[str],
+               select: Optional[Sequence[str]] = None,
+               disable: Optional[Sequence[str]] = None) -> LintReport:
+    """Lint every ``.py`` file under ``paths`` (files or directories)."""
+    files = iter_python_files(paths)
+    diagnostics: List[Diagnostic] = []
+    suppressed: List[Diagnostic] = []
+    for path in files:
+        rep = lint_file(path, select=select, disable=disable)
+        diagnostics.extend(rep.diagnostics)
+        suppressed.extend(rep.suppressed)
+    diagnostics.sort(key=lambda d: (d.file, d.line, d.col, d.rule))
+    return LintReport(diagnostics, suppressed, len(files))

@@ -1,0 +1,91 @@
+"""pytest wiring for the dynamic zero-retrace sentinel.
+
+Loaded by ``tests/conftest.py`` (hooks + fixture re-exported into the
+conftest namespace).  Two pieces:
+
+* ``@pytest.mark.zero_retrace`` — while the marked test runs, a
+  :class:`~repro.analysis.jaxlint.sentinel.RetraceSentinel` counts new
+  XLA traces; any trace after the baseline fails the test with a
+  report naming the retraced fleet programs.  By default the baseline
+  is the start of the test (strict: *no* compile allowed); tests that
+  legitimately warm programs up first request the ``zero_retrace``
+  fixture and call ``.arm()`` after warmup.
+
+* ``zero_retrace`` fixture — a proxy handle with ``.arm()`` (reset the
+  baseline to "now") for marked tests.  Requesting it from an unmarked
+  test is an error: the sentinel only runs for marked tests, so an
+  un-marked ``.arm()`` would silently check nothing.
+
+Example::
+
+    @pytest.mark.zero_retrace
+    def test_sweep_reuses_programs(zero_retrace):
+        run_once(fleet_a)      # warmup: compiles allowed
+        zero_retrace.arm()
+        run_once(fleet_b)      # same shapes — must not trace
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis.jaxlint.sentinel import RetraceSentinel
+
+_SENTINEL_ATTR = "_jaxlint_retrace_sentinel"
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "zero_retrace: fail the test if any new XLA program is traced "
+        "after the sentinel baseline (arm after warmup via the "
+        "`zero_retrace` fixture; without an explicit arm() the whole "
+        "test must not trace)")
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("zero_retrace")
+    if marker is None:
+        return (yield)
+    sentinel = RetraceSentinel()
+    setattr(item, _SENTINEL_ATTR, sentinel)
+    sentinel.start()
+    try:
+        result = yield
+    finally:
+        sentinel.stop()
+    if sentinel.tripped():
+        raise AssertionError(sentinel.report())
+    return result
+
+
+class _SentinelHandle:
+    """Late-binding proxy: the sentinel itself is created by the
+    ``pytest_runtest_call`` wrapper, after fixture setup."""
+
+    def __init__(self, node):
+        self._node = node
+
+    def _sentinel(self) -> RetraceSentinel:
+        sentinel = getattr(self._node, _SENTINEL_ATTR, None)
+        if sentinel is None:
+            raise RuntimeError(
+                "zero_retrace fixture used outside the sentinel's "
+                "run phase")
+        return sentinel
+
+    def arm(self) -> None:
+        self._sentinel().arm()
+
+    def delta(self) -> int:
+        return self._sentinel().delta()
+
+
+@pytest.fixture
+def zero_retrace(request):
+    if request.node.get_closest_marker("zero_retrace") is None:
+        pytest.fail("the zero_retrace fixture requires the "
+                    "@pytest.mark.zero_retrace marker — without it no "
+                    "sentinel runs and arm() would check nothing")
+    return _SentinelHandle(request.node)

@@ -1,0 +1,58 @@
+"""The zero-retrace registry: entry points whose jit shape keys are
+part of the repo's documented contract.
+
+Every function listed here fronts (or feeds) one of the fleet's
+shape-keyed compiled programs — the programs whose retrace counters
+``fleet_trace_counts()`` exposes and whose reuse the repo's whole
+performance story rests on (docs/ARCHITECTURE.md, "zero-retrace
+contract").  Rule ``JL007`` statically enforces that each of them
+
+* still exists (a rename must update this registry, keeping it the one
+  authoritative list), and
+* carries a docstring documenting its shape key: the words ``shape``
+  plus one of ``retrace`` / ``recompile`` / ``compile`` / ``jit key``
+  must appear, so a reader landing on the entry point learns what may
+  and may not vary without recompilation.
+
+Paths are repo-relative module paths as matched by suffix, so the
+registry works whether jaxlint is invoked from the repo root or on an
+absolute path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+#: module path suffix -> function names under the zero-retrace contract.
+ZERO_RETRACE_REGISTRY: Dict[str, Tuple[str, ...]] = {
+    "repro/core/controller.py": (
+        "fleet_bin_tables",
+        "simulate_fleet",
+        "simulate_fleet_stream",
+        "compare_all_batched",
+        "fleet_trace_counts",
+    ),
+    "repro/core/composition.py": ("search_fleet_composition",),
+    "repro/core/scenarios.py": ("run_campaign",),
+    "repro/core/scheduler.py": ("scheduler_values",),
+    "repro/core/aot.py": ("warm_fleet_programs",),
+}
+
+#: words (lowercased) that satisfy the shape-key documentation check.
+SHAPE_WORDS = ("shape",)
+RETRACE_WORDS = ("retrace", "recompile", "compile", "jit key", "jit-key")
+
+
+def registry_for(filename: str) -> Tuple[str, ...]:
+    """Functions registered for ``filename`` (suffix match), if any."""
+    norm = filename.replace("\\", "/")
+    for suffix, names in ZERO_RETRACE_REGISTRY.items():
+        if norm.endswith(suffix):
+            return names
+    return ()
+
+
+def docstring_satisfies_contract(doc: str) -> bool:
+    low = (doc or "").lower()
+    return any(w in low for w in SHAPE_WORDS) and \
+        any(w in low for w in RETRACE_WORDS)

@@ -1,0 +1,527 @@
+"""Rule protocol, registry, and the eight contract rules.
+
+Rules are value objects in a name registry, mirroring the
+``core/predictors/`` idiom (:func:`register` / :func:`get` /
+:func:`available`): each rule carries an id (``JL0xx``), a default
+severity, a one-line summary, and a ``check(ctx)`` generator yielding
+:class:`~repro.analysis.jaxlint.diagnostics.Diagnostic` objects for one
+:class:`~repro.analysis.jaxlint.context.ModuleContext`.
+
+Registering a new rule is three steps (docs/ARCHITECTURE.md §10):
+subclass :class:`Rule`, implement ``check``, decorate with
+``@register``.  The engine and CLI pick it up automatically
+(``scripts/lint.py --list-rules``).
+
+The eight shipped rules encode the repo's documented contracts:
+
+====== ===================== ========= =====================================
+id     name                  severity  catches
+====== ===================== ========= =====================================
+JL001  tracer-control-flow   error     ``if``/``while``/``assert`` and
+                                       ``bool()``/``int()``/``float()``/
+                                       ``.item()`` on traced values
+JL002  host-call-in-trace    error     ``np.*``/``math.*`` calls and Python
+                                       comprehensions/loops over traced
+                                       array elements in compiled bodies
+JL003  unregistered-pytree   error     ``@dataclass`` holding ``jnp``
+                                       arrays without a pytree registration
+JL004  jit-boundary          warning   mutable ``static_argnums``, f-string/
+                                       ``repr()`` of tracers, constants
+                                       rebuilt inside scan bodies
+JL005  impure-compiled       error     ``time.*``/``random.*``/``print``/
+                                       ``global`` mutation under a trace
+JL006  densified-view        error     stride-0 ``np.broadcast_to`` views
+                                       densified by ``.copy()``/``.reshape``/
+                                       ``np.array`` (O(K) memory contract)
+JL007  retrace-registry      warning   ``ZERO_RETRACE_REGISTRY`` entry
+                                       points missing or missing shape-key
+                                       docs (stale entries are errors)
+JL008  silent-except         error     bare ``except:`` and exception
+                                       handlers that swallow silently
+====== ===================== ========= =====================================
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Tuple
+
+from repro.analysis.jaxlint import registry as zr
+from repro.analysis.jaxlint.context import (
+    HOST_NUMERIC_NAMESPACES,
+    IMPURE_NAMESPACES,
+    FunctionInfo,
+    ModuleContext,
+    iter_scoped,
+)
+from repro.analysis.jaxlint.diagnostics import Diagnostic
+
+
+class Rule:
+    """One named contract check (see module docstring for the idiom)."""
+
+    id: str = ""
+    name: str = ""
+    severity: str = "error"
+    summary: str = ""
+    hint: str = ""
+
+    def check(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        raise NotImplementedError
+
+    def diag(self, ctx: ModuleContext, node: ast.AST, message: str,
+             severity: Optional[str] = None,
+             hint: Optional[str] = None) -> Diagnostic:
+        return Diagnostic(
+            file=ctx.filename, line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0), rule=self.id,
+            severity=severity or self.severity, message=message,
+            hint=self.hint if hint is None else hint)
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the rule registry."""
+    rule = cls()
+    if not rule.id or not rule.check:
+        raise ValueError(f"rule {cls.__name__} needs an id and check()")
+    if rule.id in _RULES:
+        raise ValueError(f"duplicate rule id {rule.id!r}")
+    _RULES[rule.id] = rule
+    return cls
+
+
+def get(rule_id: str) -> Rule:
+    try:
+        return _RULES[rule_id]
+    except KeyError:
+        raise KeyError(f"unknown rule {rule_id!r} "
+                       f"(available: {', '.join(available())})") from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_RULES))
+
+
+def all_rules() -> Tuple[Rule, ...]:
+    return tuple(_RULES[k] for k in available())
+
+
+# ---------------------------------------------------------------------------
+# JL001 — tracer leaks into Python control flow
+# ---------------------------------------------------------------------------
+
+_COERCIONS = ("bool", "int", "float", "complex")
+_CONCRETIZING_METHODS = ("item", "tolist", "__bool__", "__index__")
+
+
+@register
+class TracerControlFlow(Rule):
+    id = "JL001"
+    name = "tracer-control-flow"
+    severity = "error"
+    summary = ("Python `if`/`while`/`assert` or host coercion "
+               "(`bool()`, `.item()`) on a traced value")
+    hint = ("branch with jnp.where/lax.cond/lax.select on the traced "
+            "value, or hoist the decision out of the compiled region")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        for fn in ctx.compiled_functions():
+            t = fn.tainted
+            for node in iter_scoped(fn.node):
+                if isinstance(node, (ast.If, ast.While)) and \
+                        ctx.expr_tainted(node.test, t) and \
+                        not ctx.truth_test_is_static(fn, node.test):
+                    kw = "if" if isinstance(node, ast.If) else "while"
+                    yield self.diag(
+                        ctx, node,
+                        f"Python `{kw}` on a traced value in compiled "
+                        f"`{fn.qualname}()` ({fn.compile_reason}) — "
+                        f"this forces concretization or a retrace per "
+                        f"value")
+                elif isinstance(node, ast.Assert) and \
+                        ctx.expr_tainted(node.test, t):
+                    yield self.diag(
+                        ctx, node,
+                        f"`assert` on a traced value in compiled "
+                        f"`{fn.qualname}()` — use "
+                        f"checkify/debug.check or validate before "
+                        f"the jit boundary")
+                elif isinstance(node, ast.IfExp) and \
+                        ctx.expr_tainted(node.test, t) and \
+                        not ctx.truth_test_is_static(fn, node.test):
+                    yield self.diag(
+                        ctx, node,
+                        f"conditional expression on a traced value in "
+                        f"compiled `{fn.qualname}()`")
+                elif isinstance(node, ast.Call):
+                    path = ctx.resolve(node.func)
+                    if path in _COERCIONS and node.args and \
+                            ctx.expr_tainted(node.args[0], t):
+                        yield self.diag(
+                            ctx, node,
+                            f"`{path}()` of a traced value in compiled "
+                            f"`{fn.qualname}()` — host coercion breaks "
+                            f"the trace")
+                    elif isinstance(node.func, ast.Attribute) and \
+                            node.func.attr in _CONCRETIZING_METHODS and \
+                            ctx.expr_tainted(node.func.value, t):
+                        yield self.diag(
+                            ctx, node,
+                            f"`.{node.func.attr}()` on a traced value "
+                            f"in compiled `{fn.qualname}()`")
+
+
+# ---------------------------------------------------------------------------
+# JL002 — host numerics / Python iteration inside compiled bodies
+# ---------------------------------------------------------------------------
+
+
+@register
+class HostCallInTrace(Rule):
+    id = "JL002"
+    name = "host-call-in-trace"
+    severity = "error"
+    summary = ("host `np.*`/`math.*` call or Python loop/comprehension "
+               "over traced array elements inside a compiled body")
+    hint = ("use the jnp/lax equivalent; host numerics silently "
+            "constant-fold the tracer or raise at trace time")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        for fn in ctx.compiled_functions():
+            t = fn.tainted
+            for node in iter_scoped(fn.node):
+                if isinstance(node, ast.Call):
+                    path = ctx.resolve(node.func)
+                    if ctx.in_namespace(path, HOST_NUMERIC_NAMESPACES) \
+                            and not ctx.in_namespace(
+                                path, IMPURE_NAMESPACES) \
+                            and (any(ctx.expr_tainted(a, t)
+                                     for a in node.args)
+                                 or any(ctx.expr_tainted(k.value, t)
+                                        for k in node.keywords)):
+                        yield self.diag(
+                            ctx, node,
+                            f"host call `{path}` on a traced value in "
+                            f"compiled `{fn.qualname}()`")
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    if any(ctx.expr_tainted(g.iter, t) and
+                           not ctx.iteration_is_static(fn, g.iter)
+                           for g in node.generators):
+                        yield self.diag(
+                            ctx, node,
+                            f"Python comprehension over traced array "
+                            f"elements in compiled `{fn.qualname}()` — "
+                            f"unrolls the trace per element",
+                            hint="vectorize with jnp ops or vmap")
+                elif isinstance(node, (ast.For, ast.AsyncFor)) and \
+                        ctx.expr_tainted(node.iter, t) and \
+                        not ctx.iteration_is_static(fn, node.iter):
+                    yield self.diag(
+                        ctx, node,
+                        f"Python `for` over traced array elements in "
+                        f"compiled `{fn.qualname}()` — unrolls the "
+                        f"trace per element",
+                        hint="use lax.scan/fori_loop or vectorize")
+
+
+# ---------------------------------------------------------------------------
+# JL003 — dataclasses holding arrays must be registered pytrees
+# ---------------------------------------------------------------------------
+
+_PYTREE_REGISTRATION_CALLS = (
+    "jax.tree_util.register_pytree_node",
+    "jax.tree_util.register_pytree_with_keys",
+    "jax.tree_util.register_dataclass",
+    "jax.tree_util.register_static",
+)
+
+
+@register
+class UnregisteredPytree(Rule):
+    id = "JL003"
+    name = "unregistered-pytree"
+    severity = "error"
+    summary = ("`@dataclass` holding jnp arrays without a pytree "
+               "registration")
+    hint = ("register with jax.tree_util.register_pytree_node/"
+            "register_dataclass, or use a NamedTuple (auto-pytree)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        registered = set(ctx.pytree_registered)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and \
+                    ctx.resolve(node.func) in _PYTREE_REGISTRATION_CALLS \
+                    and node.args and isinstance(node.args[0], ast.Name):
+                registered.add(node.args[0].id)
+        for cls in ctx.classes:
+            if cls.is_dataclass and cls.array_fields and \
+                    cls.name not in registered:
+                fields = ", ".join(n for n, _ in cls.array_fields)
+                yield self.diag(
+                    ctx, cls.node,
+                    f"dataclass `{cls.name}` holds array field(s) "
+                    f"{fields} but is not registered as a pytree — "
+                    f"passing it through jit/scan/vmap will fail or "
+                    f"silently treat arrays as static")
+
+
+# ---------------------------------------------------------------------------
+# JL004 — jit-boundary hygiene
+# ---------------------------------------------------------------------------
+
+_CONST_BUILDERS = ("jax.numpy.array", "jax.numpy.asarray",
+                   "jax.numpy.zeros", "jax.numpy.ones", "jax.numpy.full",
+                   "jax.numpy.arange", "jax.numpy.linspace",
+                   "jax.numpy.eye")
+_STRINGIFIERS = ("str", "repr", "format")
+
+
+def _is_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_literal(e) for e in node.elts)
+    if isinstance(node, ast.UnaryOp) and \
+            isinstance(node.op, (ast.USub, ast.UAdd)):
+        return _is_literal(node.operand)
+    return False
+
+
+@register
+class JitBoundary(Rule):
+    id = "JL004"
+    name = "jit-boundary"
+    severity = "warning"
+    summary = ("mutable `static_argnums`, f-string/`repr()` of a "
+               "tracer, or array constants rebuilt inside scan bodies")
+    hint = ("statics must be hashable (tuples); stringify outside the "
+            "trace; hoist scan-body constants to the enclosing scope")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        yield from self._check_static_kwargs(ctx)
+        for fn in ctx.compiled_functions():
+            t = fn.tainted
+            for node in iter_scoped(fn.node):
+                if isinstance(node, ast.FormattedValue) and \
+                        ctx.expr_tainted(node.value, t):
+                    yield self.diag(
+                        ctx, node,
+                        f"f-string interpolation of a traced value in "
+                        f"compiled `{fn.qualname}()` — renders the "
+                        f"tracer, not the runtime value")
+                elif isinstance(node, ast.Call):
+                    path = ctx.resolve(node.func)
+                    if path in _STRINGIFIERS and node.args and \
+                            ctx.expr_tainted(node.args[0], t):
+                        yield self.diag(
+                            ctx, node,
+                            f"`{path}()` of a traced value in compiled "
+                            f"`{fn.qualname}()` — renders the tracer, "
+                            f"not the runtime value")
+                    elif fn.scan_body and path in _CONST_BUILDERS and \
+                            node.args and \
+                            all(_is_literal(a) for a in node.args):
+                        yield self.diag(
+                            ctx, node,
+                            f"constant `{path.replace('jax.numpy', 'jnp')}"
+                            f"(...)` rebuilt inside scan body "
+                            f"`{fn.qualname}()` — traced and staged "
+                            f"once per trace; hoist it")
+
+    def _check_static_kwargs(self, ctx: ModuleContext):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = ctx.resolve(node.func)
+            is_jit = path == "jax.jit"
+            if path in ("functools.partial", "partial") and node.args \
+                    and ctx.resolve(node.args[0]) == "jax.jit":
+                is_jit = True
+            if not is_jit:
+                continue
+            for kw in node.keywords:
+                if kw.arg in ("static_argnums", "static_argnames") and \
+                        isinstance(kw.value, (ast.List, ast.Set,
+                                              ast.Dict)):
+                    yield self.diag(
+                        ctx, kw.value,
+                        f"`{kw.arg}` given a mutable "
+                        f"`{type(kw.value).__name__.lower()}` literal — "
+                        f"jit statics must be hashable",
+                        hint="use a tuple")
+
+
+# ---------------------------------------------------------------------------
+# JL005 — impurity inside compiled bodies
+# ---------------------------------------------------------------------------
+
+
+@register
+class ImpureCompiled(Rule):
+    id = "JL005"
+    name = "impure-compiled"
+    severity = "error"
+    summary = ("`time.*`/`random.*`/`print`/global mutation inside a "
+               "compiled body")
+    hint = ("compiled code must be pure: thread PRNG keys "
+            "(jax.random), pass clocks in as arguments, use "
+            "jax.debug.print, return new values instead of mutating")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        for fn in ctx.compiled_functions():
+            for node in iter_scoped(fn.node):
+                if isinstance(node, (ast.Global, ast.Nonlocal)):
+                    kw = ("global" if isinstance(node, ast.Global)
+                          else "nonlocal")
+                    yield self.diag(
+                        ctx, node,
+                        f"`{kw} {', '.join(node.names)}` mutation in "
+                        f"compiled `{fn.qualname}()` — side effects "
+                        f"happen at trace time, not per call")
+                elif isinstance(node, ast.Call):
+                    path = ctx.resolve(node.func)
+                    if ctx.in_namespace(path, IMPURE_NAMESPACES):
+                        yield self.diag(
+                            ctx, node,
+                            f"impure host call `{path}` in compiled "
+                            f"`{fn.qualname}()` — evaluated once at "
+                            f"trace time and baked into the program")
+                    elif path == "print":
+                        yield self.diag(
+                            ctx, node,
+                            f"`print()` in compiled `{fn.qualname}()` "
+                            f"— prints the tracer at trace time",
+                            hint="use jax.debug.print")
+
+
+# ---------------------------------------------------------------------------
+# JL006 — stride-0 trace views must stay views
+# ---------------------------------------------------------------------------
+
+_DENSIFIERS = ("numpy.array", "numpy.ascontiguousarray",
+               "jax.numpy.array", "jax.numpy.asarray")
+
+
+@register
+class DensifiedView(Rule):
+    id = "JL006"
+    name = "densified-view"
+    severity = "error"
+    summary = ("stride-0 `np.broadcast_to` view densified by "
+               "`.copy()`/`.reshape()`/`np.array` — breaks the O(K) "
+               "streaming memory contract")
+    hint = ("keep the broadcast a view (lead + (S,) shapes); let "
+            "jit inputs broadcast on device instead of copying K·S "
+            "floats on the host")
+
+    @staticmethod
+    def _is_np_broadcast(ctx: ModuleContext, node: ast.AST) -> bool:
+        return (isinstance(node, ast.Call) and
+                ctx.resolve(node.func) == "numpy.broadcast_to")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and \
+                        f.attr in ("copy", "reshape", "flatten",
+                                   "ravel") and \
+                        self._is_np_broadcast(ctx, f.value):
+                    yield self.diag(
+                        ctx, node,
+                        f"`np.broadcast_to(...).{f.attr}()` "
+                        f"materializes the stride-0 view into a dense "
+                        f"array")
+                elif ctx.resolve(f) in _DENSIFIERS and node.args and \
+                        self._is_np_broadcast(ctx, node.args[0]):
+                    yield self.diag(
+                        ctx, node,
+                        f"`{ctx.resolve(f)}(np.broadcast_to(...))` "
+                        f"materializes the stride-0 view into a dense "
+                        f"array")
+
+
+# ---------------------------------------------------------------------------
+# JL007 — zero-retrace registry entry points must document shape keys
+# ---------------------------------------------------------------------------
+
+
+@register
+class RetraceRegistryDocs(Rule):
+    id = "JL007"
+    name = "retrace-registry"
+    severity = "warning"
+    summary = ("ZERO_RETRACE_REGISTRY entry point missing or missing "
+               "its jit shape-key documentation")
+    hint = ("document what may vary without recompiling (the words "
+            "'shape' and 'retrace'/'compile'/'jit key' must appear); "
+            "renamed entry points must update "
+            "repro/analysis/jaxlint/registry.py")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        names = zr.registry_for(ctx.filename)
+        if not names:
+            return
+        module_fns: Dict[str, FunctionInfo] = {
+            info.name: info for info in ctx.functions.values()
+            if info.parent is None}
+        for name in names:
+            info = module_fns.get(name)
+            if info is None:
+                yield self.diag(
+                    ctx, ctx.tree,
+                    f"zero-retrace registry names `{name}` but "
+                    f"`{ctx.filename}` has no module-level function of "
+                    f"that name — stale registry entry",
+                    severity="error")
+                continue
+            doc = ast.get_docstring(info.node) or ""
+            if not zr.docstring_satisfies_contract(doc):
+                yield self.diag(
+                    ctx, info.node,
+                    f"`{name}()` is under the zero-retrace contract "
+                    f"but its docstring does not document the jit "
+                    f"shape key")
+
+
+# ---------------------------------------------------------------------------
+# JL008 — silent failure in validation/tooling code
+# ---------------------------------------------------------------------------
+
+
+@register
+class SilentExcept(Rule):
+    id = "JL008"
+    name = "silent-except"
+    severity = "error"
+    summary = ("bare `except:` or an exception handler that swallows "
+               "silently (`pass`/`continue`)")
+    hint = ("catch the narrowest type and fail loudly with a one-line "
+            "message (or re-raise); never clip errors to defaults "
+            "silently")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield self.diag(
+                    ctx, node,
+                    "bare `except:` catches SystemExit/"
+                    "KeyboardInterrupt and hides the error type")
+                continue
+            body = [s for s in node.body]
+            if all(isinstance(s, ast.Pass) or
+                   isinstance(s, ast.Continue) or
+                   (isinstance(s, ast.Expr) and
+                    isinstance(s.value, ast.Constant) and
+                    s.value.value is Ellipsis)
+                   for s in body):
+                yield self.diag(
+                    ctx, node,
+                    f"`except {ast.unparse(node.type)}` swallows the "
+                    f"exception silently")

@@ -1,0 +1,151 @@
+"""Dynamic zero-retrace sentinel: count XLA traces around a test.
+
+The static rules (``rules.py``) catch contract violations they can see
+in the AST; this sentinel catches the ones they can't — any code path
+that traces a *new* XLA program at runtime (e.g. a jit keyed on a
+value, a shape that silently varies across a sweep).  It is the
+per-test generalization of the two hand-rolled witnesses
+(``tests/test_fleet.py::*zero_retrace*`` and
+``composition.retraces_second_half``).
+
+Mechanism: while active, the sentinel wraps JAX's jaxpr-creation hook
+(``jax._src.pjit._create_pjit_jaxpr``) with a counting memoized
+wrapper — every tracing-cache miss increments the counter, exactly the
+event the zero-retrace contract forbids after warmup.  It also
+snapshots the repo's own :func:`repro.core.controller.fleet_trace_counts`
+so failures name which fleet program retraced.  If the private hook
+moves in a future JAX, the sentinel degrades to the fleet counters
+alone (and says so in its report).
+
+Usage (see ``pytest_plugin.py`` for the pytest marker wiring)::
+
+    s = RetraceSentinel()
+    s.start()
+    warmup()          # compiles are allowed here
+    s.arm()           # baseline: everything after this must not trace
+    sweep()
+    s.stop()
+    assert not s.tripped(), s.report()
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+#: name of the private hook we wrap; kept in one place for the fallback
+_PJIT_HOOK = "_create_pjit_jaxpr"
+
+
+def _fleet_counts() -> Dict[str, int]:
+    """Current fleet-program trace counters (empty if controller is
+    not importable — the sentinel must not force heavy imports)."""
+    try:
+        from repro.core import controller
+        return controller.fleet_trace_counts()
+    except Exception:  # jaxlint: disable=JL008
+        # optional signal only: the pjit counter is the primary witness
+        return {}
+
+
+class RetraceSentinel:
+    """Counts new XLA program traces between :meth:`arm` and
+    :meth:`stop` (``arm`` defaults to ``start`` time)."""
+
+    def __init__(self) -> None:
+        self._count = [0]
+        self._original: Optional[Callable] = None
+        self._patched = False
+        self._ever_patched = False
+        self._active = False
+        self._baseline = 0
+        self._baseline_fleet: Dict[str, int] = {}
+        self._armed_explicitly = False
+
+    # -- lifecycle ----------------------------------------------------
+
+    def start(self) -> "RetraceSentinel":
+        if self._active:
+            raise RuntimeError("sentinel already started")
+        self._active = True
+        self._patch()
+        self.arm()
+        self._armed_explicitly = False
+        return self
+
+    def arm(self) -> None:
+        """Snapshot the baseline: traces after this point are failures.
+        Call after warmup compiles; without an explicit call the
+        baseline is :meth:`start` time (strict mode).
+
+        Construct test inputs *before* arming: the counter sees every
+        program trace, including first-time internal ``jnp`` helpers
+        (``jnp.full`` and friends are themselves jitted), so building a
+        fresh device array after ``arm()`` can trip the sentinel even
+        though the swept program never retraced."""
+        if not self._active:
+            raise RuntimeError("sentinel not started")
+        self._baseline = self._count[0]
+        self._baseline_fleet = _fleet_counts()
+        self._armed_explicitly = True
+
+    def stop(self) -> None:
+        self._unpatch()
+        self._active = False
+
+    # -- results ------------------------------------------------------
+
+    def delta(self) -> int:
+        """New traces since the last :meth:`arm`."""
+        return self._count[0] - self._baseline
+
+    def fleet_delta(self) -> Dict[str, int]:
+        now = _fleet_counts()
+        return {k: now[k] - v for k, v in self._baseline_fleet.items()
+                if now.get(k, v) != v}
+
+    def tripped(self) -> bool:
+        return self.delta() > 0 or bool(self.fleet_delta())
+
+    def report(self) -> str:
+        mode = ("armed after warmup" if self._armed_explicitly
+                else "strict (armed at start — use the `zero_retrace` "
+                     "fixture's .arm() after warmup compiles)")
+        parts = [f"zero-retrace sentinel tripped: {self.delta()} new "
+                 f"XLA trace(s) after baseline [{mode}]"]
+        fleet = self.fleet_delta()
+        if fleet:
+            parts.append(f"fleet programs retraced: {fleet}")
+        if not self._ever_patched:
+            parts.append("(pjit hook unavailable in this JAX — counts "
+                         "reflect fleet_trace_counts() only)")
+        return "; ".join(parts)
+
+    # -- patching -----------------------------------------------------
+
+    def _patch(self) -> None:
+        try:
+            from jax._src import linear_util as lu
+            from jax._src import pjit as pjit_lib
+        except ImportError:
+            return
+        original = getattr(pjit_lib, _PJIT_HOOK, None)
+        if original is None:
+            return
+        count = self._count
+
+        @lu.cache
+        def create_pjit_jaxpr_and_count(*args):
+            count[0] += 1
+            return original(*args)
+
+        self._original = original
+        setattr(pjit_lib, _PJIT_HOOK, create_pjit_jaxpr_and_count)
+        self._patched = True
+        self._ever_patched = True
+
+    def _unpatch(self) -> None:
+        if self._patched and self._original is not None:
+            from jax._src import pjit as pjit_lib
+            setattr(pjit_lib, _PJIT_HOOK, self._original)
+            self._patched = False
+            self._original = None

@@ -16,7 +16,7 @@ Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 
 @dataclasses.dataclass(frozen=True)

@@ -55,8 +55,10 @@ def enable_compilation_cache(cache_dir: str) -> str:
     jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
     try:
         jax.config.update("jax_persistent_cache_enable_xla_caches", "all")
-    except (AttributeError, ValueError):
-        pass  # older jax: core cache still works, XLA-internal ones don't
+    except (AttributeError, ValueError):  # jaxlint: disable=JL008
+        # deliberate version-compat fallback: the flag only exists on
+        # newer jax; the core compilation cache works without it
+        pass
     _CACHE_DIR = cache_dir
     return cache_dir
 

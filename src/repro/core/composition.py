@@ -147,8 +147,10 @@ def search_fleet_composition(
     ``candidates`` is ``[N, P]`` node counts over ``platforms`` (see
     :func:`enumerate_candidates`); ``node_cost``/``node_throughput`` are
     per-platform vectors (default 1.0/node each).  The sweep is two
-    compiled programs (one grid sweep, one streaming chunk program) —
-    the candidate batch runs in two equal halves and
+    compiled programs (one grid sweep, one streaming chunk program)
+    whose jit shape key is the flattened fleet shape ``[K, C]`` —
+    node counts enter as *values*, so any candidate batch of the same
+    shape reuses the programs: the batch runs in two equal halves and
     ``retraces_second_half`` witnesses that the second half recompiled
     nothing.
     """

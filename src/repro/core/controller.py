@@ -864,6 +864,13 @@ def fleet_bin_tables(params: char.PlatformParams, cfg: ControllerConfig,
     ``params`` must be stacked (``stack_platform_params``) with leading
     axis P.  DVFS techniques share one masked full-grid sweep; nominal and
     power-gating are closed-form in the platform's nominal watts.
+
+    **Zero-retrace contract.**  The underlying grid-sweep program
+    (``_fleet_dvfs_tables_jit``) is jit-keyed only on the array
+    *shapes* ``[P]`` / ``[R, C, B]`` derived from ``cfg`` and the
+    technique list — platform constants are traced values, so sweeping
+    new accelerators of the same fleet shape never retraces
+    (``fleet_trace_counts()["tables"]`` is the witness).
     """
     m = cfg.n_bins
     pll_watts = pll_standing_watts(cfg)
@@ -1525,6 +1532,13 @@ def compare_all_batched(platforms: Sequence[PlatformSpec],
     Returns ``{platform.name: {technique: Summary}}`` matching the
     per-platform ``compare_all`` summaries (same math, array-parameterized).
     Every platform needs ``params`` (all factory helpers attach them).
+
+    **Zero-retrace contract.**  Both stages run shape-keyed compiled
+    programs (:func:`fleet_bin_tables` + :func:`simulate_fleet`): the
+    jit key is the fleet shape ``[P, T]``, the trace length, and the
+    static config — new platforms and new trace *values* of the same
+    shapes reuse the compiled programs without retracing
+    (``tests/test_fleet.py::test_simulate_fleet_zero_retrace``).
     """
     missing = [p.name for p in platforms if p.params is None]
     if missing:

@@ -47,7 +47,7 @@ byte-compatible.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
+from typing import Dict, NamedTuple, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -222,7 +222,10 @@ def scheduler_values(cfg: SchedulerConfig) -> Array:
     """The scheduler's runtime knobs as a ``[3]`` value vector.
 
     ``[enabled, priority_policy, migration_cost]`` — traced inputs to
-    the chunk program, never part of its jit key.
+    the chunk program, never part of its jit key: the compiled shape
+    is scheduler-independent, so toggling the scheduler on/off or
+    sweeping policies never retraces the stream program
+    (``tests/test_scheduler.py`` zero-retrace witnesses).
     """
     return jnp.asarray([1.0 if cfg.enabled else 0.0,
                         1.0 if cfg.policy == "priority" else 0.0,

@@ -76,7 +76,9 @@ class SyntheticPipeline:
         while not self._stop.is_set():
             try:
                 self._q.put(self._make(), timeout=0.5)
-            except queue.Full:
+            except queue.Full:  # jaxlint: disable=JL008
+                # bounded retry, not a swallow: Full is the queue's
+                # backpressure signal and the loop re-checks _stop
                 continue
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:

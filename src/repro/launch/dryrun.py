@@ -11,11 +11,10 @@ JAX init):  PYTHONPATH=src python -m repro.launch.dryrun [--arch A]
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,7 @@ import numpy as np
 from repro.analysis.hlo_parse import analyze_hlo
 from repro.analysis.roofline import HW_V5E, model_flops_for, roofline_terms
 from repro.configs import SHAPES, get_config, shape_applicable
-from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.base import TrainConfig
 from repro.data.pipeline import make_batch_specs
 from repro.models import common, transformer
 from repro.models.common import ParamDef
@@ -62,7 +61,7 @@ def _ns(layout, rules):
 
 
 def _batch_ns(specs, rules):
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
 
     def one(s):
         axes = ("batch",) + (None,) * (len(s.shape) - 1)

@@ -21,12 +21,12 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AttentionConfig, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models import common
 from repro.models.common import ParamDef, fan_in_def
 from repro.parallel.sharding import shard

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.common import ParamDef, activation, fan_in_def
+from repro.models.common import ParamDef, activation
 from repro.models import ffn as ffn_mod
 from repro.parallel.sharding import shard
 

@@ -13,9 +13,8 @@ leading dense layers are unrolled outside the scan with their own params.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ moments — no separate partitioner.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple, Tuple
 
 import jax

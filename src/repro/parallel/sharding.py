@@ -22,7 +22,6 @@ import dataclasses
 from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisName = Optional[str]

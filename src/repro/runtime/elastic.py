@@ -10,7 +10,7 @@ while keeping the model axis large enough for the arch's weights.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 from jax.sharding import NamedSharding

@@ -16,7 +16,7 @@ re-balance work instead of tripping the eviction heuristic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List
 
 import numpy as np
 

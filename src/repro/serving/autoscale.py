@@ -30,7 +30,6 @@ import numpy as np
 from repro.core import controller as ctl
 from repro.core import predictors as pred_mod
 from repro.core import scheduler as sched_mod
-from repro.core import workload as wl
 from repro.serving.batching import ContinuousBatcher, Request
 
 

@@ -18,7 +18,6 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
-import numpy as np
 
 
 @dataclasses.dataclass

@@ -9,15 +9,13 @@ seq_len-deep cache.  ``prefill`` runs the full forward with
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer
-from repro.serving import kvcache
 
 Array = jax.Array
 

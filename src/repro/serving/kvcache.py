@@ -12,7 +12,7 @@ axis — chosen per arch by ``split_kv_needed``.
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -4,3 +4,13 @@ import sys
 # Tests run on the single real CPU device (the 512-device override is
 # exclusively for launch/dryrun.py, which runs as its own process).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Zero-retrace sentinel: @pytest.mark.zero_retrace + the `zero_retrace`
+# fixture (repro/analysis/jaxlint/pytest_plugin.py).  Hooks are
+# re-exported into this conftest's namespace so pytest collects them
+# (pytest_plugins= is only honored in a rootdir conftest).
+from repro.analysis.jaxlint.pytest_plugin import (  # noqa: E402,F401
+    pytest_configure,
+    pytest_runtest_call,
+    zero_retrace,
+)

@@ -2,9 +2,7 @@
 (fake) mesh layout and verify the sharding rules re-resolve."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import common, transformer

@@ -1,0 +1,546 @@
+"""jaxlint: per-rule positive/negative fixtures, suppression grammar,
+JSON schema, CLI, self-check at HEAD, and the dynamic retrace sentinel.
+
+Each rule gets a seeded-violation fixture (must fire) and a negative
+twin (must stay silent) — the analyzer is pure-AST, so fixtures are
+source strings and never execute.  The sentinel tests DO execute jax:
+one drives the API directly, one proves end-to-end that a deliberately
+value-keyed jit inside a ``@pytest.mark.zero_retrace`` test fails.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import jaxlint
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+PRELUDE = textwrap.dedent("""\
+    import math
+    import time
+    import dataclasses
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    """)
+
+
+def lint(body, filename="fixture.py", **kw):
+    return jaxlint.lint_source(PRELUDE + textwrap.dedent(body),
+                               filename=filename, **kw)
+
+
+def fired(report, rule_id):
+    return [d for d in report.diagnostics if d.rule == rule_id]
+
+
+# ---------------------------------------------------------------------------
+# per-rule positive + negative fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_jl001_tracer_if_fires():
+    rep = lint("""
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """)
+    diags = fired(rep, "JL001")
+    assert diags and "if" in diags[0].message
+    assert diags[0].severity == "error"
+
+
+def test_jl001_static_shape_if_silent():
+    rep = lint("""
+        @jax.jit
+        def f(x):
+            if x.shape[0] > 2:
+                return x
+            return -x
+        """)
+    assert not fired(rep, "JL001")
+
+
+def test_jl001_item_coercion_fires():
+    rep = lint("""
+        @jax.jit
+        def f(x):
+            return x.sum().item()
+        """)
+    assert fired(rep, "JL001")
+
+
+def test_jl002_host_numpy_call_fires():
+    rep = lint("""
+        @jax.jit
+        def f(x):
+            return np.sum(x)
+        """)
+    diags = fired(rep, "JL002")
+    assert diags and "numpy.sum" in diags[0].message
+
+
+def test_jl002_jnp_call_silent():
+    rep = lint("""
+        @jax.jit
+        def f(x):
+            return jnp.sum(x) + math.sqrt(2.0)
+        """)
+    assert not fired(rep, "JL002")
+
+
+def test_jl002_comprehension_over_tracer_fires():
+    rep = lint("""
+        @jax.jit
+        def f(x):
+            return sum(v * 2 for v in x)
+        """)
+    assert fired(rep, "JL002")
+
+
+def test_jl003_unregistered_dataclass_fires():
+    rep = lint("""
+        @dataclasses.dataclass
+        class State:
+            value: jax.Array
+            step: int
+        """)
+    diags = fired(rep, "JL003")
+    assert diags and "State" in diags[0].message
+
+
+def test_jl003_registered_dataclass_silent():
+    rep = lint("""
+        @dataclasses.dataclass
+        class State:
+            value: jax.Array
+            step: int
+
+        jax.tree_util.register_dataclass(
+            State, data_fields=["value"], meta_fields=["step"])
+        """)
+    assert not fired(rep, "JL003")
+
+
+def test_jl003_host_only_dataclass_silent():
+    rep = lint("""
+        @dataclasses.dataclass(frozen=True)
+        class TraceSource:
+            utilization: np.ndarray
+            name: str
+        """)
+    assert not fired(rep, "JL003")
+
+
+def test_jl004_mutable_static_argnums_fires():
+    rep = lint("""
+        def f(x, n):
+            return x * n
+
+        jf = jax.jit(f, static_argnums=[1])
+        """)
+    diags = fired(rep, "JL004")
+    assert diags and diags[0].severity == "warning"
+    assert "hashable" in diags[0].message
+
+
+def test_jl004_tuple_static_argnums_silent():
+    rep = lint("""
+        def f(x, n):
+            return x * n
+
+        jf = jax.jit(f, static_argnums=(1,))
+        """)
+    assert not fired(rep, "JL004")
+
+
+def test_jl004_fstring_of_tracer_fires():
+    rep = lint("""
+        @jax.jit
+        def f(x):
+            label = f"value={x}"
+            return x
+        """)
+    assert fired(rep, "JL004")
+
+
+def test_jl005_impure_time_call_fires():
+    rep = lint("""
+        @jax.jit
+        def f(x):
+            t0 = time.time()
+            return x + t0
+        """)
+    diags = fired(rep, "JL005")
+    assert diags and "time.time" in diags[0].message
+
+
+def test_jl005_host_side_time_silent():
+    rep = lint("""
+        def bench(x):
+            t0 = time.time()
+            return x, time.time() - t0
+        """)
+    assert not fired(rep, "JL005")
+
+
+def test_jl005_global_mutation_fires():
+    rep = lint("""
+        COUNT = 0
+
+        @jax.jit
+        def f(x):
+            global COUNT
+            COUNT += 1
+            return x
+        """)
+    assert fired(rep, "JL005")
+
+
+def test_jl006_densified_broadcast_fires():
+    rep = lint("""
+        def expand(a):
+            return np.broadcast_to(a, (1024, 4096)).copy()
+        """)
+    diags = fired(rep, "JL006")
+    assert diags and "stride-0" in (diags[0].message + diags[0].hint)
+
+
+def test_jl006_view_kept_silent():
+    rep = lint("""
+        def expand(a):
+            return np.broadcast_to(a, (1024, 4096))
+        """)
+    assert not fired(rep, "JL006")
+
+
+def test_jl007_missing_shape_key_docs_fires():
+    rep = lint("""
+        def run_campaign(cfg):
+            return cfg
+        """, filename="repro/core/scenarios.py")
+    diags = fired(rep, "JL007")
+    assert diags and diags[0].severity == "warning"
+
+
+def test_jl007_stale_registry_entry_is_error():
+    rep = lint("""
+        def something_else():
+            return 1
+        """, filename="repro/core/scenarios.py")
+    diags = fired(rep, "JL007")
+    assert diags and diags[0].severity == "error"
+    assert "stale" in diags[0].message
+
+
+def test_jl007_documented_entry_silent():
+    rep = lint('''
+        def run_campaign(cfg):
+            """Run one campaign.
+
+            The jit key is the trace shape ``[P, T]`` only — sweeping
+            configs at fixed shapes must never retrace.
+            """
+            return cfg
+        ''', filename="repro/core/scenarios.py")
+    assert not fired(rep, "JL007")
+
+
+def test_jl007_other_files_silent():
+    rep = lint("""
+        def unrelated():
+            return 0
+        """, filename="repro/core/other.py")
+    assert not fired(rep, "JL007")
+
+
+def test_jl008_bare_except_fires():
+    rep = lint("""
+        def load(path):
+            try:
+                return open(path).read()
+            except:
+                pass
+        """)
+    assert len(fired(rep, "JL008")) >= 1
+
+
+def test_jl008_silent_swallow_fires():
+    rep = lint("""
+        def load(path):
+            try:
+                return open(path).read()
+            except OSError:
+                pass
+        """)
+    assert fired(rep, "JL008")
+
+
+def test_jl008_loud_handler_silent():
+    rep = lint("""
+        def load(path):
+            try:
+                return open(path).read()
+            except OSError as e:
+                raise RuntimeError(f"cannot read {path}") from e
+        """)
+    assert not fired(rep, "JL008")
+
+
+# ---------------------------------------------------------------------------
+# suppression grammar, selection, syntax errors
+# ---------------------------------------------------------------------------
+
+
+def test_inline_suppression_moves_to_suppressed():
+    src = """
+        def load(path):
+            try:
+                return open(path).read()
+            except OSError:  # jaxlint: disable=JL008
+                pass
+        """
+    rep = lint(src)
+    assert not fired(rep, "JL008")
+    assert any(d.rule == "JL008" for d in rep.suppressed)
+
+
+def test_disable_next_line_suppression():
+    rep = lint("""
+        def load(path):
+            try:
+                return open(path).read()
+            # jaxlint: disable-next=JL008
+            except OSError:
+                pass
+        """)
+    assert not fired(rep, "JL008")
+
+
+def test_file_wide_suppression():
+    rep = lint("""
+        # jaxlint: disable-file=JL008
+        def load(a, b):
+            try:
+                return a()
+            except OSError:
+                pass
+            try:
+                return b()
+            except ValueError:
+                pass
+        """)
+    assert not fired(rep, "JL008")
+    assert len(rep.suppressed) == 2
+
+
+def test_select_and_disable():
+    src = """
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return np.sum(x)
+            return x
+        """
+    only_001 = lint(src, select=["JL001"])
+    assert fired(only_001, "JL001") and not fired(only_001, "JL002")
+    no_001 = lint(src, disable=["JL001"])
+    assert not fired(no_001, "JL001") and fired(no_001, "JL002")
+    with pytest.raises(KeyError):
+        lint(src, select=["JL999"])
+
+
+def test_syntax_error_is_diagnostic_not_crash():
+    rep = jaxlint.lint_source("def broken(:\n", filename="bad.py")
+    assert rep.diagnostics[0].rule == "JL000"
+    assert rep.failed("error")
+
+
+# ---------------------------------------------------------------------------
+# report rendering / JSON schema / registry protocol
+# ---------------------------------------------------------------------------
+
+
+def test_json_schema():
+    rep = lint("""
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """)
+    payload = json.loads(rep.render("json"))
+    assert payload["version"] == 1
+    assert payload["tool"] == "jaxlint"
+    assert set(payload) >= {"version", "tool", "files", "suppressed",
+                            "counts", "diagnostics"}
+    diag = payload["diagnostics"][0]
+    assert set(diag) >= {"file", "line", "col", "rule", "severity",
+                         "message"}
+    assert payload["counts"]["error"] >= 1
+
+
+def test_text_render_has_location_and_rule():
+    rep = lint("""
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """)
+    text = rep.render("text")
+    assert "fixture.py:" in text and "JL001" in text
+
+
+def test_rule_registry_protocol():
+    ids = jaxlint.available()
+    assert ids == tuple(sorted(ids))
+    assert {f"JL00{i}" for i in range(1, 9)} <= set(ids)
+    rule = jaxlint.get("JL001")
+    assert rule.name == "tracer-control-flow"
+    with pytest.raises(KeyError):
+        jaxlint.get("JL999")
+    assert len(jaxlint.all_rules()) == len(ids)
+
+
+# ---------------------------------------------------------------------------
+# self-check and CLI
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_clean_at_head():
+    """`scripts/lint.py src/repro --fail-on error` must exit 0 at HEAD;
+    warnings are allowed but errors are not."""
+    rep = jaxlint.lint_paths([os.path.join(REPO, "src", "repro")])
+    assert not rep.errors(), rep.render("text")
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(PRELUDE + textwrap.dedent("""
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """))
+    script = os.path.join(REPO, "scripts", "lint.py")
+    r = subprocess.run(
+        [sys.executable, script, str(bad), "--format", "json"],
+        capture_output=True, text=True)
+    assert r.returncode == 1, r.stdout + r.stderr
+    payload = json.loads(r.stdout)
+    assert payload["counts"]["error"] >= 1
+    ok = subprocess.run(
+        [sys.executable, script, str(bad), "--disable", "JL001"],
+        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    usage = subprocess.run(
+        [sys.executable, script, str(bad), "--select", "NOPE"],
+        capture_output=True, text=True)
+    assert usage.returncode == 2
+
+
+def test_cli_list_rules():
+    script = os.path.join(REPO, "scripts", "lint.py")
+    r = subprocess.run([sys.executable, script, "--list-rules"],
+                       capture_output=True, text=True)
+    assert r.returncode == 0
+    assert "JL001" in r.stdout and "JL008" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# dynamic retrace sentinel
+# ---------------------------------------------------------------------------
+
+
+def test_sentinel_counts_value_keyed_retrace():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxlint.sentinel import RetraceSentinel
+
+    jf = jax.jit(lambda x, scale: x * scale, static_argnums=1)
+    x = jnp.ones(8)
+    s = RetraceSentinel().start()
+    try:
+        jf(x, 2.0)          # warmup compile (allowed: before arm)
+        s.arm()
+        assert s.delta() == 0
+        jf(x, 2.0)          # cached — no new trace
+        assert s.delta() == 0
+        jf(x, 3.0)          # value-keyed static arg — must retrace
+        assert s.delta() >= 1
+        assert s.tripped()
+        assert "hook unavailable" not in s.report()
+    finally:
+        s.stop()
+
+
+@pytest.mark.zero_retrace
+def test_sentinel_marker_negative(zero_retrace):
+    """A marked test whose post-arm work is genuinely shape-stable
+    passes: the sentinel only trips on new traces."""
+    import jax
+    import jax.numpy as jnp
+
+    jf = jax.jit(lambda x: x * 2.0)
+    x = jnp.ones(8)
+    y = jnp.full(8, 3.0, dtype=jnp.float32)  # build inputs before arm
+    jf(x)
+    zero_retrace.arm()
+    jf(y)
+    assert zero_retrace.delta() == 0
+
+
+def test_sentinel_catches_value_keyed_jit_in_marked_test(tmp_path):
+    """End-to-end: a deliberately value-keyed jit inside a
+    ``@pytest.mark.zero_retrace`` test FAILS under the plugin."""
+    (tmp_path / "conftest.py").write_text(textwrap.dedent(f"""\
+        import sys
+        sys.path.insert(0, {os.path.join(REPO, 'src')!r})
+        from repro.analysis.jaxlint.pytest_plugin import (  # noqa: F401
+            pytest_configure, pytest_runtest_call, zero_retrace)
+        """))
+    (tmp_path / "test_leak.py").write_text(textwrap.dedent("""\
+        import jax
+        import jax.numpy as jnp
+        import pytest
+
+        @pytest.mark.zero_retrace
+        def test_value_keyed(zero_retrace):
+            jf = jax.jit(lambda x, s: x * s, static_argnums=1)
+            x = jnp.ones(4)
+            jf(x, 2.0)
+            zero_retrace.arm()
+            jf(x, 3.0)  # new static value -> retrace -> sentinel trips
+        """))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         str(tmp_path / "test_leak.py")],
+        capture_output=True, text=True, env=env, cwd=str(tmp_path))
+    assert r.returncode != 0, r.stdout + r.stderr
+    assert "zero-retrace sentinel tripped" in r.stdout
+
+
+def test_handle_outside_run_phase_raises():
+    """The fixture's late-binding proxy refuses to arm before the
+    sentinel exists (i.e. outside the marked test's call phase)."""
+    from repro.analysis.jaxlint.pytest_plugin import _SentinelHandle
+
+    class FakeNode:
+        pass
+
+    handle = _SentinelHandle(FakeNode())
+    with pytest.raises(RuntimeError, match="outside the sentinel"):
+        handle.arm()

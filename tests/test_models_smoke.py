@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced config, forward + train step +
 decode step on CPU; asserts shapes and finiteness (task deliverable f)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import OptimizerConfig
 from repro.data.pipeline import DataConfig, SyntheticPipeline, _sample

@@ -1,6 +1,5 @@
 """Predictor-layer tests (paper §IV-A, §V): registry, families, scoring."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Tests for the joint (V_core, V_bram) optimizer (paper §III/§V)."""
 
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis "
